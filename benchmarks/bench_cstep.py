@@ -1,0 +1,53 @@
+"""C-step systems benchmarks: throughput of the quantization path
+(weights/second), paper fig. 10's warm-start iteration counts, and the
+kernel-vs-jnp C-step comparison."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core.kmeans import kmeans_fit, kmeans_plus_plus_init, quantile_init
+from repro.kernels import ops as kops
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    for p in (1 << 20, 1 << 23):          # 1M / 8M weights
+        w = jax.random.normal(key, (p,))
+        cb = quantile_init(w, 16)
+
+        fit = jax.jit(lambda w, cb: kmeans_fit(w, cb, iters=5).codebook)
+        us = time_call(fit, w, cb, warmup=1, iters=5)
+        rows.append((f"cstep_kmeans5_P{p}", us,
+                     f"{p / (us * 1e-6) / 1e6:.1f}Mw/s"))
+
+        us = time_call(lambda w, cb: kops.kmeans_assign(w, cb)[1], w, cb,
+                       warmup=1, iters=5)
+        rows.append((f"cstep_kernel_assign_P{p}", us,
+                     f"{p / (us * 1e-6) / 1e6:.1f}Mw/s (interpret mode)"))
+
+        us = time_call(lambda w: kops.fixed_quant(w, "ternary"), w,
+                       warmup=1, iters=5)
+        rows.append((f"cstep_kernel_ternary_P{p}", us,
+                     f"{p / (us * 1e-6) / 1e6:.1f}Mw/s (interpret mode)"))
+
+    # fig. 10: k-means iterations — cold (k-means++) vs warm (previous C step)
+    w = jax.random.normal(key, (1 << 20,))
+    cold = kmeans_fit(w, kmeans_plus_plus_init(key, w, 4), iters=60)
+    w2 = w + 0.003 * jax.random.normal(jax.random.fold_in(key, 1), w.shape)
+    warm = kmeans_fit(w2, cold.codebook, iters=60)
+    rows.append(("cstep_fig10_warmstart", 0.0,
+                 f"cold_iters={int(cold.iters_run)} "
+                 f"warm_iters={int(warm.iters_run)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(map(str, row)))

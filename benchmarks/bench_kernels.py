@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks: Pallas (interpret mode — correctness-grade
+timing only on CPU) vs the jnp reference, plus serving-path byte
+accounting (the roofline story of codebook_matmul)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.kernels import ops, ref
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    m, kd, n, k = 256, 2048, 512, 16
+    x = jax.random.normal(key, (m, kd), jnp.float32)
+    idx = jax.random.randint(key, (kd, n), 0, k).astype(jnp.uint8)
+    cb = jax.random.normal(key, (k,))
+
+    us_ref = time_call(jax.jit(ref.codebook_matmul_ref), x, idx, cb,
+                       warmup=2, iters=5)
+    bytes_bf16 = kd * n * 2
+    bytes_packed = kd * n * 4 // 8 + k * 4      # 4-bit packing for K=16
+    rows.append((
+        "codebook_matmul_ref_jit", us_ref,
+        f"weight_bytes bf16={bytes_bf16} packed={bytes_packed} "
+        f"(x{bytes_bf16 / bytes_packed:.1f} HBM reduction at decode)"))
+
+    us_pal = time_call(lambda *a: ops.codebook_matmul(*a, bm=128, bn=128,
+                                                      bk=512), x, idx, cb,
+                       warmup=1, iters=2)
+    rows.append(("codebook_matmul_pallas_interpret", us_pal,
+                 "interpret-mode (correctness only; TPU target)"))
+
+    p = 1 << 20
+    w = jax.random.normal(key, (p,))
+    cbk = jnp.sort(jax.random.normal(key, (16,)))
+    us = time_call(jax.jit(lambda w, c: ref.kmeans_assign_ref(w, c)[1]),
+                   w, cbk, warmup=2, iters=5)
+    rows.append(("kmeans_assign_ref_jit_1M", us, f"{p/(us*1e-6)/1e6:.0f}Mw/s"))
+    us = time_call(lambda w, c: ops.kmeans_assign(w, c)[1], w, cbk,
+                   warmup=1, iters=2)
+    rows.append(("kmeans_assign_pallas_interpret_1M", us,
+                 "interpret-mode (correctness only; TPU target)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(map(str, row)))

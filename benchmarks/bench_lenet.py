@@ -1,0 +1,94 @@
+"""Paper §5.3 / Figs. 8-9: LeNet300-style classification, K ∈ {2,...,64},
+LC vs DC vs iDC (reduced scale: capacity-tight MLP on the synthetic
+MNIST-like set — same tensor shapes, CPU-sized optimization budget).
+
+Validated paper claims:
+  * large K: DC ≈ iDC ≈ LC (all close to the reference);
+  * small K (1-2 bits): LC ≪ iDC ≪ DC in loss;
+  * compression ratios ρ(K) follow eq. 14.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import mnist_batches, train_reference
+from repro.core import (LCConfig, baselines, compression, default_qspec,
+                        make_scheme, param_counts)
+from repro.data.synthetic import mnist_like
+from repro.models.paper_nets import (classification_error, cross_entropy,
+                                     init_mlp_classifier, mlp_logits)
+from repro.train.trainer import LCTrainer, TrainerConfig
+
+HIDDEN = [784, 8, 10]        # capacity-tight (see tests/test_system.py)
+
+
+def setup():
+    from repro.data.synthetic import mnist_like_split
+    (X, Y), (Xt, Yt) = mnist_like_split(0, 4096, 1024, noise=1.0)
+    params = init_mlp_classifier(jax.random.PRNGKey(0), HIDDEN)
+
+    def loss_fn(p, batch):
+        return cross_entropy(mlp_logits(p, batch[0]), batch[1])
+
+    it = mnist_batches(X, Y, 256)
+    ref, _ = train_reference(loss_fn, params, it, steps=500)
+    return X, Y, Xt, Yt, ref, loss_fn, it
+
+
+def idc(loss_fn, ref, it, scheme, qspec, rounds=15, steps=40):
+    """Han et al. 2015-style trained quantization: retrain → re-quantize."""
+    from repro.train.trainer import init_train_state, make_train_step
+    q, state = baselines.direct_compression(jax.random.PRNGKey(0), ref,
+                                            scheme, qspec)
+    params = q
+    tc = TrainerConfig(lr=0.1, steps_per_l=steps)
+    step = jax.jit(make_train_step(loss_fn, tc))
+    for _ in range(rounds):
+        ts = init_train_state(params, tc)
+        for _ in range(steps):
+            ts, _ = step(ts, next(it))
+        q, state = baselines.idc_round(ts.params, state, scheme, qspec)
+        params = q
+    return q
+
+
+def run():
+    X, Y, Xt, Yt, ref, loss_fn, it = setup()
+    ref_loss = float(loss_fn(ref, (X, Y)))
+    ref_err = float(classification_error(mlp_logits(ref, Xt), Yt))
+    qspec = default_qspec(ref)
+    p1, p0 = param_counts(ref, qspec)
+
+    rows = []
+    for k in (2, 4, 16, 64):
+        t0 = time.perf_counter()
+        scheme = make_scheme(f"adaptive:{k}")
+        dc, _ = baselines.direct_compression(jax.random.PRNGKey(0), ref,
+                                             scheme, qspec)
+        dc_loss = float(loss_fn(dc, (X, Y)))
+        idc_q = idc(loss_fn, ref, it, scheme, qspec)
+        idc_loss = float(loss_fn(idc_q, (X, Y)))
+        tr = LCTrainer(loss_fn, scheme, qspec,
+                       LCConfig(mu0=1e-3, mu_growth=1.25, num_lc_iters=30),
+                       TrainerConfig(lr=0.1, steps_per_l=40))
+        st = tr.init(jax.random.PRNGKey(0), ref)
+        st = tr.run(st, it)
+        lc = tr.finalize(st)
+        lc_loss = float(loss_fn(lc, (X, Y)))
+        lc_err = float(classification_error(mlp_logits(lc, Xt), Yt))
+        rho = compression.compression_ratio(p1, p0, k, 2 * k)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"lenet_fig9_K{k}", us,
+            f"rho={rho:.1f} ref={ref_loss:.4f}/{ref_err:.3f} "
+            f"dc={dc_loss:.4f} idc={idc_loss:.4f} lc={lc_loss:.4f} "
+            f"lc_test_err={lc_err:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(map(str, row)))

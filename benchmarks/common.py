@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: timing, CSV rows, tiny training loops."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Row = Tuple[str, float, str]      # (name, us_per_call, derived)
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time per call in µs (blocks on jax outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def mnist_batches(X, Y, batch: int, seed: int = 1) -> Iterator:
+    i = 0
+    while True:
+        k = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        idx = jax.random.randint(k, (batch,), 0, X.shape[0])
+        yield (X[idx], Y[idx])
+        i += 1
+
+
+def train_reference(loss_fn, params, batches, steps: int, lr: float = 0.1):
+    from repro.train.trainer import (TrainerConfig, init_train_state,
+                                     make_train_step)
+    tc = TrainerConfig(lr=lr, steps_per_l=40)
+    state = init_train_state(params, tc)
+    step = jax.jit(make_train_step(loss_fn, tc))
+    for _ in range(steps):
+        state, m = step(state, next(batches))
+    return state.params, float(m["loss"])

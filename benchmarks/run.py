@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure + systems benches.
+
+Prints ``name,us_per_call,derived`` CSV.  Select with --only <substring>.
+"""
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_superres",    # §5.2 / fig. 7
+    "benchmarks.bench_lenet",       # §5.3 / figs. 8-9
+    "benchmarks.bench_binarize",    # table 2
+    "benchmarks.bench_tradeoff",    # §5.1 / fig. 6
+    "benchmarks.bench_deepnet",     # §5.4
+    "benchmarks.bench_al_vs_qp",    # §5 AL-vs-QP + §4.2 fn.2 prune+quant
+    "benchmarks.bench_cstep",       # systems: C-step throughput, fig. 10
+    "benchmarks.bench_kernels",     # systems: kernel micro
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run modules whose name contains this substring")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:                          # noqa: BLE001
+            failures += 1
+            print(f"{modname},ERROR,{traceback.format_exc(limit=3)!r}",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Serve a quantized LM with batched requests through the packed
+codebook representation (the memory-roofline payoff of the paper).
+
+    PYTHONPATH=src python examples/serve_quantized.py [--requests 4]
+
+Pipeline: train-tiny → LC-quantize (K=16 ⇒ 4-bit weights) → pack indices
+→ batched prefill + decode loop where the MLP matmuls run through the
+codebook-matmul kernel path (interpret mode on CPU; Mosaic on TPU).
+Prints per-request generated tokens + the serving byte accounting.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.core import (LCConfig, compression, default_qspec, make_scheme)
+from repro.data.pipeline import LMTokenPipeline
+from repro.kernels import ops as kops
+from repro.models.transformer import (decode_step, init_params, loss_fn,
+                                      prefill)
+from repro.train.trainer import LCTrainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=12)
+    ap.add_argument("--k", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = reduce_config(get_config("qwen1.5-0.5b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pipe = LMTokenPipeline(seed=0, batch=8, seq_len=64, vocab=cfg.vocab)
+
+    def loss(p, batch):
+        return loss_fn(p, cfg, batch)
+
+    print("training + LC-quantizing a tiny LM (K =", args.k, ")...")
+    qspec = default_qspec(params)
+    tr = LCTrainer(loss, make_scheme(f"adaptive:{args.k}"), qspec,
+                   LCConfig(mu0=1e-2, mu_growth=1.5, num_lc_iters=5),
+                   TrainerConfig(optimizer="adamw", lr=2e-3, steps_per_l=15))
+    st = tr.init(jax.random.PRNGKey(1), params)
+    st = tr.run(st, iter(pipe))
+    qparams = tr.finalize(st)
+
+    # --- pack one layer and demonstrate the serving kernel -----------------
+    w = np.asarray(qparams["stacks"][0]["pos0"]["mlp"]["w_in"][0])
+    cb = np.unique(w)
+    assign = np.argmin((w[..., None] - cb) ** 2, axis=-1)
+    words, lanes = compression.pack_indices(assign, len(cb))
+    idx = compression.unpack_indices(jnp.asarray(words), assign.size,
+                                     len(cb)).reshape(assign.shape)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, w.shape[0]))
+    y_kernel = kops.codebook_matmul(x, idx.astype(jnp.uint8),
+                                    jnp.asarray(cb), bm=32, bn=32, bk=32)
+    y_dense = x @ w
+    err = float(jnp.max(jnp.abs(y_kernel - y_dense)))
+    bits = compression.bits_per_index(len(cb))
+    print(f"codebook-matmul kernel |Δ| = {err:.2e}; weight bytes "
+          f"{w.size * 4}B f32 → {words.size * 4}B packed "
+          f"({bits} bit/weight, ×{w.size * 4 / (words.size * 4):.1f} smaller)")
+
+    # --- batched serving loop ----------------------------------------------
+    print(f"serving {args.requests} batched requests...")
+    prompts = pipe.next()["tokens"][:args.requests, :args.prompt_len]
+    capacity = args.prompt_len + args.gen_len
+    logits, caches = prefill(qparams, cfg, prompts, last_logits_only=True)
+
+    def grow(leaf):
+        if leaf.ndim >= 3 and leaf.shape[2] == args.prompt_len:
+            pad = [(0, 0)] * leaf.ndim
+            pad[2] = (0, args.gen_len)
+            return jnp.pad(leaf, pad)
+        return leaf
+
+    caches = jax.tree_util.tree_map(grow, caches)
+    step = jax.jit(lambda c, t, p: decode_step(qparams, cfg, c, t, p))
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    generated = [tok]
+    for t in range(args.gen_len - 1):
+        logits, caches = step(caches, tok,
+                              jnp.asarray(args.prompt_len + t, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    gen = np.asarray(jnp.concatenate(generated, axis=1))
+    for r in range(args.requests):
+        print(f"  req{r}: prompt={np.asarray(prompts[r])[:8]}... "
+              f"generated={gen[r]}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper §5.2 walkthrough: quantizing linear regression with a clustered,
+non-Gaussian weight distribution (the controlled setting with exact
+closed-form L steps).
+
+    PYTHONPATH=src python examples/superres_regression.py [--k 2]
+
+Reproduces the fig. 7 findings: DC = iDC (both stall at iteration 1),
+LC reaches a much lower loss, and the learned centroids sit where the
+loss wants them — not where the reference weight histogram peaks.
+"""
+import argparse
+
+import numpy as np
+
+from benchmarks.bench_superres import run_case
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k", type=int, default=2)
+    args = ap.parse_args()
+
+    r = run_case(args.k)
+    print(f"K = {args.k}")
+    print(f"  reference loss : {r['ref_loss']:.4f}")
+    print(f"  DC   loss      : {r['dc_loss']:.4f}")
+    print(f"  iDC  loss      : {r['idc_loss']:.4f}  "
+          f"(stalled = {r['idc_stalled']} — matches the paper)")
+    print(f"  LC   loss      : {r['lc_loss']:.4f}  "
+          f"({r['dc_loss'] / r['lc_loss']:.2f}x better than DC)")
+    print(f"  LC centroids   : {np.round(r['centroids'], 4)}")
+    print(f"  k-means iters  : first C step = {r['kmeans_iters_first']}, "
+          f"late C steps = {r['kmeans_iters_late']} (fig. 10 warm start)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``reduce_config(cfg)``.
+
+Full configs are exercised only by the dry-run (ShapeDtypeStructs, no
+allocation); smoke tests instantiate the reduced versions on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.models.transformer import (
+    MLASpec, ModelConfig, MoESpec, RGLRUSpec, SSMSpec, StackSpec)
+
+from repro.configs import (          # noqa: E402
+    deepseek_v2_lite_16b,
+    gemma2_9b,
+    granite_moe_1b_a400m,
+    internvl2_26b,
+    mamba2_1p3b,
+    minicpm_2b,
+    musicgen_large,
+    nemotron_4_340b,
+    qwen1p5_0p5b,
+    recurrentgemma_2b,
+)
+
+_REGISTRY = {
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b.config,
+    "granite-moe-1b-a400m": granite_moe_1b_a400m.config,
+    "internvl2-26b": internvl2_26b.config,
+    "mamba2-1.3b": mamba2_1p3b.config,
+    "nemotron-4-340b": nemotron_4_340b.config,
+    "qwen1.5-0.5b": qwen1p5_0p5b.config,
+    "gemma2-9b": gemma2_9b.config,
+    "minicpm-2b": minicpm_2b.config,
+    "musicgen-large": musicgen_large.config,
+    "recurrentgemma-2b": recurrentgemma_2b.config,
+}
+
+
+def list_archs() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; choose from {list_archs()}")
+    return _REGISTRY[arch]()
+
+
+def reduce_config(cfg: ModelConfig) -> ModelConfig:
+    """Same-family tiny config for CPU smoke tests: small width, few
+    groups, tiny vocab — the *structure* (patterns, mixer kinds, MoE/MLA/
+    SSM machinery) is preserved exactly."""
+    heads = 4
+    kv = min(cfg.n_kv, heads) if cfg.n_kv < cfg.n_heads else heads
+    kv = max(1, kv if cfg.n_kv > 1 else 1)
+    upd: Dict = dict(
+        d_model=64,
+        n_heads=heads,
+        n_kv=kv,
+        head_dim=16,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab=512,
+        stacks=tuple(
+            dataclasses.replace(s, groups=min(s.groups, 2))
+            for s in cfg.stacks),
+        q_chunk=32,
+        kv_chunk=32,
+        remat=False,
+    )
+    if cfg.window is not None:
+        upd["window"] = 64
+    if cfg.emb_scale is not None:
+        upd["emb_scale"] = 8.0
+    if cfg.query_scale is not None:
+        upd["query_scale"] = 16.0 ** -0.5
+    if cfg.moe is not None:
+        # capacity_factor ≥ E/top_k ⇒ per-row capacity ≥ S: no token drops,
+        # so teacher-forced decode matches the full forward exactly
+        # (capacity dropping is a train-time approximation; serving uses
+        # drop-free capacity)
+        upd["moe"] = MoESpec(n_experts=4, top_k=2,
+                             n_shared=min(1, cfg.moe.n_shared),
+                             d_ff_expert=32, capacity_factor=4.0)
+    if cfg.mla is not None:
+        upd["mla"] = MLASpec(kv_lora=32, rope_dim=8, nope_dim=16, v_dim=16)
+    if cfg.ssm is not None:
+        upd["ssm"] = SSMSpec(d_inner=128, head_p=16, state_n=16, conv_w=4,
+                             chunk=16)
+    if cfg.rglru is not None:
+        upd["rglru"] = RGLRUSpec(width=64, conv_w=4)
+    if cfg.vlm_patches:
+        upd["vlm_patches"] = 8
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **upd)

@@ -1,0 +1,32 @@
+"""gemma2-9b [dense] — 42L d_model=3584 16H (GQA kv=8, head 256)
+d_ff=14336, local(4096)/global alternating attention, attn softcap 50,
+final logit softcap 30, post-norms, vocab=256000.  [arXiv:2408.00118]
+"""
+import math
+
+from repro.models.transformer import LayerKind, ModelConfig, StackSpec
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-9b",
+        family="dense",
+        d_model=3584,
+        n_heads=16,
+        n_kv=8,
+        head_dim=256,
+        d_ff=14336,
+        vocab=256000,
+        stacks=(StackSpec(pattern=(LayerKind("gqa_local", "dense"),
+                                   LayerKind("gqa", "dense")), groups=21),),
+        mlp_act="gelu",
+        gated_mlp=True,
+        tie_embeddings=True,
+        window=4096,
+        attn_softcap=50.0,
+        final_softcap=30.0,
+        query_scale=256.0 ** -0.5,      # query_pre_attn_scalar = head_dim
+        post_norms=True,
+        emb_scale=math.sqrt(3584.0),
+        rope_theta=10000.0,
+    )

@@ -1,0 +1,25 @@
+"""granite-moe-1b-a400m [moe] — 24L d_model=1024 16H (GQA kv=8) expert
+d_ff=512, 32 experts top-8, vocab=49155.
+[hf:ibm-granite/granite-3.0-1b-a400m-base]
+"""
+from repro.models.transformer import (
+    LayerKind, ModelConfig, MoESpec, uniform_stack)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-1b-a400m",
+        family="moe",
+        d_model=1024,
+        n_heads=16,
+        n_kv=8,
+        head_dim=64,
+        d_ff=512,
+        vocab=49155,
+        stacks=uniform_stack(LayerKind("gqa", "moe"), 24),
+        mlp_act="silu",
+        gated_mlp=True,
+        tie_embeddings=True,
+        moe=MoESpec(n_experts=32, top_k=8, n_shared=0, d_ff_expert=512),
+        rope_theta=10000.0,
+    )

@@ -1,0 +1,24 @@
+"""internvl2-26b [vlm] — InternLM2-20B language backbone: 48L d_model=6144
+48H (GQA kv=8) d_ff=16384 vocab=92553.  [arXiv:2404.16821; hf]
+The InternViT-6B frontend is a STUB: ``input_specs`` supplies 256
+precomputed patch embeddings per sample (DESIGN.md §5).
+"""
+from repro.models.transformer import LayerKind, ModelConfig, uniform_stack
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-26b",
+        family="vlm",
+        d_model=6144,
+        n_heads=48,
+        n_kv=8,
+        head_dim=128,
+        d_ff=16384,
+        vocab=92553,
+        stacks=uniform_stack(LayerKind("gqa", "dense"), 48),
+        mlp_act="silu",
+        gated_mlp=True,
+        vlm_patches=256,
+        rope_theta=1000000.0,
+    )

@@ -1,0 +1,21 @@
+"""mamba2-1.3b [ssm] — 48L d_model=2048, attention-free SSD blocks,
+ssm_state=128, vocab=50280.  [arXiv:2405.21060]
+Sub-quadratic ⇒ runs the long_500k cell (O(1) decode state).
+"""
+from repro.models.transformer import (
+    LayerKind, ModelConfig, SSMSpec, uniform_stack)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-1.3b",
+        family="ssm",
+        d_model=2048,
+        n_heads=1, n_kv=1, head_dim=1,       # unused (attention-free)
+        d_ff=0,
+        vocab=50280,
+        stacks=uniform_stack(LayerKind("ssm", "none"), 48),
+        ssm=SSMSpec(d_inner=4096, head_p=64, state_n=128, conv_w=4, chunk=256),
+        tie_embeddings=True,
+        subquadratic=True,
+    )

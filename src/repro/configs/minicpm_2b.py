@@ -1,0 +1,25 @@
+"""minicpm-2b [dense] — 40L d_model=2304 36H (kv=36) d_ff=5760, llama-like
+with μP-style embedding scaling, tied embeddings, vocab=122753.
+Trained with a WSD schedule (provided in repro/optim/schedules.py).
+[arXiv:2404.06395]
+"""
+from repro.models.transformer import LayerKind, ModelConfig, uniform_stack
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm-2b",
+        family="dense",
+        d_model=2304,
+        n_heads=36,
+        n_kv=36,
+        head_dim=64,
+        d_ff=5760,
+        vocab=122753,
+        stacks=uniform_stack(LayerKind("gqa", "dense"), 40),
+        mlp_act="silu",
+        gated_mlp=True,
+        tie_embeddings=True,
+        emb_scale=12.0,
+        rope_theta=10000.0,
+    )

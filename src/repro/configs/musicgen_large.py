@@ -1,0 +1,24 @@
+"""musicgen-large [audio] — 48L d_model=2048 32H (kv=32) d_ff=8192,
+decoder-only over EnCodec tokens, vocab=2048, sinusoidal positions,
+non-gated GELU MLP.  [arXiv:2306.05284]
+The EnCodec frontend is a STUB — inputs are token ids over the EnCodec
+codebook (the backbone's native interface per the assignment).
+"""
+from repro.models.transformer import LayerKind, ModelConfig, uniform_stack
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large",
+        family="audio",
+        d_model=2048,
+        n_heads=32,
+        n_kv=32,
+        head_dim=64,
+        d_ff=8192,
+        vocab=2048,
+        stacks=uniform_stack(LayerKind("gqa", "dense"), 48),
+        mlp_act="gelu",
+        gated_mlp=False,
+        pos_embed="sinusoidal",
+    )

@@ -1,0 +1,23 @@
+"""nemotron-4-340b [dense] — 96L d_model=18432 96H (GQA kv=8, head 192)
+d_ff=73728, squared-ReLU MLP (non-gated), vocab=256000.
+[arXiv:2402.16819]
+The 340B scale case: uses ZeRO-style state sharding in the launcher.
+"""
+from repro.models.transformer import LayerKind, ModelConfig, uniform_stack
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-4-340b",
+        family="dense",
+        d_model=18432,
+        n_heads=96,
+        n_kv=8,
+        head_dim=192,
+        d_ff=73728,
+        vocab=256000,
+        stacks=uniform_stack(LayerKind("gqa", "dense"), 96),
+        mlp_act="sqrelu",
+        gated_mlp=False,
+        rope_theta=10000.0,
+    )

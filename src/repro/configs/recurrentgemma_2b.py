@@ -1,0 +1,36 @@
+"""recurrentgemma-2b [hybrid] — 26L d_model=2560, RG-LRU + local attention
+(window 2048, MQA kv=1) at 2:1 ratio, d_ff=7680, vocab=256000.
+[arXiv:2402.19427 (Griffin)]
+26 = 8×(rec,rec,attn) + (rec,rec) — two stacks.  Sub-quadratic ⇒ runs
+long_500k (RG-LRU state + 2048-token ring buffer).
+"""
+import math
+
+from repro.models.transformer import (
+    LayerKind, ModelConfig, RGLRUSpec, StackSpec)
+
+
+def config() -> ModelConfig:
+    rec = LayerKind("rglru", "dense")
+    att = LayerKind("gqa_local", "dense")
+    return ModelConfig(
+        name="recurrentgemma-2b",
+        family="hybrid",
+        d_model=2560,
+        n_heads=10,
+        n_kv=1,
+        head_dim=256,
+        d_ff=7680,
+        vocab=256000,
+        stacks=(
+            StackSpec(pattern=(rec, rec, att), groups=8),
+            StackSpec(pattern=(rec, rec), groups=1),
+        ),
+        mlp_act="gelu",
+        gated_mlp=True,
+        tie_embeddings=True,
+        window=2048,
+        emb_scale=math.sqrt(2560.0),
+        rglru=RGLRUSpec(width=2560, conv_w=4),
+        subquadratic=True,
+    )

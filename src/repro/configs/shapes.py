@@ -1,0 +1,77 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input specs.
+
+Four cells per LM architecture (40 cells total):
+  train_4k     seq 4096   × global_batch 256   → train_step
+  prefill_32k  seq 32768  × global_batch 32    → prefill
+  decode_32k   seq 32768  × global_batch 128   → serve_step (1 new token)
+  long_500k    seq 524288 × global_batch 1     → serve_step; requires
+               sub-quadratic decode state (SSM / hybrid only — see
+               DESIGN.md §5 for the documented skips).
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — no device
+allocation; the dry-run lowers/compiles against them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig, init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+CELLS = (
+    ShapeCell("train_4k", 4096, 256, "train"),
+    ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    ShapeCell("decode_32k", 32768, 128, "decode"),
+    ShapeCell("long_500k", 524288, 1, "decode"),
+)
+
+CELLS_BY_NAME = {c.name: c for c in CELLS}
+
+
+def applicable(cfg: ModelConfig, cell: ShapeCell) -> Optional[str]:
+    """None if the (arch, cell) pair runs; else the documented skip reason."""
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return "skipped (full attention — O(S) KV decode state at 524k)"
+    return None
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = cell.global_batch, cell.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+    if cell.kind == "train":
+        spec = {"tokens": tok, "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.vlm_patches:
+            spec["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vlm_patches, cfg.d_model), dtype)
+        return spec
+
+    if cell.kind == "prefill":
+        spec = {"tokens": tok}
+        if cfg.vlm_patches:
+            spec["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vlm_patches, cfg.d_model), dtype)
+        return spec
+
+    # decode: one new token against a cache of capacity seq_len
+    caches = jax.eval_shape(
+        lambda: init_cache(cfg, b, s, dtype))
+    return {
+        "tokens_t": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "caches": caches,
+    }

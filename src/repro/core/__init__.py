@@ -1,0 +1,32 @@
+"""LC-Quant core: the paper's contribution as a composable JAX module.
+
+Public API::
+
+    from repro.core import (
+        LCConfig, LCState, lc_init, c_step, penalty_grad, penalty_value,
+        feasibility_gap, finalize, default_qspec, make_scheme,
+    )
+"""
+from repro.core.lc import (          # noqa: F401
+    LCConfig,
+    LCState,
+    LeafSpec,
+    c_step,
+    codebook_entry_count,
+    default_qspec,
+    feasibility_gap,
+    finalize,
+    lc_init,
+    param_counts,
+    penalty_grad,
+    penalty_value,
+    quant_leaf_paths,
+)
+from repro.core.schemes import (     # noqa: F401
+    AdaptiveScheme,
+    FixedScheme,
+    ScaledFixedScheme,
+    Scheme,
+    make_scheme,
+)
+from repro.core import baselines, compression, kmeans, quant_ops  # noqa: F401

@@ -1,0 +1,91 @@
+"""Baselines the paper compares against (§2, §5).
+
+* **DC** — direct compression (Gong et al. 2015): quantize a trained
+  reference net once, loss-blind.  Equals the LC path at μ→0⁺ (§3.4).
+* **iDC** — iterated DC (Han et al. 2015 "trained quantization"): alternate
+  (train from the quantized point) / (re-quantize), *without* the penalty
+  term or multipliers.  The paper shows it oscillates and does not converge
+  to a feasible local optimum.
+* **BinaryConnect** (Courbariaux et al. 2015): straight-through binarization
+  — forward/gradients at sign(w) (optionally scaled), update applied to the
+  real-valued weights, weights clipped to [-1, 1].
+
+All three reuse the same scheme/C-step machinery as LC, so benchmark
+comparisons differ only in the *algorithm*, exactly as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lc as lc_mod
+from repro.core.schemes import Scheme
+
+Array = jax.Array
+PyTree = Any
+
+
+def direct_compression(
+    key: Array, params: PyTree, scheme: Scheme, qspec: PyTree,
+) -> Tuple[PyTree, lc_mod.LCState]:
+    """DC: Θ = Π(w̄), w_DC = Δ(Θ).  Returns (quantized params, state)."""
+    cfg = lc_mod.LCConfig()
+    state = lc_mod.lc_init(key, params, scheme, qspec, cfg)
+    return lc_mod.finalize(params, state, qspec), state
+
+
+def idc_round(
+    params: PyTree, state: lc_mod.LCState, scheme: Scheme, qspec: PyTree,
+) -> Tuple[PyTree, lc_mod.LCState]:
+    """One iDC compression round: re-quantize current weights (no λ, no μ).
+
+    The caller alternates: ``params = train(start_from=quantized)`` then
+    ``quantized, state = idc_round(params, ...)``.
+    """
+    cfg = lc_mod.LCConfig(use_lagrangian=False, mu0=0.0, mu_growth=1.0)
+    # iDC quantizes w directly (no shift): reuse c_step with λ=0, μ=0.
+    zero_lam = jax.tree_util.tree_map(jnp.zeros_like, state.lam)
+    st = state._replace(lam=zero_lam, mu=jnp.asarray(0.0, jnp.float32))
+    st = lc_mod.c_step(params, st, scheme, qspec, cfg)
+    return lc_mod.finalize(params, st, qspec), st
+
+
+# ---------------------------------------------------------------------------
+# BinaryConnect
+# ---------------------------------------------------------------------------
+
+def binaryconnect_forward_params(
+    params: PyTree, qspec: PyTree, scale: bool = False,
+) -> PyTree:
+    """Binarize quantized leaves for the forward pass (straight-through)."""
+    def q(path, w):
+        b = jnp.where(w >= 0, 1.0, -1.0).astype(w.dtype)
+        if scale:
+            b = b * jnp.mean(jnp.abs(w))
+        return b
+
+    return lc_mod._map_quant(q, qspec, params)
+
+
+def binaryconnect_clip(params: PyTree, qspec: PyTree) -> PyTree:
+    """Clip real-valued weights to [-1, 1] after the update (BC recipe)."""
+    return lc_mod._map_quant(
+        lambda path, w: jnp.clip(w, -1.0, 1.0), qspec, params)
+
+
+def make_binaryconnect_grad(
+    loss_fn: Callable[[PyTree, Any], Array], qspec: PyTree,
+    scale: bool = False,
+) -> Callable[[PyTree, Any], Tuple[Array, PyTree]]:
+    """Gradient evaluated at binarized weights, applied to real weights.
+
+    ``loss_fn(params, batch) -> scalar``.  Returns ``(loss, grads)`` — the
+    straight-through estimator: g = ∂L/∂w |_{w=sign(w)}.
+    """
+    def val_grad(params: PyTree, batch: Any):
+        bparams = binaryconnect_forward_params(params, qspec, scale=scale)
+        return jax.value_and_grad(loss_fn)(bparams, batch)
+
+    return val_grad

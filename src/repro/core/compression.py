@@ -1,0 +1,72 @@
+"""Compression accounting (paper eq. 14) and index bit-packing.
+
+ratio ρ(K) = #bits(reference) / #bits(quantized)
+  #bits(reference) = (P1 + P0)·b
+  #bits(quantized) = P1·⌈log2 K⌉ + (P0 + E)·b
+where P1 = quantized (multiplicative) weights, P0 = non-quantized params
+(biases etc.), E = stored float entries (codebook size K for adaptive, 1
+for a learned scale, 0 for fixed values), b = float bit width (32 unless
+stated — the paper is explicit that b must be quoted).
+
+Bit-packing stores ⌈log2 K⌉-bit assignment indices in uint32 words, the
+on-disk / serving format consumed by the codebook-matmul kernel.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def bits_per_index(k: int) -> int:
+    return max(1, math.ceil(math.log2(k)))
+
+
+def compression_ratio(
+    p1: int, p0: int, k: int, codebook_entries: int, b: int = 32
+) -> float:
+    """Paper eq. (14).  ``codebook_entries``: floats stored with the model."""
+    ref_bits = (p1 + p0) * b
+    quant_bits = p1 * bits_per_index(k) + (p0 + codebook_entries) * b
+    return ref_bits / quant_bits
+
+
+def pack_indices(assign: np.ndarray, k: int) -> Tuple[np.ndarray, int]:
+    """Pack integer assignments (< k) into a uint32 word stream.
+
+    Indices are laid out little-endian within each word at a fixed
+    ``bits_per_index(k)`` width (no straddling: ``floor(32/bits)`` lanes per
+    word) so the unpack is a shift+mask — TPU/VPU friendly.
+    Returns (words, lanes_per_word).
+    """
+    bits = bits_per_index(k)
+    lanes = 32 // bits
+    flat = np.asarray(assign, dtype=np.uint32).ravel()
+    pad = (-flat.size) % lanes
+    flat = np.pad(flat, (0, pad))
+    flat = flat.reshape(-1, lanes)
+    words = np.zeros(flat.shape[0], dtype=np.uint32)
+    for lane in range(lanes):
+        words |= flat[:, lane] << np.uint32(lane * bits)
+    return words, lanes
+
+
+def unpack_indices(words: Array, n: int, k: int) -> Array:
+    """Inverse of :func:`pack_indices` (jnp; usable on device)."""
+    bits = bits_per_index(k)
+    lanes = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    shifts = jnp.arange(lanes, dtype=jnp.uint32) * bits
+    out = (words[:, None] >> shifts[None, :]) & mask
+    return out.ravel()[:n].astype(jnp.int32)
+
+
+def quantized_bytes(p1: int, p0: int, k: int, codebook_entries: int,
+                    b: int = 32) -> int:
+    """Absolute storage in bytes of the packed model (for bench tables)."""
+    return (p1 * bits_per_index(k) + (p0 + codebook_entries) * b + 7) // 8

@@ -1,0 +1,141 @@
+"""Exact 1-D k-means for adaptive-codebook quantization (paper §4.1).
+
+The C step with an adaptive codebook is the quadratic-distortion problem
+(eq. 9), solved by k-means.  For scalar weights each iteration is exact in
+O(P log K): sort the K centroids once, then a weight belongs to centroid k
+iff it falls between the midpoints of (c_{k-1},c_k) and (c_k,c_{k+1})
+— a ``searchsorted`` over K-1 midpoints (paper §4.1, eq. 11 geometry).
+
+Supports:
+* weighted points (used by the histogram-compressed distributed C step);
+* warm start (LC C steps re-use the previous codebook: paper Fig. 10 shows
+  ~1 iteration suffices after the first);
+* k-means++ initialization for the first C step (paper §3.3);
+* an optional mesh ``axis_name`` — inside ``shard_map`` the per-centroid
+  statistics are psum'd, giving the exact *global* k-means update while the
+  weight shards never leave their chips (2·K floats of traffic/iteration).
+* vmapped per-group fits via ``jax.vmap`` (stacked-layer codebooks).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant_ops import fixed_codebook_assign
+
+Array = jax.Array
+
+
+class KMeansResult(NamedTuple):
+    codebook: Array      # [K] ascending
+    assignments: Array   # same shape as input points, int32
+    distortion: Array    # scalar Σ n_i (w_i - c_{κ(i)})²
+    iters_run: Array     # scalar int32 — iterations until assignment fixpoint
+
+
+def kmeans_plus_plus_init(key: Array, w: Array, k: int) -> Array:
+    """k-means++ seeding (Arthur & Vassilvitskii 2007) on scalar points."""
+    flat = w.ravel()
+    p = flat.size
+    k0, key = jax.random.split(key)
+    first = flat[jax.random.randint(k0, (), 0, p)]
+    cents = jnp.full((k,), first, flat.dtype)
+    d2 = (flat - first) ** 2
+
+    def body(i, carry):
+        cents, d2, key = carry
+        key, sub = jax.random.split(key)
+        # D² sampling; degenerate (all-zero) distances fall back to uniform.
+        total = jnp.sum(d2)
+        probs = jnp.where(total > 0, d2 / total, jnp.full_like(d2, 1.0 / p))
+        idx = jax.random.choice(sub, p, p=probs)
+        c_new = flat[idx]
+        cents = cents.at[i].set(c_new)
+        d2 = jnp.minimum(d2, (flat - c_new) ** 2)
+        return cents, d2, key
+
+    cents, _, _ = jax.lax.fori_loop(1, k, body, (cents, d2, key))
+    return jnp.sort(cents)
+
+
+def quantile_init(w: Array, k: int) -> Array:
+    """Deterministic quantile seeding — the distributed-friendly default.
+
+    Exact on a single device; under sharding callers pass a (histogram-)
+    approximated quantile vector instead.
+    """
+    qs = (jnp.arange(k, dtype=jnp.float32) + 0.5) / k
+    return jnp.quantile(w.ravel().astype(jnp.float32), qs).astype(w.dtype)
+
+
+def kmeans_fit(
+    w: Array,
+    init_codebook: Array,
+    iters: int = 30,
+    point_weights: Optional[Array] = None,
+    axis_name: Optional[Union[str, Sequence[str]]] = None,
+) -> KMeansResult:
+    """Run ≤ ``iters`` exact 1-D k-means iterations from ``init_codebook``.
+
+    Iterations after the assignment fixpoint are no-ops (pure-jnp loops must
+    have static trip counts); ``iters_run`` reports when the fixpoint was
+    reached — the paper's Fig. 10 warm-start claim is measured with it.
+
+    Empty clusters keep their previous centroid (can re-acquire points later).
+    """
+    flat = w.ravel()
+    nw = jnp.ones_like(flat) if point_weights is None else point_weights.ravel()
+    k = init_codebook.shape[0]
+
+    def psum(x):
+        return jax.lax.psum(x, axis_name) if axis_name is not None else x
+
+    def step(carry, _):
+        c, prev_assign, done, n_run = carry
+        assign = fixed_codebook_assign(flat, c)
+        sums = psum(jax.ops.segment_sum(flat * nw, assign, num_segments=k))
+        counts = psum(jax.ops.segment_sum(nw, assign, num_segments=k))
+        c_new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1), c)
+        c_new = jnp.sort(c_new)
+        # Convergence must be GLOBAL: a shard whose local assignments are
+        # already stable must keep iterating with the others, else the
+        # replicated codebooks diverge across shards.
+        changed = jnp.any(assign != prev_assign).astype(jnp.float32)
+        changed = psum(changed) > 0
+        # Freeze once converged so iters_run is the true fixpoint index.
+        c_out = jnp.where(done, c, c_new)
+        n_run = n_run + jnp.where(done, 0, 1)
+        done = done | ~changed
+        return (c_out, assign, done, n_run), None
+
+    c0 = jnp.sort(init_codebook.astype(flat.dtype))
+    init = (c0, jnp.full(flat.shape, -1, jnp.int32), jnp.asarray(False), jnp.asarray(0, jnp.int32))
+    (c, _, _, n_run), _ = jax.lax.scan(step, init, None, length=iters)
+
+    assign = fixed_codebook_assign(flat, c)
+    resid = flat - c[assign]
+    dist = psum(jnp.sum(nw * resid * resid))
+    return KMeansResult(c, assign.reshape(w.shape), dist, n_run)
+
+
+def kmeans_quantize(
+    w: Array,
+    codebook: Array,
+) -> Array:
+    """Δ(Θ): decompress — map each weight to its assigned codebook entry."""
+    c = jnp.sort(codebook)
+    return c[fixed_codebook_assign(w, c)].astype(w.dtype)
+
+
+# Per-group (stacked-layer) variants: codebooks [G, K], weights [G, ...].
+kmeans_fit_grouped = jax.vmap(
+    lambda w, c, iters: kmeans_fit(w, c, iters=iters),
+    in_axes=(0, 0, None),
+)
+
+
+def quantile_init_grouped(w: Array, k: int) -> Array:
+    """[G, ...] weights → [G, K] quantile codebooks."""
+    return jax.vmap(lambda x: quantile_init(x, k))(w)

@@ -1,0 +1,285 @@
+"""The LC (learning-compression) algorithm driver (paper §3).
+
+Augmented-Lagrangian alternation over a parameter pytree:
+
+    L step:  w   ← argmin_w  L(w) + μ/2 ||w - w_C - λ/μ||²      (SGD)
+    C step:  Θ   ← Π(w - λ/μ)   per quantization group           (exact)
+             w_C ← Δ(Θ)
+    λ ← λ - μ (w - w_C)
+    μ ← μ₀ aʲ
+
+This module owns the *algorithm state* and the pytree plumbing; the L step
+itself lives in :mod:`repro.train.trainer` (it is ordinary training with
+:func:`penalty_grad` added to the loss gradient — that separation is the
+paper's central point: the data-dependent part never sees the codebooks).
+
+Representation
+--------------
+* ``w_c`` / ``lam`` are full pytrees congruent with ``params``: on leaves
+  that are *not* quantized they hold the raw weight / zeros and are masked
+  out of every computation (keeps tree_map structure trivial and makes the
+  whole state jit/pjit-shardable with the same sharding rules as params).
+* ``theta`` is a flat ``{leaf-path: scheme-state}`` dict — scheme states
+  (codebooks/scales) have different shapes per leaf, so they do not live
+  inside the param tree.
+* ``grouped`` leaves carry a leading stacked-layer axis G and get
+  **per-layer codebooks** via ``vmap`` (paper §5.3: one codebook/layer).
+
+Biases, norms, router logits, recurrence gates are excluded by the default
+policy (paper §5: only multiplicative weights are quantized).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schemes import Scheme
+
+Array = jax.Array
+PyTree = Any
+
+# Param-name patterns never quantized (dynamics/precision-sensitive, tiny).
+DEFAULT_EXCLUDE = re.compile(
+    r"(bias|scale|norm|router|gate_logit|a_log|a_param|dt_|conv1d|embed_pos)",
+    re.IGNORECASE,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    quantize: bool
+    grouped: bool = False   # leading axis = per-layer codebook groups
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, LeafSpec)
+
+
+@dataclasses.dataclass(frozen=True)
+class LCConfig:
+    mu0: float = 1e-3
+    mu_growth: float = 1.1          # μ_j = μ0 · growth^j (paper §3.3)
+    num_lc_iters: int = 30
+    inner_alternations: int = 1     # (L,C) alternations per μ (see c_step)
+    tol: float = 1e-6               # stop when RMS(w - w_C) < tol
+    use_lagrangian: bool = True     # False → quadratic-penalty method (λ≡0)
+
+
+class LCState(NamedTuple):
+    w_c: PyTree        # Δ(Θ); raw weights on unquantized leaves (masked)
+    lam: PyTree        # Lagrange multipliers; zeros on unquantized leaves
+    theta: Dict[str, Any]   # leaf-path → scheme state (codebook/scale)
+    mu: Array          # current penalty weight
+    lc_iter: Array     # outer iteration j
+
+
+# ---------------------------------------------------------------------------
+# QuantSpec construction
+# ---------------------------------------------------------------------------
+
+def default_qspec(
+    params: PyTree,
+    exclude: re.Pattern = DEFAULT_EXCLUDE,
+    grouped_min_ndim: int = 3,
+) -> PyTree:
+    """Quantize every leaf with ndim ≥ 2 whose path avoids ``exclude``.
+
+    Leaves with ndim ≥ ``grouped_min_ndim`` are assumed to be stacked-layer
+    tensors ([G, ...]) and get per-layer codebooks.
+    """
+    def make(path, leaf):
+        name = jax.tree_util.keystr(path)
+        if leaf.ndim < 2 or exclude.search(name):
+            return LeafSpec(quantize=False)
+        return LeafSpec(quantize=True, grouped=leaf.ndim >= grouped_min_ndim)
+
+    return jax.tree_util.tree_map_with_path(make, params)
+
+
+def quant_leaf_paths(qspec: PyTree) -> List[str]:
+    """Stable ordered list of quantized-leaf path strings (theta keys)."""
+    out: List[str] = []
+
+    def visit(path, spec):
+        if spec.quantize:
+            out.append(jax.tree_util.keystr(path))
+        return spec
+
+    jax.tree_util.tree_map_with_path(visit, qspec, is_leaf=_is_spec)
+    return out
+
+
+def _map_quant(fn: Callable, qspec: PyTree, params: PyTree, *rest: PyTree,
+               default: Callable = lambda path, w, *r: w) -> PyTree:
+    """tree_map over paths; ``fn(path, spec, w, *rest)`` on quantized leaves,
+    ``default`` elsewhere.  All trees congruent with ``params``."""
+    def go(path, spec, w, *r):
+        if spec.quantize:
+            return fn(jax.tree_util.keystr(path), w, *r)
+        return default(jax.tree_util.keystr(path), w, *r)
+
+    return jax.tree_util.tree_map_with_path(go, qspec, params, *rest,
+                                            is_leaf=_is_spec)
+
+
+def _grouped_lookup(qspec: PyTree) -> Dict[str, bool]:
+    table: Dict[str, bool] = {}
+
+    def visit(path, spec):
+        table[jax.tree_util.keystr(path)] = spec.grouped
+        return spec
+
+    jax.tree_util.tree_map_with_path(visit, qspec, is_leaf=_is_spec)
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Algorithm steps
+# ---------------------------------------------------------------------------
+
+def lc_init(
+    key: Array, params: PyTree, scheme: Scheme, qspec: PyTree,
+    config: LCConfig,
+) -> LCState:
+    """Initialize at the direct-compression point (μ→0⁺, λ=0): Θ = Π(w̄)."""
+    grouped = _grouped_lookup(qspec)
+    paths = quant_leaf_paths(qspec)
+    keys = dict(zip(paths, jax.random.split(jax.random.fold_in(key, 0),
+                                            max(1, len(paths)))))
+    theta: Dict[str, Any] = {}
+
+    def init_leaf(path, w):
+        k = keys[path]
+        if grouped[path]:
+            th = jax.vmap(scheme.init)(jax.random.split(k, w.shape[0]), w)
+            q, th = jax.vmap(lambda wi, ti: scheme.c_step(wi, ti, first=True))(w, th)
+        else:
+            th = scheme.init(k, w)
+            q, th = scheme.c_step(w, th, first=True)
+        theta[path] = th
+        return q.astype(w.dtype)
+
+    w_c = _map_quant(init_leaf, qspec, params)
+    lam = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return LCState(w_c=w_c, lam=lam, theta=theta,
+                   mu=jnp.asarray(config.mu0, jnp.float32),
+                   lc_iter=jnp.asarray(0, jnp.int32))
+
+
+def c_step(
+    params: PyTree, state: LCState, scheme: Scheme, qspec: PyTree,
+    config: LCConfig, advance_mu: bool = True,
+) -> LCState:
+    """One C step + multiplier + μ update (paper figs. 2/3/4 loop body).
+
+    ``advance_mu=False`` holds μ constant — used for inner (L,C)
+    alternations per μ value.  Theorem 5.1 of Part I requires optimizing the
+    penalty function "accurately enough for each μ"; a single alternation
+    per μ (the paper's pseudocode) under an aggressive μ schedule freezes
+    the path early.  Our toy KKT study (tests/test_lc_algorithm.py)
+    shows 2–3 inner alternations recover the loss-optimal codebook where
+    one alternation lands measurably off-stationary.
+    """
+    mu = state.mu
+    grouped = _grouped_lookup(qspec)
+    new_theta: Dict[str, Any] = {}
+
+    def do_c(path, w, lam):
+        ws = w - lam / jnp.maximum(mu, 1e-30)     # w - λ/μ (λ=0 ⇒ just w)
+        th = state.theta[path]
+        if grouped[path]:
+            q, th = jax.vmap(lambda wi, ti: scheme.c_step(wi, ti, first=False))(ws, th)
+        else:
+            q, th = scheme.c_step(ws, th, first=False)
+        new_theta[path] = th
+        return q.astype(w.dtype)
+
+    w_c = _map_quant(do_c, qspec, params, state.lam)
+
+    if config.use_lagrangian:
+        lam = _map_quant(
+            lambda path, lam, w, q: lam - mu * (w - q),
+            qspec, state.lam, params, w_c,
+            default=lambda path, lam, w, q: lam)
+    else:
+        lam = state.lam
+
+    return LCState(
+        w_c=w_c, lam=lam, theta=new_theta,
+        mu=mu * config.mu_growth if advance_mu else mu,
+        lc_iter=state.lc_iter + 1,
+    )
+
+
+def penalty_grad(params: PyTree, state: LCState, qspec: PyTree) -> PyTree:
+    """∇_w of μ/2||w - w_C - λ/μ||² = μ(w - w_C) - λ.
+
+    Elementwise on each shard — adds **zero** communication to the L step.
+    Returns a pytree congruent with ``params``, zeros on unquantized leaves.
+    """
+    return _map_quant(
+        lambda path, w, q, lam: state.mu * (w - q) - lam,
+        qspec, params, state.w_c, state.lam,
+        default=lambda path, w, q, lam: jnp.zeros_like(w))
+
+
+def penalty_value(params: PyTree, state: LCState, qspec: PyTree) -> Array:
+    """μ/2 ||w - w_C - λ/μ||² (for logging the true L-step objective)."""
+    mu = jnp.maximum(state.mu, 1e-30)
+    sq = _map_quant(
+        lambda path, w, q, lam: jnp.vdot(w - q - lam / mu, w - q - lam / mu),
+        qspec, params, state.w_c, state.lam,
+        default=lambda path, w, q, lam: jnp.zeros((), w.dtype))
+    return 0.5 * state.mu * sum(jax.tree_util.tree_leaves(sq))
+
+
+def feasibility_gap(params: PyTree, state: LCState, qspec: PyTree) -> Array:
+    """RMS of (w - w_C) over quantized elements — the stopping criterion."""
+    sq = _map_quant(
+        lambda path, w, q: jnp.vdot(w - q, w - q),
+        qspec, params, state.w_c,
+        default=lambda path, w, q: jnp.zeros((), jnp.float32))
+    p1, _ = param_counts(params, qspec)
+    total = sum(jax.tree_util.tree_leaves(sq))
+    return jnp.sqrt(total / max(p1, 1))
+
+
+def finalize(params: PyTree, state: LCState, qspec: PyTree) -> PyTree:
+    """Return the feasible (quantized) model: quantized leaves ← Δ(Θ)."""
+    return _map_quant(lambda path, w, q: q, qspec, params, state.w_c,
+                      default=lambda path, w, q: w)
+
+
+def param_counts(params: PyTree, qspec: PyTree) -> Tuple[int, int]:
+    """(P1, P0): quantized vs non-quantized element counts (for eq. 14)."""
+    p1 = p0 = 0
+    flat_spec = jax.tree_util.tree_leaves(qspec, is_leaf=_is_spec)
+    flat_w = jax.tree_util.tree_leaves(params)
+    for spec, w in zip(flat_spec, flat_w):
+        if spec.quantize:
+            p1 += w.size
+        else:
+            p0 += w.size
+    return p1, p0
+
+
+def codebook_entry_count(state: LCState, scheme: Scheme) -> int:
+    """Total stored float entries across per-group codebooks (for eq. 14)."""
+    n = 0
+    for th in state.theta.values():
+        first = next(iter(th.values()))
+        groups = first.shape[0] if first.ndim > 0 and scheme.codebook_entries else 1
+        # grouped states are vmapped: leading dim = G; scalar states → 1.
+        if first.ndim == 0:
+            groups = 1
+        elif scheme.codebook_entries <= 1:
+            groups = first.shape[0] if first.ndim >= 1 else 1
+        else:   # adaptive: codebook is [K] or [G, K]
+            cb = th["codebook"]
+            groups = cb.shape[0] if cb.ndim == 2 else 1
+        n += groups * scheme.codebook_entries
+    return n

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: elementwise fixed-codebook quantization operators.
+
+Tiled VMEM application of the paper's closed-form quantizers (fig. 5 /
+Theorems A.1): binary sign, ternary threshold, powers-of-two exponent
+rounding.  Scale-solving variants (Thms A.2/A.3) are reductions solved in
+repro.core.quant_ops / repro.dist.cstep; given the scale ``a`` this kernel
+applies them too (pass ``scale=a``).
+
+Mostly VPU work — included because the C step streams *every* weight in
+the model through exactly this op each LC iteration, so on TPU it should
+run fused at HBM bandwidth rather than as a chain of XLA elementwise ops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R, TILE_C = 8, 1024
+MODES = ("binary", "ternary", "pow2")
+
+
+def _kernel(w_ref, o_ref, *, mode: str, pow2_c: int, scale: float):
+    w = w_ref[...].astype(jnp.float32) / scale
+    sgn = jnp.where(w >= 0, 1.0, -1.0)
+    aw = jnp.abs(w)
+    if mode == "binary":
+        q = sgn
+    elif mode == "ternary":
+        q = sgn * (aw >= 0.5).astype(jnp.float32)
+    else:  # pow2 (Theorem A.1)
+        safe = jnp.where(aw > 0, aw, 1.0)
+        f = -jnp.log2(safe)
+        f = jnp.where(aw > 0, f, jnp.inf)
+        mid = jnp.floor(f + jnp.log2(1.5))
+        alpha = jnp.where(
+            f > pow2_c + 1, 0.0,
+            jnp.where(f <= 0.0, 1.0,
+                      jnp.where(f > pow2_c, 2.0 ** (-pow2_c),
+                                jnp.exp2(-mid))))
+        q = sgn * alpha
+    o_ref[...] = (q * scale).astype(o_ref.dtype)
+
+
+def fixed_quant_pallas(w: jax.Array, mode: str, *, pow2_c: int = 4,
+                       scale: float = 1.0, interpret: bool = False
+                       ) -> jax.Array:
+    """Quantize ``w`` (any shape) with a fixed codebook; returns same shape."""
+    assert mode in MODES, mode
+    shape = w.shape
+    flat = w.reshape(-1)
+    p = flat.shape[0]
+    cols = TILE_R * TILE_C
+    pad = (-p) % cols
+    wp = jnp.pad(flat, (0, pad)).reshape(-1, TILE_C)
+    rows = wp.shape[0]
+    grid = (rows // TILE_R,)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, mode=mode, pow2_c=pow2_c, scale=scale),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_R, TILE_C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_R, TILE_C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(wp.shape, w.dtype),
+        interpret=interpret,
+    )(wp)
+    return out.reshape(-1)[:p].reshape(shape)

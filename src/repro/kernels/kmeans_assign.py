@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fused 1-D k-means assignment + per-centroid stats.
+
+The C step's hot loop is, for every weight shard, one pass of
+  assign_i = argmin_k (w_i - c_k)²;  sums_k = Σ_{i∈k} w_i;  counts_k = |k|.
+
+TPU adaptation (DESIGN §4.1): no scatter/atomics — each grid step loads a
+[1, TILE] weight tile into VMEM, forms the [TILE, K] distance matrix
+(K ≤ 256 ⇒ ≤ 1 MiB fp32, comfortably VMEM-resident), reduces it to
+one-hot partial sums with a VPU reduction, and accumulates into the [1, K]
+output block that every grid step maps to (TPU grids are sequential ⇒
+deterministic accumulation, initialized at step 0 via ``pl.when``).
+
+Tail handling without scalar plumbing: the wrapper zero-pads P to a TILE
+multiple; padded lanes deterministically assign to the centroid nearest 0,
+so the wrapper subtracts ``pad`` from that centroid's count (their weight
+contribution is exactly 0).  Assignments for padded lanes are sliced off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 1024        # 8 sublanes × 128 lanes
+
+
+def _kernel(w_ref, c_ref, assign_ref, sums_ref, counts_ref, *, k: int):
+    i = pl.program_id(0)
+    w = w_ref[0, :]                                   # [TILE]
+    c = c_ref[0, :]                                   # [K]
+    d = w[:, None] - c[None, :]
+    d = d * d                                         # [TILE, K]
+    assign = jnp.argmin(d, axis=1).astype(jnp.int32)  # [TILE]
+    assign_ref[0, :] = assign
+
+    onehot = (assign[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (TILE, k), 1)
+              ).astype(jnp.float32)                   # [TILE, K]
+    part_sums = jnp.sum(onehot * w[:, None].astype(jnp.float32), axis=0)
+    part_counts = jnp.sum(onehot, axis=0)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[0, :] = jnp.zeros((k,), jnp.float32)
+        counts_ref[0, :] = jnp.zeros((k,), jnp.float32)
+
+    sums_ref[0, :] += part_sums
+    counts_ref[0, :] += part_counts
+
+
+def kmeans_assign_pallas(w: jax.Array, codebook: jax.Array,
+                         interpret: bool = False):
+    """w: [P] float; codebook: [K] float (need not be sorted).
+
+    Returns (assign [P] int32, sums [K] f32, counts [K] f32): per-centroid
+    Σw and cardinality — exactly the inputs of the k-means centroid step
+    (and of the distributed psum variant in repro/dist/cstep.py).
+    """
+    p = w.shape[0]
+    k = codebook.shape[0]
+    pad = (-p) % TILE
+    wp = jnp.pad(w.astype(jnp.float32), (0, pad)).reshape(-1, TILE)
+    tiles = wp.shape[0]
+    cb = codebook.astype(jnp.float32)
+
+    assign, sums, counts = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tiles, TILE), jnp.int32),
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(wp, cb.reshape(1, k))
+
+    sums, counts = sums[0], counts[0]
+    if pad:
+        # padded zeros land on the centroid nearest 0 — undo their counts
+        zero_idx = jnp.argmin(cb * cb)
+        counts = counts.at[zero_idx].add(-float(pad))
+    return assign.reshape(-1)[:p], sums, counts

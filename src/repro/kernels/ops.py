@@ -1,0 +1,66 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the
+kernel body executes in Python for correctness validation; on TPU the same
+call sites compile to Mosaic.  ``interpret=None`` → auto-detect backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.codebook_matmul import codebook_matmul_pallas
+from repro.kernels.fixed_quant import fixed_quant_pallas
+from repro.kernels.kmeans_assign import kmeans_assign_pallas
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _kmeans_assign_jit(w, codebook, interpret):
+    return kmeans_assign_pallas(w, codebook, interpret=interpret)
+
+
+def kmeans_assign(w: jax.Array, codebook: jax.Array,
+                  interpret: Optional[bool] = None
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused assignment + per-centroid (Σw, count). See kmeans_assign.py."""
+    return _kmeans_assign_jit(w.reshape(-1), codebook,
+                              _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def _codebook_matmul_jit(x, idx, codebook, bm, bn, bk, interpret):
+    return codebook_matmul_pallas(x, idx, codebook, bm=bm, bn=bn, bk=bk,
+                                  interpret=interpret)
+
+
+def codebook_matmul(x: jax.Array, idx: jax.Array, codebook: jax.Array,
+                    *, bm: int = 128, bn: int = 128, bk: int = 512,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """y = x · codebook[idx] without materializing float weights in HBM."""
+    return _codebook_matmul_jit(x, idx, codebook, bm, bn, bk,
+                                _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "pow2_c", "scale", "interpret"))
+def _fixed_quant_jit(w, mode, pow2_c, scale, interpret):
+    return fixed_quant_pallas(w, mode, pow2_c=pow2_c, scale=scale,
+                              interpret=interpret)
+
+
+def fixed_quant(w: jax.Array, mode: str, *, pow2_c: int = 4,
+                scale: float = 1.0,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Tiled fixed-codebook quantizer (binary | ternary | pow2)."""
+    return _fixed_quant_jit(w, mode, pow2_c, float(scale),
+                            _auto_interpret(interpret))

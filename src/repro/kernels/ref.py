@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant_ops
+
+
+def kmeans_assign_ref(w: jax.Array, codebook: jax.Array):
+    """Reference for kernels.kmeans_assign: brute-force argmin + segment sums.
+
+    Note: argmin tie-breaking (lowest index) matches the kernel.
+    """
+    flat = w.reshape(-1).astype(jnp.float32)
+    c = codebook.astype(jnp.float32)
+    d = (flat[:, None] - c[None, :]) ** 2
+    assign = jnp.argmin(d, axis=1).astype(jnp.int32)
+    sums = jax.ops.segment_sum(flat, assign, num_segments=c.shape[0])
+    counts = jax.ops.segment_sum(jnp.ones_like(flat), assign,
+                                 num_segments=c.shape[0])
+    return assign, sums, counts
+
+
+def codebook_matmul_ref(x: jax.Array, idx: jax.Array, codebook: jax.Array):
+    """Reference for kernels.codebook_matmul: dequantize fully, then dot."""
+    w = codebook.astype(jnp.float32)[idx.astype(jnp.int32)]
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def fixed_quant_ref(w: jax.Array, mode: str, pow2_c: int = 4,
+                    scale: float = 1.0):
+    """Reference for kernels.fixed_quant via repro.core.quant_ops."""
+    ws = w.astype(jnp.float32) / scale
+    if mode == "binary":
+        q = quant_ops.binarize(ws)
+    elif mode == "ternary":
+        q = quant_ops.ternarize(ws)
+    else:
+        q = quant_ops.pow2_quantize(ws, pow2_c)
+    return (q * scale).astype(w.dtype)

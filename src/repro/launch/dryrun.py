@@ -1,0 +1,386 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the realistic step program —
+  train:   L-step train step (loss + LC quadratic-penalty gradient + SGD
+           momentum update; the paper's technique is part of the program)
+  prefill: full-sequence forward emitting KV/state caches
+  decode:  one-token serve_step against a seq_len cache
+— with production shardings, runs ``jit(...).lower().compile()`` on the
+16×16 (or 2×16×16) mesh of host devices, and records:
+
+  * memory_analysis()       (bytes/device — proves it fits)
+  * cost_analysis()         (per-device HLO FLOPs / bytes)
+  * per-chip collective bytes parsed from the optimized HLO
+    (repro.launch.hlo_analysis — while-loop trip counts included)
+  * roofline terms (repro.launch.roofline)
+
+Results land in experiments/dryrun/<arch>__<cell>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run/§Roofline.  Cached: existing JSONs are skipped
+unless --force.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-0.5b --cell train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.configs.shapes import CELLS, CELLS_BY_NAME, applicable, input_specs
+from repro.dist import sharding as shard_rules
+from repro.launch import hlo_analysis, roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import sharding_ctx
+from repro.models import transformer as tfm
+
+# archs needing ZeRO-style (data-axis) param sharding to fit HBM
+ZERO_ARCHS = {"nemotron-4-340b", "internvl2-26b"}
+
+DTYPE = jnp.bfloat16
+
+
+def _mask_qspec(params_shapes):
+    """Quantization mask (which leaves carry penalty terms)."""
+    from repro.core.lc import default_qspec
+    return default_qspec(params_shapes)
+
+
+def make_train_step_dp8(cfg, mesh):
+    """Pure-DP train step with int8-compressed gradient all-reduce.
+
+    shard_map over every mesh axis: params replicated per rank, batch
+    sharded; grads sync via repro.dist.cstep.compressed_psum (shared-scale
+    int8 payload — the paper's codebook-with-scale idea applied to the
+    collective).  Wire bytes: 1 B/grad value vs 2 B bf16 / 4 B f32.
+    """
+    import functools
+    from jax.experimental.shard_map import shard_map
+    from repro.dist.cstep import compressed_psum
+
+    axes = tuple(mesh.axis_names)
+    nshards = mesh.size
+
+    def train_step(params, mom, w_c, lam, mu, batch):
+        def loss(p):
+            return tfm.loss_fn(p, cfg, batch)
+
+        lval, g = jax.value_and_grad(loss)(params)
+        g = jax.tree_util.tree_map(
+            lambda x: (compressed_psum(x.astype(jnp.float32), axes)
+                       / nshards).astype(x.dtype) if x.ndim else x, g)
+        lval = jax.lax.pmean(lval, axes)
+
+        qspec = _mask_qspec(params)
+        g = jax.tree_util.tree_map_with_path(
+            lambda path, spec, gi, w, qc, lm:
+                (gi.astype(jnp.float32) + mu * (w - qc).astype(jnp.float32)
+                 - lm.astype(jnp.float32)).astype(gi.dtype)
+                if spec.quantize else gi,
+            qspec, g, params, w_c, lam,
+            is_leaf=lambda x: hasattr(x, "quantize"))
+
+        lr = jnp.minimum(jnp.asarray(0.05, jnp.float32),
+                         1.0 / jnp.maximum(mu, 1e-30))
+        new_mom = jax.tree_util.tree_map(
+            lambda m, gi: (0.95 * m.astype(jnp.float32)
+                           + gi.astype(jnp.float32)).astype(m.dtype), mom, g)
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32)
+                          - lr * m.astype(jnp.float32)).astype(p.dtype),
+            params, new_mom)
+        return new_params, new_mom, lval
+
+    def rep_specs(tree):
+        return jax.tree_util.tree_map(lambda _: jax.sharding.PartitionSpec(),
+                                      tree)
+
+    def wrapped(params, mom, w_c, lam, mu, batch):
+        bspec = jax.tree_util.tree_map(
+            lambda leaf: jax.sharding.PartitionSpec(
+                axes, *([None] * (leaf.ndim - 1))), batch)
+        fn = shard_map(
+            train_step, mesh=mesh,
+            in_specs=(rep_specs(params), rep_specs(mom), rep_specs(w_c),
+                      rep_specs(lam), jax.sharding.PartitionSpec(), bspec),
+            out_specs=(rep_specs(params), rep_specs(mom),
+                       jax.sharding.PartitionSpec()),
+            check_rep=False)
+        return fn(params, mom, w_c, lam, mu, batch)
+
+    return wrapped
+
+
+def make_train_step(cfg):
+    """L-step train step: CE loss + LC penalty grad + SGD momentum."""
+    def train_step(params, mom, w_c, lam, mu, batch):
+        def loss(p):
+            return tfm.loss_fn(p, cfg, batch)
+
+        lval, g = jax.value_and_grad(loss)(params)
+        qspec = _mask_qspec(params)
+
+        def add_penalty(path, spec, gi, w, qc, lm):
+            if spec.quantize:
+                return (gi.astype(jnp.float32) + mu * (w - qc).astype(jnp.float32)
+                        - lm.astype(jnp.float32)).astype(gi.dtype)
+            return gi
+
+        g = jax.tree_util.tree_map_with_path(
+            lambda path, spec, gi, w, qc, lm: add_penalty(path, spec, gi, w, qc, lm),
+            qspec, g, params, w_c, lam,
+            is_leaf=lambda x: hasattr(x, "quantize"))
+
+        lr = jnp.minimum(jnp.asarray(0.05, jnp.float32), 1.0 / jnp.maximum(mu, 1e-30))
+        new_mom = jax.tree_util.tree_map(
+            lambda m, gi: (0.95 * m.astype(jnp.float32)
+                           + gi.astype(jnp.float32)).astype(m.dtype), mom, g)
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32)
+                          - lr * m.astype(jnp.float32)).astype(p.dtype),
+            params, new_mom)
+        return new_params, new_mom, lval
+
+    return train_step
+
+
+def _quantize_param_shapes(params_sh):
+    """Replace dense MLP weight ShapeDtypeStructs with the packed LC
+    serving layout: uint8 assignment indices + a [16] bf16 codebook per
+    stacked group (K=16 ⇒ 4-bit information; stored at byte granularity
+    here, 2× under the bit-packed deploy format)."""
+    def visit(d):
+        if isinstance(d, dict):
+            out = {}
+            for k, v in d.items():
+                if k in ("w_in", "w_gate", "w_out") and hasattr(v, "shape") \
+                        and v.ndim >= 2:
+                    out[k + "_idx"] = jax.ShapeDtypeStruct(v.shape, jnp.uint8)
+                    out[k + "_cb"] = jax.ShapeDtypeStruct(
+                        (v.shape[0], 16) if v.ndim == 3 else (16,), DTYPE)
+                else:
+                    out[k] = visit(v)
+            return out
+        if isinstance(d, tuple):
+            return tuple(visit(x) for x in d)
+        return d
+
+    return visit(params_sh)
+
+
+def build_cell(arch: str, cell_name: str, mesh, zero: bool,
+               policy_mode: str = "tp"):
+    """Returns (fn, arg_shapes, in_shardings, out_shardings)."""
+    cfg = get_config(arch)
+    cell = CELLS_BY_NAME[cell_name]
+    skip = applicable(cfg, cell)
+    if skip:
+        return None, skip, None, None
+
+    params_sh = jax.eval_shape(
+        lambda k: tfm.init_params(k, cfg, DTYPE),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    if policy_mode.endswith("_quant"):
+        # LC-quantized serving: MLP weights → uint8 idx + [16] codebook
+        policy_mode = policy_mode[:-6]
+        params_sh = _quantize_param_shapes(params_sh)
+    if policy_mode in ("dp", "dp8"):
+        # pure data parallelism: params replicated, batch over every axis
+        p_shard = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), params_sh)
+    else:
+        p_shard = shard_rules.param_shardings(
+            params_sh, mesh, zero=zero,
+            zero_cols=policy_mode == "tp_zcols")
+    specs = input_specs(cfg, cell, DTYPE)
+
+    def bshard(leaf):
+        axes = shard_rules.batch_axes(mesh)
+        if policy_mode in ("dp", "dp8"):
+            axes = axes + ("model",)
+        nshard = 1
+        for a in axes:
+            nshard *= mesh.shape[a]
+        if leaf.ndim == 0 or leaf.shape[0] % max(nshard, 1):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(axes, *([None] * (leaf.ndim - 1))))
+
+    if cell.kind == "train":
+        fn = (make_train_step_dp8(cfg, mesh) if policy_mode == "dp8"
+              else make_train_step(cfg))
+        batch = {k: v for k, v in specs.items()}
+        args = (params_sh, params_sh, params_sh, params_sh,
+                jax.ShapeDtypeStruct((), jnp.float32), batch)
+        in_sh = (p_shard, p_shard, p_shard, p_shard,
+                 NamedSharding(mesh, P()),
+                 jax.tree_util.tree_map(bshard, batch))
+        out_sh = (p_shard, p_shard, NamedSharding(mesh, P()))
+        return (fn, args, in_sh, out_sh)
+
+    if cell.kind == "prefill":
+        def fn(params, batch):
+            return tfm.prefill(params, cfg, batch["tokens"],
+                               batch.get("patch_embeds"),
+                               last_logits_only=True)
+        batch = {k: v for k, v in specs.items()}
+        args = (params_sh, batch)
+        cache_sh = jax.eval_shape(
+            lambda p, b: tfm.prefill(p, cfg, b["tokens"],
+                                     b.get("patch_embeds"),
+                                     last_logits_only=True),
+            params_sh, batch)[1]
+        in_sh = (p_shard, jax.tree_util.tree_map(bshard, batch))
+        out_sh = (bshard(jax.ShapeDtypeStruct(
+            (cell.global_batch, 1, cfg.vocab), jnp.float32)),
+            shard_rules.cache_shardings(cache_sh, mesh))
+        return (fn, args, in_sh, out_sh)
+
+    # decode
+    def fn(params, caches, tokens_t, pos):
+        return tfm.decode_step(params, cfg, caches, tokens_t, pos)
+
+    caches = specs["caches"]
+    args = (params_sh, caches, specs["tokens_t"], specs["pos"])
+    c_shard = shard_rules.cache_shardings(caches, mesh)
+    in_sh = (p_shard, c_shard, bshard(specs["tokens_t"]),
+             NamedSharding(mesh, P()))
+    logits_sh = bshard(jax.ShapeDtypeStruct(
+        (cell.global_batch, 1, cfg.vocab), jnp.float32))
+    out_sh = (logits_sh, c_shard)
+    return (fn, args, in_sh, out_sh)
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool, out_dir: str,
+             force: bool = False, label: str = "baseline",
+             policy_mode: str = "tp") -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{cell_name}__{mesh_name}"
+    if label != "baseline":
+        tag += f"__{label}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    zero = arch in ZERO_ARCHS
+    record = {"arch": arch, "cell": cell_name, "mesh": mesh_name,
+              "zero": zero, "label": label, "chips": mesh.size,
+              "policy": policy_mode}
+    t0 = time.time()
+    try:
+        # dp8 runs the whole step inside shard_map: constraints must be off
+        base_mode = policy_mode[:-6] if policy_mode.endswith("_quant") \
+            else policy_mode
+        act_mode = {"dp8": "none", "tp_zcols": "tp2d"}.get(base_mode,
+                                                           base_mode)
+        policy = sharding_ctx.Policy(mesh, mode=act_mode)
+        sharding_ctx.set_policy(policy)
+        built, *rest = build_cell(arch, cell_name, mesh, zero, policy_mode)
+        if built is None:
+            record["status"] = "skipped"
+            record["reason"] = rest[0]
+        else:
+            fn, args, in_sh, out_sh = built, *rest
+            with mesh:
+                jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+                lowered = jitted.lower(*args)
+                t_lower = time.time()
+                compiled = lowered.compile()
+                t_compile = time.time()
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            text = compiled.as_text()
+            hlo = hlo_analysis.analyze(text)
+
+            record.update({
+                "status": "ok",
+                "lower_s": round(t_lower - t0, 2),
+                "compile_s": round(t_compile - t_lower, 2),
+                "memory": {
+                    "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                    "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                    "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                    "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+                },
+                # cost_analysis counts while bodies ONCE (verified) —
+                # kept for reference; roofline uses the trip-multiplied
+                # static analysis below.
+                "cost_body_once": {
+                    "flops": cost.get("flops"),
+                    "bytes_accessed": cost.get("bytes accessed"),
+                    "transcendentals": cost.get("transcendentals"),
+                },
+                "hlo": {
+                    "dot_flops_per_chip": hlo["dot_flops"],
+                    "hbm_bytes_per_chip": hlo["hbm_bytes_proxy"],
+                    "collective_bytes_per_chip": hlo["collective_bytes"],
+                    "collective_breakdown": hlo["collective_breakdown"],
+                },
+            })
+            cfg = get_config(arch)
+            record["roofline"] = roofline.terms(
+                cfg, CELLS_BY_NAME[cell_name], mesh.size, record)
+    except Exception as e:                      # noqa: BLE001
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        sharding_ctx.set_policy(None)
+    record["wall_s"] = round(time.time() - t0, 2)
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, default=str)
+    status = record["status"]
+    extra = record.get("reason") or record.get("error", "")
+    print(f"[{status:7s}] {tag} ({record['wall_s']}s) {extra[:120]}")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = [args.cell] if args.cell else [c.name for c in CELLS]
+    archs = [args.arch] if args.arch else list_archs()
+    if not (args.arch or args.all):
+        ap.error("pass --arch or --all")
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = 0
+    for mp in meshes:
+        for arch in archs:
+            for cell in cells:
+                rec = run_cell(arch, cell, mp, args.out, force=args.force)
+                failures += rec["status"] == "error"
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

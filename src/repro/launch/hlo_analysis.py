@@ -1,0 +1,240 @@
+"""Static analysis of compiled (SPMD-partitioned) HLO text.
+
+Extracts, with while-loop trip multipliers (from XLA's
+``backend_config={"known_trip_count":{"n":...}}``, falling back to the
+loop condition's compare constant):
+
+* per-chip collective bytes by op type (all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute);
+* per-chip dot FLOPs (cross-check against compiled.cost_analysis()).
+
+Shapes in the post-partitioning module are per-device, so all byte counts
+are per-chip (roofline divides by per-link bandwidth directly; global =
+×chips).
+
+Byte conventions per collective (ring-traffic approximations using the
+spec's "operand sizes"):
+  all-reduce          output bytes
+  all-gather          output bytes
+  reduce-scatter      operand bytes
+  all-to-all          output bytes
+  collective-permute  output bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+\d*)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# %name = <type> opcode(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+?)(?:\.\d+)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _all_shape_bytes(s: str) -> List[int]:
+    return [_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(s)]
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"[)\]}]\s+([a-z][\w\-]*?)(?:\.\d+)?\(")
+
+
+def _instr_opcode(line: str):
+    """(name, opcode, paren_index) or None.  Robust to tuple types with
+    /*index=N*/ comments: the opcode follows the type's closing )/]/}."""
+    md = _DEF_RE.match(line)
+    if not md:
+        return None
+    mo = _OPCODE_RE.search(line, md.end() - 1)
+    if not mo:
+        return None
+    return md.group(1), mo.group(1), line.index("(", mo.end() - 1)
+
+
+def _dot_flops(line: str, paren: int, symtab: Dict[str, str]) -> float:
+    """2 × (out elems) × (contracted size); lhs shape via symbol table."""
+    outs = _SHAPE_RE.findall(line[:paren])
+    if not outs:
+        return 0.0
+    out_elems = 1
+    for d in (outs[0][1].split(",") if outs[0][1] else []):
+        out_elems *= int(d)
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    if not mc:
+        return 0.0
+    mop = re.search(r"\(\s*(%[\w.\-]+)", line[paren:])
+    if not mop:
+        return 0.0
+    lhs_type = symtab.get(mop.group(1), "")
+    lhs_shapes = _SHAPE_RE.findall(lhs_type)
+    if not lhs_shapes or not lhs_shapes[0][1]:
+        return 0.0
+    lhs_dims = [int(d) for d in lhs_shapes[0][1].split(",")]
+    contract = 1
+    for i in (int(x) for x in mc.group(1).split(",") if x):
+        if i < len(lhs_dims):
+            contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    """computation name → instruction lines (brace-balanced)."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$", line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        comps[cur].append(line.strip())
+    return comps
+
+
+def _while_edges(comps: Dict[str, List[str]]):
+    """computation → [(body_comp, trip_count)] from while instructions."""
+    edges: Dict[str, list] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            if " while(" not in line and not re.search(r"=\s*\([^=]*\)\s*while\(", line):
+                if "while(" not in line:
+                    continue
+            mb = re.search(r"body=%?([\w.\-]+)", line)
+            if not mb:
+                continue
+            trip = 1
+            mt = re.search(r'known_trip_count[^}]*"n":"(\d+)"', line)
+            if mt:
+                trip = int(mt.group(1))
+            else:
+                mc = re.search(r"condition=%?([\w.\-]+)", line)
+                if mc:
+                    cond_lines = comps.get(mc.group(1), [])
+                    for cl in cond_lines:
+                        cc = re.search(r"constant\((\d+)\)", cl)
+                        if cc and "compare" in cl:
+                            trip = int(cc.group(1))
+                            break
+                    else:
+                        # compare references a named constant — resolve it
+                        for cl in cond_lines:
+                            cc = re.search(
+                                r"=\s*s32\[\]\s*constant\((\d+)\)", cl)
+                            if cc:
+                                trip = int(cc.group(1))
+                                break
+            edges[name].append((mb.group(1), trip))
+    return edges
+
+
+def _call_edges(comps: Dict[str, List[str]]):
+    edges: Dict[str, list] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            for m in re.finditer(r"(?:calls|to_apply|condition)=%?([\w.\-]+)", line):
+                edges[name].append((m.group(1), 1))
+    return edges
+
+
+def analyze(text: str) -> Dict:
+    """Returns {collective_bytes, collective_breakdown, dot_flops}."""
+    comps = _split_computations(text)
+    wedges = _while_edges(comps)
+    cedges = _call_edges(comps)
+
+    coll_per_comp: Dict[str, list] = defaultdict(list)
+    flops_per_comp: Dict[str, float] = defaultdict(float)
+    bytes_per_comp: Dict[str, float] = defaultdict(float)
+    # fusion-internal / reducer computations don't touch HBM directly
+    _internal = re.compile(r"(fused_computation|_computation|region_\d+\.\d+$)")
+    _no_hbm_ops = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "while", "conditional", "iota", "broadcast"}
+    for name, lines in comps.items():
+        symtab: Dict[str, str] = {}
+        parsed = []
+        for line in lines:
+            info = _instr_opcode(line)
+            if info is None:
+                continue
+            iname, op, paren = info
+            symtab[iname] = line[:paren]
+            parsed.append((line, op, paren))
+        is_internal = bool(_internal.search(name)) and "region" not in name
+        for line, op, paren in parsed:
+            if not is_internal and op not in _no_hbm_ops:
+                bytes_per_comp[name] += float(
+                    sum(_all_shape_bytes(line[:paren])))
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in _COLLECTIVES:
+                out_b = float(sum(_all_shape_bytes(line[:paren])))
+                if base_op == "reduce-scatter":
+                    mop = re.search(r"\(\s*(%[\w.\-]+)", line[paren:])
+                    opnd_b = (float(sum(_all_shape_bytes(
+                        symtab.get(mop.group(1), "")))) if mop else 0.0)
+                    size = opnd_b or out_b
+                else:
+                    size = out_b
+                coll_per_comp[name].append((base_op, size))
+            elif base_op == "dot":
+                flops_per_comp[name] += _dot_flops(line, paren, symtab)
+
+    totals: Dict[str, float] = defaultdict(float)
+    dot_total = [0.0]
+    bytes_total = [0.0]
+
+    children = {c for lst in list(wedges.values()) + list(cedges.values())
+                for c, _ in lst}
+    roots = [n for n in comps if n not in children]
+
+    def walk(comp: str, mult: float, stack):
+        if comp in stack:
+            return
+        stack = stack + [comp]
+        for op, b in coll_per_comp.get(comp, []):
+            totals[op] += b * mult
+        dot_total[0] += flops_per_comp.get(comp, 0.0) * mult
+        bytes_total[0] += bytes_per_comp.get(comp, 0.0) * mult
+        for child, trip in wedges.get(comp, []):
+            walk(child, mult * trip, stack)
+        for child, _ in cedges.get(comp, []):
+            if child not in {b for b, _ in wedges.get(comp, [])}:
+                walk(child, mult, stack)
+
+    for r in roots:
+        walk(r, 1.0, [])
+
+    return {
+        "collective_bytes": sum(totals.values()),
+        "collective_breakdown": dict(totals),
+        "dot_flops": dot_total[0],
+        # ×2: instruction outputs counted once ≈ HBM writes; reads ≈ writes
+        "hbm_bytes_proxy": bytes_total[0] * 2.0,
+    }
+
+
+def collective_bytes(text: str) -> Tuple[float, Dict[str, float]]:
+    res = analyze(text)
+    return res["collective_bytes"], res["collective_breakdown"]

@@ -1,0 +1,32 @@
+"""Production mesh builders.  FUNCTIONS ONLY — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any import).
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — "pod" is
+pure data parallelism across the cross-pod (DCN-class) links, which is
+where the int8 gradient-compression collective (repro/dist/compress.py)
+applies.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2,
+                    pods: int = 0) -> jax.sharding.Mesh:
+    """Small mesh for subprocess tests (XLA_FLAGS device count permitting)."""
+    if pods:
+        return jax.make_mesh((pods, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def data_axes(mesh: jax.sharding.Mesh):
+    """The batch-sharding axes present in this mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,168 @@
+"""Roofline terms from the compiled dry-run artifact (TPU v5e targets).
+
+Per (arch × shape × mesh):
+  compute_term_s    = HLO_FLOPs_per_chip / peak_FLOPs        (197 TF/s bf16)
+  memory_term_s     = HLO_bytes_per_chip / HBM_bw            (819 GB/s)
+  collective_term_s = collective_bytes_per_chip / link_bw    (50 GB/s/link)
+
+(cost_analysis of the SPMD-partitioned module reports per-device numbers;
+the spec's global formulation divides global totals by `chips ×`, which is
+identical.)
+
+MODEL_FLOPS (the "useful" compute):
+  train:   6 · N_active · tokens   (fwd+bwd)
+  prefill: 2 · N_active · tokens
+  decode:  2 · N_active · tokens (+ attention KV term, reported separately)
+The MODEL_FLOPS / HLO_FLOPs ratio exposes remat/causal-masking/capacity
+waste — the §Perf hillclimb watches it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def model_flops(cfg, cell) -> float:
+    """6·N_active·tokens (train) / 2·N_active (fwd), with the input
+    embedding excluded from N (a gather, not a matmul); tied embeddings
+    still count once via the LM-head matmul."""
+    n_active = cfg.active_param_count()
+    embed = cfg.vocab * cfg.d_model
+    n_mat = n_active - embed if not cfg.tie_embeddings else n_active
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    if cell.kind == "train":
+        return 6.0 * n_mat * tokens
+    return 2.0 * n_mat * tokens
+
+
+def attention_flops(cfg, cell) -> float:
+    """Useful causal-attention matmul FLOPs (not in 6ND), global."""
+    if cfg.ssm is not None and cfg.n_heads == 1:
+        return 0.0
+    s, b = cell.seq_len, cell.global_batch
+    h, hd = cfg.n_heads, cfg.head_dim
+    n_attn = sum(sum(1 for k in st.pattern if "gqa" in k.mixer or k.mixer == "mla")
+                 * st.groups for st in cfg.stacks)
+    if cell.kind == "decode":
+        per_layer = 2 * 2 * b * 1 * s * h * hd
+        mult = 1.0
+    else:
+        per_layer = 2 * 2 * b * s * s * h * hd / 2     # causal half
+        mult = 3.0 if cell.kind == "train" else 1.0
+    return n_attn * per_layer * mult
+
+
+def analytic_memory_bytes(cfg, cell, chips: int, model_par: int,
+                          zero: bool) -> float:
+    """See _analytic_memory_impl; model_par=1 means pure DP (replicated
+    params, batch over every axis)."""
+    return _analytic_memory_impl(cfg, cell, chips, model_par, zero)
+
+
+def _analytic_memory_impl(cfg, cell, chips: int, model_par: int,
+                          zero: bool) -> float:
+    """Per-chip HBM-traffic floor for a TPU compile (fusion-optimal).
+
+    Counts: optimizer/LC state streams (params r/w, momentum r/w,
+    w_C + λ reads — all bf16, sharded), major activation tensors per layer
+    (remat ⇒ ~3 forward-equivalent passes in training), logits, and for
+    decode/prefill the KV/state caches.  This is the *floor*; the HLO
+    proxy (CPU fusion granularity, f32-upcast) is the upper bound.
+    """
+    n = cfg.param_count()
+    bp = 2.0
+    par = model_par * (chips // model_par if zero else 1)
+    params_chip = n * bp / par
+    tokens_chip = cell.global_batch * cell.seq_len / max(chips // model_par, 1)
+
+    d_loc = cfg.d_model                       # residual stream: replicated
+    f_loc = max(cfg.d_ff, 1) / model_par
+    if cfg.moe:
+        f_loc = cfg.moe.top_k * cfg.moe.d_ff_expert / model_par * 3
+    if cfg.ssm:
+        f_loc = cfg.ssm.d_inner * 2 / model_par
+    if cfg.rglru:
+        f_loc = max(f_loc, cfg.rglru.width * 2 / model_par)
+    per_layer_act = (4 * tokens_chip * f_loc + 8 * tokens_chip * d_loc) * bp
+    n_layers = cfg.n_layers
+    vocab_loc = cfg.vocab / model_par
+
+    import jax
+    from repro.configs.shapes import input_specs
+    cache_bytes = 0.0
+    if cell.kind in ("decode", "prefill"):
+        try:
+            import jax.numpy as jnp
+            specs = input_specs(cfg, cell, jnp.bfloat16)
+            caches = specs.get("caches")
+            if caches is None:
+                from repro.models.transformer import init_cache
+                caches = jax.eval_shape(
+                    lambda: init_cache(cfg, cell.global_batch, cell.seq_len,
+                                       jnp.bfloat16))
+            cache_bytes = sum(
+                int(x.size) * x.dtype.itemsize
+                for x in jax.tree_util.tree_leaves(caches)) / chips
+        except Exception:
+            cache_bytes = 0.0
+
+    if cell.kind == "train":
+        state = 6.0 * params_chip            # p r/w, m r/w, w_C + λ reads
+        acts = 3.0 * per_layer_act * n_layers
+        logits = 4.0 * tokens_chip * vocab_loc * 4.0
+        return state + acts + logits
+    if cell.kind == "prefill":
+        return params_chip + per_layer_act * n_layers + cache_bytes \
+            + tokens_chip * vocab_loc * 4.0
+    # decode: stream weights + read cache once
+    return params_chip + cache_bytes
+
+
+def terms(cfg, cell, chips: int, record: Dict) -> Dict:
+    hlo = record["hlo"]
+    flops_chip = hlo["dot_flops_per_chip"] or 0.0
+    bytes_chip_hlo = hlo["hbm_bytes_per_chip"] or 0.0
+    coll_chip = hlo["collective_bytes_per_chip"] or 0.0
+
+    policy = record.get("policy", "tp")
+    model_par = 1 if policy in ("dp", "dp8") else 16
+    bytes_floor = analytic_memory_bytes(cfg, cell, chips, model_par,
+                                        record.get("zero", False))
+    if policy.endswith("_quant"):
+        # LC-quantized MLP weights: uint8 idx (1 B) instead of bf16 (2 B)
+        # for ~85-95% of params at decode — ÷1.8 on the weight stream
+        # (4-bit packing would give ÷3.6; kernels/codebook_matmul.py)
+        bytes_floor = bytes_floor / 1.8
+
+    compute_s = flops_chip / PEAK_FLOPS
+    memory_s = bytes_floor / HBM_BW
+    memory_hlo_s = bytes_chip_hlo / HBM_BW
+    # CPU HLO upcasts bf16 collectives to f32; TPU moves them at bf16.
+    collective_s = 0.5 * coll_chip / ICI_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+
+    mf = model_flops(cfg, cell)
+    af = attention_flops(cfg, cell)
+    hlo_global = flops_chip * chips
+    useful_ratio = (mf + af) / hlo_global if hlo_global else None
+    bound_s = max(compute_s, memory_s, collective_s)
+    # fraction of roofline: useful work at peak vs actual bound time
+    roofline_frac = ((mf + af) / chips / PEAK_FLOPS) / bound_s if bound_s else None
+
+    return {
+        "compute_term_s": compute_s,
+        "memory_term_s": memory_s,
+        "memory_term_hlo_upper_s": memory_hlo_s,
+        "collective_term_s": collective_s,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "attention_flops_global": af,
+        "hlo_flops_global": hlo_global,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": roofline_frac,
+    }

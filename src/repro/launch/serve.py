@@ -1,0 +1,98 @@
+"""Serving launcher: batched prefill + decode on a mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --reduced --host-devices 4 --mesh 2x2 --batch 4
+
+Loads (or initializes) params, shards them with the production rules,
+prefills a batch of prompts and runs a greedy decode loop — the same
+``decode_step`` the dry-run lowers for the decode_32k/long_500k cells.
+"""
+import argparse
+import os
+import sys
+
+
+def _preparse_devices():
+    if "--host-devices" in sys.argv:
+        i = sys.argv.index("--host-devices")
+        n = int(sys.argv[i + 1])
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   f" --xla_force_host_platform_device_count={n}")
+
+
+_preparse_devices()
+
+import jax                                    # noqa: E402
+import jax.numpy as jnp                       # noqa: E402
+import numpy as np                            # noqa: E402
+
+from repro.configs import get_config, list_archs, reduce_config  # noqa: E402
+from repro.dist import sharding as shard_rules                   # noqa: E402
+from repro.launch.mesh import make_production_mesh               # noqa: E402
+from repro.models import sharding_ctx                            # noqa: E402
+from repro.models.transformer import (decode_step, init_params,  # noqa: E402
+                                      prefill)
+from repro.train import checkpoint as ckpt                       # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--host-devices", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        names = ("pod", "data", "model")[-len(dims):]
+        mesh = jax.make_mesh(dims, names)
+    else:
+        mesh = make_production_mesh()
+    sharding_ctx.set_policy(sharding_ctx.Policy(mesh, mode="tp"))
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.ckpt_dir:
+        params, _, _ = ckpt.restore_checkpoint(args.ckpt_dir, like=params)
+    p_shard = shard_rules.param_shardings(params, mesh)
+    params = jax.tree_util.tree_map(jax.device_put, params, p_shard)
+
+    key = jax.random.PRNGKey(7)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab)
+    capacity = args.prompt_len + args.gen_len
+
+    with mesh:
+        logits, caches = prefill(params, cfg, prompts,
+                                 last_logits_only=True)
+
+        def grow(leaf):
+            if leaf.ndim >= 3 and leaf.shape[2] == args.prompt_len:
+                pad = [(0, 0)] * leaf.ndim
+                pad[2] = (0, args.gen_len)
+                return jnp.pad(leaf, pad)
+            return leaf
+
+        caches = jax.tree_util.tree_map(grow, caches)
+        step = jax.jit(lambda c, t, p: decode_step(params, cfg, c, t, p))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out = [tok]
+        for t in range(args.gen_len - 1):
+            logits, caches = step(caches, tok,
+                                  jnp.asarray(args.prompt_len + t, jnp.int32))
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            out.append(tok)
+        gen = np.asarray(jnp.concatenate(out, axis=1))
+    for r in range(args.batch):
+        print(f"req{r}: {gen[r]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,381 @@
+"""Attention: chunked (flash-style) training path + KV-cache decode paths.
+
+* ``chunked_attention`` — pure-jnp online-softmax attention over KV chunks
+  (memory O(S·chunk) instead of O(S²)); supports GQA head broadcasting,
+  causal masking, sliding windows (banded compute: local layers only touch
+  the ``window + q_chunk`` KV band ⇒ O(S·W) FLOPs, not O(S²)), and
+  Gemma-2-style attention-logit softcap.
+* GQA with full or ring-buffer (sliding-window) caches for decode.
+* MLA (DeepSeek-V2 multi-head latent attention): trains on the expanded
+  K/V; decodes in the *compressed* space via the matrix-absorption trick,
+  so the cache is [S, kv_lora + rope_dim] per token regardless of heads.
+
+Causal-waste note (roofline): the global-attention training path scans all
+KV chunks per query chunk and masks the upper triangle ⇒ HLO FLOPs ≈ 2×
+useful attention FLOPs.  This shows up honestly in the MODEL_FLOPS /
+HLO_FLOPs ratio and is one of the §Perf hillclimb levers (banded/triangle
+scheduling).  Local (windowed) layers already avoid it.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, softcap
+from repro.models.sharding_ctx import constrain
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos: Array, k_pos: Array, window: Optional[int]) -> Array:
+    """[Sq, Sk] additive bias: causal (+ sliding window if given)."""
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def chunked_attention(
+    q: Array, k: Array, v: Array,
+    q_positions: Array, k_positions: Array,
+    *,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    scale: Optional[float] = None,
+    causal_unroll: bool = False,
+) -> Array:
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd]; positions: [Sq],[Sk] (global ids).
+
+    Returns [B,Sq,H,hd].  GQA: H must be a multiple of KV.
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]                       # value dim may differ (MLA)
+    rep = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    nq, nk = sq // qc, sk // kc
+    assert nq * qc == sq and nk * kc == sk, (sq, sk, qc, kc)
+
+    # [nq, B, qc, H, hd]
+    qs = q.reshape(b, nq, qc, h, hd).transpose(1, 0, 2, 3, 4)
+    qp = q_positions.reshape(nq, qc)
+
+    if window is not None and sk > kc:
+        return _banded_attention(qs, qp, k, v, k_positions, window, rep,
+                                 scale, attn_softcap, qc, kc, b, h, hd, vd, sq)
+
+    if causal_unroll and sq == sk and nq <= 8:
+        return _triangular_attention(qs, qp, k, v, k_positions, rep, scale,
+                                     attn_softcap, qc, kc, b, h, hd, vd, sq,
+                                     window)
+
+    ks = k.reshape(b, nk, kc, kv, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, kc, kv, vd).transpose(1, 0, 2, 3, 4)
+    kp = k_positions.reshape(nk, kc)
+
+    def q_body(_, qblk):
+        qi, qpos = qblk                                   # [B,qc,H,hd], [qc]
+
+        def kv_body(carry, kblk):
+            m, l, o = carry
+            ki, vi, kpos = kblk
+            # logits [B, KV, rep, qc, kc]
+            qg = qi.reshape(b, qc, kv, rep, hd)
+            logits = jnp.einsum("bqkrd,bskd->bkrqs", qg, ki,
+                                preferred_element_type=jnp.float32) * scale
+            logits = softcap(logits, attn_softcap)
+            logits = logits + _mask_bias(qpos, kpos, window)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkrqs,bskd->bkrqd", p.astype(vi.dtype), vi)
+            o = o * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l, o), None
+
+        m0 = jnp.full((b, kv, rep, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, rep, qc), jnp.float32)
+        o0 = jnp.zeros((b, kv, rep, qc, vd), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_body, (m0, l0, o0), (ks, vs, kp))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        # [B,KV,rep,qc,vd] -> [B,qc,H,vd]
+        o = o.transpose(0, 3, 1, 2, 4).reshape(b, qc, h, vd)
+        return None, o.astype(qi.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, qp))        # [nq,B,qc,H,vd]
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, vd)
+
+
+def _triangular_attention(qs, qp, k, v, k_positions, rep, scale,
+                          attn_softcap, qc, kc, b, h, hd, vd, sq, window):
+    """Causal attention with a statically-unrolled triangular schedule:
+    q chunk i attends only k[: (i+1)·qc] — no fully-masked blocks are ever
+    computed (the scan path burns ~2× attention FLOPs on them).  Used when
+    nq ≤ 8 so the unrolled HLO stays small (§Perf qwen iteration 3)."""
+    kv = k.shape[2]
+    nq = qs.shape[0]
+    outs = []
+    for i in range(nq):
+        end = (i + 1) * qc
+        qi, qpos = qs[i], qp[i]
+        ki, vi = k[:, :end], v[:, :end]
+        kpos = k_positions[:end]
+        qg = qi.reshape(b, qc, kv, rep, hd)
+        logits = jnp.einsum("bqkrd,bskd->bkrqs", qg, ki,
+                            preferred_element_type=jnp.float32) * scale
+        logits = softcap(logits, attn_softcap)
+        logits = logits + _mask_bias(qpos, kpos, window)
+        m = logits.max(axis=-1, keepdims=True)
+        p = jnp.exp(logits - m)
+        o = jnp.einsum("bkrqs,bskd->bkrqd", p.astype(vi.dtype), vi)
+        o = o / p.sum(axis=-1, keepdims=True).astype(o.dtype)
+        outs.append(o.transpose(0, 3, 1, 2, 4).reshape(b, qc, h, vd))
+    return jnp.concatenate(outs, axis=1).astype(qs.dtype)
+
+
+def _banded_attention(qs, qp, k, v, k_positions, window, rep, scale,
+                      attn_softcap, qc, kc, b, h, hd, vd, sq):
+    """Sliding-window path: each q chunk reads only its KV band."""
+    kv = k.shape[2]
+    sk = k.shape[1]
+    band = ((window + qc - 1) // kc + 1) * kc             # static band length
+    band = min(band + kc, sk)                             # cover chunk offset
+    nq = qs.shape[0]
+
+    def q_body(_, xs):
+        qi, qpos, idx = xs
+        q_start = idx * qc
+        start = jnp.clip(q_start + qc - band, 0, sk - band)
+        ki = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        vi = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        kpos = jax.lax.dynamic_slice_in_dim(k_positions, start, band, axis=0)
+        qg = qi.reshape(b, qc, kv, rep, hd)
+        logits = jnp.einsum("bqkrd,bskd->bkrqs", qg, ki,
+                            preferred_element_type=jnp.float32) * scale
+        logits = softcap(logits, attn_softcap)
+        logits = logits + _mask_bias(qpos, kpos, window)
+        m = logits.max(axis=-1, keepdims=True)
+        p = jnp.exp(logits - m)
+        o = jnp.einsum("bkrqs,bskd->bkrqd", p.astype(vi.dtype), vi)
+        o = o / p.sum(axis=-1, keepdims=True).astype(o.dtype)
+        o = o.transpose(0, 3, 1, 2, 4).reshape(b, qc, h, vd)
+        return None, o.astype(qi.dtype)
+
+    idxs = jnp.arange(nq)
+    _, outs = jax.lax.scan(q_body, None, (qs, qp, idxs))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, vd)
+
+
+# ---------------------------------------------------------------------------
+# GQA block (params + train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, d_model, n_heads, n_kv, head_dim, qkv_bias=False,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d_model, n_heads * head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d_model, n_kv * head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d_model, n_kv * head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (n_heads * head_dim, d_model))
+               * (n_heads * head_dim) ** -0.5).astype(dtype),
+    }
+    if qkv_bias:
+        p["q_bias"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["k_bias"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["v_bias"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def _qkv(p, x, n_heads, n_kv, head_dim):
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "q_bias" in p:
+        q, k, v = q + p["q_bias"], k + p["k_bias"], v + p["v_bias"]
+    q = constrain(q.reshape(b, s, n_heads, head_dim),
+                  "batch", None, "heads", None)
+    k = constrain(k.reshape(b, s, n_kv, head_dim),
+                  "batch", None, "kv_heads", None)
+    v = constrain(v.reshape(b, s, n_kv, head_dim),
+                  "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def gqa_forward(p, x, positions, *, n_heads, n_kv, head_dim,
+                window=None, attn_softcap=None, rope_theta=10000.0,
+                q_chunk=1024, kv_chunk=1024, query_scale=None,
+                causal_unroll=False):
+    """Full-sequence causal forward (training / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
+    q = apply_rope(q, positions[None, :], rope_theta)
+    k = apply_rope(k, positions[None, :], rope_theta)
+    o = chunked_attention(q, k, v, positions, positions, window=window,
+                          attn_softcap=attn_softcap, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk, scale=query_scale,
+                          causal_unroll=causal_unroll)
+    return o.reshape(b, s, n_heads * head_dim) @ p["wo"], (k, v)
+
+
+class KVCache(NamedTuple):
+    k: Array          # [B, C, KV, hd]  (C = max_len or window)
+    v: Array
+
+
+def init_kv_cache(batch, capacity, n_kv, head_dim, dtype):
+    z = jnp.zeros((batch, capacity, n_kv, head_dim), dtype)
+    return KVCache(k=z, v=z)
+
+
+def gqa_decode(p, x_t, cache: KVCache, pos, *, n_heads, n_kv, head_dim,
+               ring=False, window=None, attn_softcap=None,
+               rope_theta=10000.0, query_scale=None):
+    """One-token decode. x_t: [B,1,D]; pos: scalar position index.
+
+    ``ring`` (static, from the layer kind) marks a sliding-window ring
+    buffer of capacity = window.
+    """
+    b = x_t.shape[0]
+    q, k, v = _qkv(p, x_t, n_heads, n_kv, head_dim)
+    pos_arr = jnp.asarray(pos)[None]
+    q = apply_rope(q, pos_arr[None, :], rope_theta)
+    k = apply_rope(k, pos_arr[None, :], rope_theta)
+
+    cap = cache.k.shape[1]
+    slot = (pos % cap) if ring else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), slot, axis=1)
+
+    idx = jnp.arange(cap)
+    if ring:
+        # slot i holds position p_i = pos - ((pos - i) mod cap)
+        slot_pos = pos - jnp.mod(pos - idx, cap)
+        valid = (slot_pos >= 0) & (slot_pos > pos - (window or cap))
+    else:
+        slot_pos = idx
+        valid = idx <= pos
+        if window is not None:
+            valid &= idx > pos - window
+    scale = query_scale if query_scale is not None else head_dim ** -0.5
+    rep = n_heads // n_kv
+    qg = q.reshape(b, 1, n_kv, rep, head_dim)
+    logits = jnp.einsum("bqkrd,bskd->bkrqs", qg, ck,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, attn_softcap)
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    attn = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkrqs,bskd->bkrqd", attn.astype(cv.dtype), cv)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, 1, n_heads * head_dim)
+    return o @ p["wo"], KVCache(k=ck, v=cv)
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V2 multi-head latent attention
+# ---------------------------------------------------------------------------
+
+def init_mla(key, d_model, n_heads, *, kv_lora, rope_dim, nope_dim, v_dim,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    qdim = n_heads * (nope_dim + rope_dim)
+    return {
+        "wq": (jax.random.normal(ks[0], (d_model, qdim)) * s).astype(dtype),
+        "w_dkv": (jax.random.normal(ks[1], (d_model, kv_lora + rope_dim)) * s).astype(dtype),
+        "w_uk": (jax.random.normal(ks[2], (kv_lora, n_heads * nope_dim))
+                 * kv_lora ** -0.5).astype(dtype),
+        "w_uv": (jax.random.normal(ks[3], (kv_lora, n_heads * v_dim))
+                 * kv_lora ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[4], (n_heads * v_dim, d_model))
+               * (n_heads * v_dim) ** -0.5).astype(dtype),
+        "kv_norm_scale": jnp.zeros((kv_lora,), dtype),
+    }
+
+
+def _mla_q(p, x, n_heads, nope_dim, rope_dim, positions, rope_theta):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, nope_dim + rope_dim)
+    q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
+    q_rope = apply_rope(q_rope, positions[None, :], rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(p, x, positions, *, n_heads, kv_lora, rope_dim, nope_dim,
+                v_dim, rope_theta=10000.0, q_chunk=1024, kv_chunk=1024):
+    """Training/prefill: expand the latent KV and run standard attention."""
+    from repro.models.layers import rms_norm
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(p, x, n_heads, nope_dim, rope_dim, positions, rope_theta)
+    q_nope = constrain(q_nope, "batch", None, "heads", None)
+    q_rope = constrain(q_rope, "batch", None, "heads", None)
+    dkv = x @ p["w_dkv"]
+    c_kv = rms_norm(dkv[..., :kv_lora], p["kv_norm_scale"])
+    k_rope = apply_rope(dkv[..., None, kv_lora:], positions[None, :], rope_theta)
+    k_nope = constrain((c_kv @ p["w_uk"]).reshape(b, s, n_heads, nope_dim),
+                       "batch", None, "heads", None)
+    v = constrain((c_kv @ p["w_uv"]).reshape(b, s, n_heads, v_dim),
+                  "batch", None, "heads", None)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, n_heads, rope_dim))],
+                        axis=-1)
+    scale = (nope_dim + rope_dim) ** -0.5
+    o = chunked_attention(q, k, v, positions, positions, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk, scale=scale)
+    cache = {"c_kv": c_kv, "k_rope": k_rope[..., 0, :]}
+    return o.reshape(b, s, n_heads * v_dim) @ p["wo"], cache
+
+
+class MLACache(NamedTuple):
+    c_kv: Array      # [B, C, kv_lora]
+    k_rope: Array    # [B, C, rope_dim]
+
+
+def init_mla_cache(batch, capacity, kv_lora, rope_dim, dtype):
+    return MLACache(c_kv=jnp.zeros((batch, capacity, kv_lora), dtype),
+                    k_rope=jnp.zeros((batch, capacity, rope_dim), dtype))
+
+
+def mla_decode(p, x_t, cache: MLACache, pos, *, n_heads, kv_lora, rope_dim,
+               nope_dim, v_dim, rope_theta=10000.0):
+    """Absorbed decode: attention entirely in the [kv_lora] latent space.
+
+    q_eff = q_nope · W_UK   (per head: [nope]·[nope,kv_lora])
+    logits = q_eff·c_kv + q_rope·k_rope ;  ctx = attn·c_kv ;
+    out_head = ctx · W_UV.  Cache traffic per token: kv_lora + rope_dim.
+    """
+    from repro.models.layers import rms_norm
+    b = x_t.shape[0]
+    pos_arr = jnp.asarray(pos)[None]
+    q_nope, q_rope = _mla_q(p, x_t, n_heads, nope_dim, rope_dim, pos_arr, rope_theta)
+    dkv = x_t @ p["w_dkv"]
+    c_kv_t = rms_norm(dkv[..., :kv_lora], p["kv_norm_scale"])
+    k_rope_t = apply_rope(dkv[..., None, kv_lora:], pos_arr[None, :], rope_theta)[:, :, 0]
+
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_kv_t.astype(cache.c_kv.dtype), pos, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, k_rope_t.astype(cache.k_rope.dtype), pos, axis=1)
+
+    w_uk = p["w_uk"].reshape(kv_lora, n_heads, nope_dim)
+    q_eff = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_uk)        # [B,1,H,kv_lora]
+    logits = (jnp.einsum("bqhl,bsl->bhqs", q_eff, ckv) +
+              jnp.einsum("bqhd,bsd->bhqs", q_rope, krope))
+    logits = logits.astype(jnp.float32) * (nope_dim + rope_dim) ** -0.5
+    cap = ckv.shape[1]
+    valid = jnp.arange(cap) <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    attn = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", attn.astype(ckv.dtype), ckv)
+    w_uv = p["w_uv"].reshape(kv_lora, n_heads, v_dim)
+    o = jnp.einsum("bqhl,lhd->bqhd", ctx, w_uv).reshape(b, 1, n_heads * v_dim)
+    return o @ p["wo"], MLACache(c_kv=ckv, k_rope=krope)

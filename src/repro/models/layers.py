@@ -1,0 +1,111 @@
+"""Shared model components: norms, RoPE, MLPs, embeddings, softcaps.
+
+Param-naming conventions matter: the LC quantization policy
+(`repro.core.lc.DEFAULT_EXCLUDE`) excludes leaves whose path contains
+``bias|scale|norm|router|...`` — so norm gains are called ``norm_scale``,
+biases ``*_bias``, etc.  2-D multiplicative weights get quantized.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def softcap(x: Array, cap: Optional[float]) -> Array:
+    """Gemma-2 style logit soft-capping: cap·tanh(x/cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)                      # [head_dim/2]
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # [hd/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: Array, d_model: int) -> Array:
+    """MusicGen-style sinusoidal position embedding [..., S, D]."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "sqrelu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def init_mlp(key: Array, d_model: int, d_ff: int, act: str, gated: bool,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    p = {
+        "w_in": (jax.random.normal(ks[0], (d_model, d_ff)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(ks[1], (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(ks[2], (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp_weight(p, name: str, dtype) -> Array:
+    """Dense or LC-quantized (uint8 idx + codebook) weight fetch.
+
+    Quantized serving stores ``<name>_idx`` (uint8, the C-step assignment)
+    + ``<name>_cb`` ([K] codebook): 1 B/weight of HBM traffic instead of
+    2 B bf16.  The dequant here is jnp (gather); on TPU the fused
+    dequant-in-VMEM path is repro.kernels.codebook_matmul.
+    """
+    if f"{name}_idx" in p:
+        return p[f"{name}_cb"][p[f"{name}_idx"].astype(jnp.int32)].astype(dtype)
+    return p[name]
+
+
+def apply_mlp(p, x: Array, act: str) -> Array:
+    from repro.models.sharding_ctx import constrain
+    f = act_fn(act)
+    h = x @ mlp_weight(p, "w_in", x.dtype)
+    if "w_gate" in p or "w_gate_idx" in p:
+        h = f(x @ mlp_weight(p, "w_gate", x.dtype)) * h
+    else:
+        h = f(h)
+    h = constrain(h, "batch", None, "ffn")
+    return h @ mlp_weight(p, "w_out", x.dtype)

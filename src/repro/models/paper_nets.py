@@ -1,0 +1,129 @@
+"""The paper's own experiment networks (§5): LeNet300, LeNet5-style conv
+net, the 12-layer VGG-style CIFAR net, the single-hidden-layer tradeoff
+net (fig. 6), and the super-resolution linear regression (§5.2).
+
+These are deliberately simple (tanh MLPs / small convs, exactly as in the
+paper) and are used by the repro benchmarks; the LM zoo lives in
+transformer.py.  All params follow the quantization naming convention
+(weights ``w``, biases ``*_bias`` — the paper quantizes only the
+multiplicative weights).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# MLPs (LeNet300 & fig. 6 tradeoff net)
+# ---------------------------------------------------------------------------
+
+def init_mlp_classifier(key: Array, sizes: Sequence[int]) -> dict:
+    """sizes = [in, h1, ..., out]; tanh hidden units, softmax output."""
+    params = {}
+    ks = jax.random.split(key, len(sizes) - 1)
+    for i, (din, dout) in enumerate(zip(sizes[:-1], sizes[1:])):
+        params[f"fc{i}"] = {
+            "w": jax.random.normal(ks[i], (din, dout)) * (1.0 / jnp.sqrt(din)),
+            "b_bias": jnp.zeros((dout,)),
+        }
+    return params
+
+
+def mlp_logits(params: dict, x: Array) -> Array:
+    n = len(params)
+    h = x
+    for i in range(n):
+        p = params[f"fc{i}"]
+        h = h @ p["w"] + p["b_bias"]
+        if i < n - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+def lenet300_init(key: Array) -> dict:
+    """784-300-100-10 (P1 = 266 200 weights, P0 = 410 biases — paper tbl 1)."""
+    return init_mlp_classifier(key, [784, 300, 100, 10])
+
+
+# ---------------------------------------------------------------------------
+# LeNet5-style conv net (paper tbl 1, reduced-friendly)
+# ---------------------------------------------------------------------------
+
+def lenet5_init(key: Array, c1: int = 20, c2: int = 50, fc: int = 500,
+                num_classes: int = 10) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "conv0": {"w": jax.random.normal(ks[0], (5, 5, 1, c1)) * 0.1,
+                  "b_bias": jnp.zeros((c1,))},
+        "conv1": {"w": jax.random.normal(ks[1], (5, 5, c1, c2)) * 0.1,
+                  "b_bias": jnp.zeros((c2,))},
+        "fc0": {"w": jax.random.normal(ks[2], (c2 * 4 * 4, fc)) * 0.02,
+                "b_bias": jnp.zeros((fc,))},
+        "fc1": {"w": jax.random.normal(ks[3], (fc, num_classes)) * 0.05,
+                "b_bias": jnp.zeros((num_classes,))},
+    }
+
+
+def lenet5_logits(params: dict, x: Array) -> Array:
+    """x: [B, 28, 28, 1]."""
+    def conv(p, h):
+        h = jax.lax.conv_general_dilated(
+            h, p["w"], window_strides=(1, 1), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jax.nn.relu(h + p["b_bias"])
+
+    def pool(h):
+        return jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                     (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+    h = pool(conv(params["conv0"], x))
+    h = pool(conv(params["conv1"], h))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc0"]["w"] + params["fc0"]["b_bias"])
+    return h @ params["fc1"]["w"] + params["fc1"]["b_bias"]
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def classification_error(logits: Array, labels: Array) -> Array:
+    return jnp.mean((jnp.argmax(logits, -1) != labels).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Super-resolution linear regression (§5.2) — closed-form L step
+# ---------------------------------------------------------------------------
+
+def superres_loss(w: Array, b_bias: Array, x: Array, y: Array) -> Array:
+    """L(W,b) = (1/N) Σ ||y_n - W x_n - b||²; x:[N,Din], y:[N,Dout]."""
+    r = y - x @ w.T - b_bias
+    return jnp.mean(jnp.sum(r * r, axis=-1))
+
+
+def superres_l_step_closed_form(
+    x: Array, y: Array, mu: float, wc: Array, lam: Array,
+    reg: float = 1e-6) -> Tuple[Array, Array]:
+    """Exact argmin_W of L(W,b) + μ/2||W - W_C - λ/μ||² (b solved jointly).
+
+    Normal equations per output row; returns (W [Dout,Din], b [Dout]).
+    The μ-penalty adds μ·N/2 to the diagonal in the normalized system.
+    """
+    n, din = x.shape
+    xm = jnp.mean(x, axis=0)
+    ym = jnp.mean(y, axis=0)
+    xc = x - xm
+    yc = y - ym
+    # (2/N)·XcᵀXc W + μ(W - Wc - λ/μ) = (2/N)·XcᵀYc   (bias eliminated)
+    gram = (2.0 / n) * (xc.T @ xc) + (mu + reg) * jnp.eye(din)
+    rhs = (2.0 / n) * (xc.T @ yc) + (mu * wc + lam).T
+    w = jnp.linalg.solve(gram, rhs).T
+    b = ym - w @ xm
+    return w, b

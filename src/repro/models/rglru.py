@@ -1,0 +1,111 @@
+"""Griffin / RecurrentGemma recurrent block: RG-LRU + depthwise conv.
+
+Block (De et al. 2024, arXiv:2402.19427):
+  x → [linear → GeLU]  (gate branch)
+    → [linear → causal conv(4) → RG-LRU]  (recurrent branch)
+  y = gate ⊙ rec → out-proj.
+
+RG-LRU recurrence (per channel):
+  r_t = σ(W_a x_t + b_a)           recurrence gate
+  i_t = σ(W_x x_t + b_x)           input gate
+  a_t = exp(-c · softplus(Λ) · r_t),  c = 8
+  h_t = a_t h_{t-1} + √(1 - a_t²) · (i_t ⊙ x_t)
+
+Training uses ``jax.lax.associative_scan`` over the sequence (O(S log S)
+depth, sub-quadratic — this is why recurrentgemma runs the ``long_500k``
+cell).  Decode is an O(1) state update.
+
+Unquantized leaves: ``a_param`` (Λ), gates' biases, ``conv1d_w``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding_ctx import constrain
+
+Array = jax.Array
+_C = 8.0
+
+
+def init_rglru_block(key, d_model, width, conv_w=4, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    sw = width ** -0.5
+    return {
+        "w_rec_in": (jax.random.normal(ks[0], (d_model, width)) * s).astype(dtype),
+        "w_gate_in": (jax.random.normal(ks[1], (d_model, width)) * s).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (width, d_model)) * sw).astype(dtype),
+        "conv1d_w": (jax.random.normal(ks[3], (conv_w, width)) * 0.1).astype(dtype),
+        "w_a_gate": (jax.random.normal(ks[4], (width, width)) * sw).astype(dtype),
+        "w_x_gate": (jax.random.normal(ks[5], (width, width)) * sw).astype(dtype),
+        "a_gate_bias": jnp.zeros((width,), dtype),
+        "x_gate_bias": jnp.zeros((width,), dtype),
+        # Λ init so that a^c = exp(-c softplus Λ) spans ≈ (0.9, 0.999)
+        "a_param": jnp.linspace(-4.0, -1.0, width).astype(jnp.float32),
+    }
+
+
+def _rglru_coeffs(p, x):
+    """x: [B,S,W] → (a, b) of the recurrence h = a·h_prev + b."""
+    r = jax.nn.sigmoid(x @ p["w_a_gate"] + p["a_gate_bias"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(x @ p["w_x_gate"] + p["x_gate_bias"]).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["a_param"]) * r           # [B,S,W]
+    a = jnp.exp(log_a)
+    # √(1-a²) computed stably: 1-a² = -expm1(2 log a)
+    b = jnp.sqrt(-jnp.expm1(2.0 * log_a)) * i * x.astype(jnp.float32)
+    return a, b
+
+
+def _causal_conv(x: Array, w: Array) -> Array:
+    wlen = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (wlen - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(wlen):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def rglru_forward(p, x, *, width):
+    """Training / prefill. x: [B,S,D] → [B,S,D]; returns (y, final_state)."""
+    gate = jax.nn.gelu(constrain(x @ p["w_gate_in"], "batch", None, "width"),
+                       approximate=True)
+    rec = constrain(x @ p["w_rec_in"], "batch", None, "width")
+    rec = _causal_conv(rec, p["conv1d_w"])
+    a, b = _rglru_coeffs(p, rec)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b2 + a2 * b1
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (gate.astype(jnp.float32) * h).astype(x.dtype)
+    final_state = h[:, -1]
+    return y @ p["w_out"], final_state
+
+
+class RGLRUCache(NamedTuple):
+    state: Array     # [B, W] fp32
+    conv: Array      # [B, conv_w-1, W]
+
+
+def init_rglru_cache(batch, width, conv_w, dtype):
+    return RGLRUCache(state=jnp.zeros((batch, width), jnp.float32),
+                      conv=jnp.zeros((batch, conv_w - 1, width), dtype))
+
+
+def rglru_decode(p, x_t, cache: RGLRUCache, *, width):
+    """O(1) decode. x_t: [B,1,D]."""
+    xt = x_t[:, 0]
+    gate = jax.nn.gelu(xt @ p["w_gate_in"], approximate=True)
+    rec = xt @ p["w_rec_in"]
+    conv_in = jnp.concatenate([cache.conv, rec[:, None, :]], axis=1)
+    rec = jnp.einsum("bwc,wc->bc", conv_in, p["conv1d_w"])
+    a, b = _rglru_coeffs(p, rec[:, None, :])
+    h = a[:, 0] * cache.state + b[:, 0]
+    y = (gate.astype(jnp.float32) * h).astype(x_t.dtype)
+    out = (y @ p["w_out"])[:, None, :]
+    return out, RGLRUCache(state=h, conv=conv_in[:, 1:, :])

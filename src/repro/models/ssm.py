@@ -1,0 +1,192 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked training + O(1) decode.
+
+Follows the minimal SSD formulation (Dao & Gu 2024, arXiv:2405.21060):
+within a chunk the output is a masked quadratic ("attention-like") term;
+across chunks a first-order state recurrence carries [H, P, N] states.
+
+Block layout (mamba2 defaults, ngroups=1), with **separate projections**
+(z, x, B, C, dt) rather than one fused in_proj: the fused layout would
+split unevenly across a tensor-parallel shard of the output dim; separate
+projections let z/x shard over the ``model`` axis (heads parallel) while
+the tiny B/C/dt projections stay replicated — the SSD scan is then fully
+head-parallel with no sequence collectives (DESIGN §6).
+
+Non-quantized leaves (dynamics-sensitive, tiny — see DESIGN §5):
+``a_log``, ``dt_*``, ``conv1d_*``, ``norm_scale``, ``d_skip``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+from repro.models.sharding_ctx import constrain
+
+Array = jax.Array
+
+
+def init_ssm(key, d_model, *, d_inner, head_p, state_n, conv_w=4,
+             dtype=jnp.float32):
+    n_heads = d_inner // head_p
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    return {
+        "in_z_w": (jax.random.normal(ks[0], (d_model, d_inner)) * s).astype(dtype),
+        "in_x_w": (jax.random.normal(ks[1], (d_model, d_inner)) * s).astype(dtype),
+        "in_b_w": (jax.random.normal(ks[2], (d_model, state_n)) * s).astype(dtype),
+        "in_c_w": (jax.random.normal(ks[3], (d_model, state_n)) * s).astype(dtype),
+        "dt_w": (jax.random.normal(ks[4], (d_model, n_heads)) * s).astype(jnp.float32),
+        "out_proj_w": (jax.random.normal(ks[5], (d_inner, d_model))
+                       * d_inner ** -0.5).astype(dtype),
+        "conv1d_x_w": (jnp.zeros((conv_w, d_inner)) .at[-1].set(1.0)).astype(dtype),
+        "conv1d_b_w": (jnp.zeros((conv_w, state_n)).at[-1].set(1.0)).astype(dtype),
+        "conv1d_c_w": (jnp.zeros((conv_w, state_n)).at[-1].set(1.0)).astype(dtype),
+        "a_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array) -> Array:
+    """Depthwise causal conv: x [B,S,C], w [W,C] → [B,S,C]."""
+    wlen = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (wlen - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(wlen):                  # W=4: tiny static unroll
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int):
+    """Minimal SSD scan.
+
+    x:[B,L,H,P], dt:[B,L,H] (softplus'd), a:[H] (negative),
+    b_mat,c_mat:[B,L,N] (ngroups=1, shared across heads).
+    Returns y:[B,L,H,P] and final state [B,H,P,N].
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    nc = l // chunk
+    assert nc * chunk == l, (l, chunk)
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+
+    da = dtc * a[None, None, None, :]                   # [B,NC,Q,H]
+    da_cs = jnp.cumsum(da, axis=2)                      # within-chunk cumsum
+    # intra-chunk (masked quadratic) term
+    # L_mat[b,c,h,i,j] = exp(da_cs[i] - da_cs[j]) for i >= j else 0.
+    # Mask BEFORE exp: masked diffs are positive and would overflow to inf,
+    # poisoning the where-gradient (inf·0 = nan).
+    diff = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]   # [B,NC,Qi,Qj,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+    lmat = jnp.exp(diff)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)          # [B,NC,Qi,Qj]
+    xdt = xc * dtc[..., None]                           # [B,NC,Q,H,P]
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp",
+                         cb.astype(jnp.float32), lmat, xdt.astype(jnp.float32))
+
+    # chunk summaries: state contribution of each chunk
+    decay_to_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)          # [B,NC,Q,H]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                        bc.astype(jnp.float32), decay_to_end, xdt.astype(jnp.float32))
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))                   # [B,NC,H]
+
+    def scan_body(h_prev, inp):
+        st, dec = inp                                   # [B,H,P,N],[B,H]
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    h_final, h_before = jax.lax.scan(
+        scan_body, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)        # [B,NC,H,P,N]
+
+    # inter-chunk term: contribution of carried state to each position
+    decay_from_start = jnp.exp(da_cs)                   # [B,NC,Q,H]
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         cc.astype(jnp.float32), decay_from_start, h_before)
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    return y.astype(x.dtype), h_final
+
+
+def ssm_forward(p, x, *, d_inner, head_p, state_n, chunk=256):
+    """Training / prefill forward. x: [B,S,D] → [B,S,D] (+ final state)."""
+    bsz, s, _ = x.shape
+    h = d_inner // head_p
+    z = constrain(x @ p["in_z_w"], "batch", None, "width")
+    xin = constrain(x @ p["in_x_w"], "batch", None, "width")
+    xin = jax.nn.silu(_causal_conv(xin, p["conv1d_x_w"]))
+    b_mat = jax.nn.silu(_causal_conv(x @ p["in_b_w"], p["conv1d_b_w"]))
+    c_mat = jax.nn.silu(_causal_conv(x @ p["in_c_w"], p["conv1d_c_w"]))
+    dt = jax.nn.softplus((x @ p["dt_w"]).astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = constrain(xin.reshape(bsz, s, h, head_p),
+                   "batch", None, "ssm_heads", None)
+    y, state = ssd_chunked(xh, dt, a, b_mat, c_mat, chunk)
+    y = (y + xh * p["d_skip"][None, None, :, None].astype(x.dtype)
+         ).astype(x.dtype)
+    y = y.reshape(bsz, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["out_proj_w"], state
+
+
+class SSMCache(NamedTuple):
+    state: Array       # [B, H, P, N] fp32
+    conv_x: Array      # [B, W-1, d_inner]
+    conv_b: Array      # [B, W-1, N]
+    conv_c: Array      # [B, W-1, N]
+
+
+def init_ssm_cache(batch, d_inner, head_p, state_n, conv_w, dtype):
+    h = d_inner // head_p
+    return SSMCache(
+        state=jnp.zeros((batch, h, head_p, state_n), jnp.float32),
+        conv_x=jnp.zeros((batch, conv_w - 1, d_inner), dtype),
+        conv_b=jnp.zeros((batch, conv_w - 1, state_n), dtype),
+        conv_c=jnp.zeros((batch, conv_w - 1, state_n), dtype))
+
+
+def _conv_step(tail: Array, new: Array, w: Array) -> Tuple[Array, Array]:
+    """tail [B,W-1,C], new [B,C] → (out [B,C], new tail)."""
+    window = jnp.concatenate([tail, new[:, None, :]], axis=1)   # [B,W,C]
+    out = jnp.einsum("bwc,wc->bc", window, w)
+    return out, window[:, 1:, :]
+
+
+def ssm_decode(p, x_t, cache: SSMCache, *, d_inner, head_p, state_n):
+    """O(1) single-token decode. x_t: [B,1,D]."""
+    bsz = x_t.shape[0]
+    h = d_inner // head_p
+    xt = x_t[:, 0]
+    z = xt @ p["in_z_w"]
+    xin_raw = xt @ p["in_x_w"]
+    b_raw = xt @ p["in_b_w"]
+    c_raw = xt @ p["in_c_w"]
+    xin, conv_x = _conv_step(cache.conv_x, xin_raw, p["conv1d_x_w"])
+    b_mat, conv_b = _conv_step(cache.conv_b, b_raw, p["conv1d_b_w"])
+    c_mat, conv_c = _conv_step(cache.conv_c, c_raw, p["conv1d_c_w"])
+    xin, b_mat, c_mat = (jax.nn.silu(xin), jax.nn.silu(b_mat),
+                         jax.nn.silu(c_mat))
+    dt = jax.nn.softplus((xt @ p["dt_w"]).astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)                                             # [B,H]
+    xh = xin.reshape(bsz, h, head_p)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh.astype(jnp.float32),
+                     b_mat.astype(jnp.float32))
+    state = cache.state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, c_mat.astype(jnp.float32))
+    y = y.astype(x_t.dtype) + xh * p["d_skip"][None, :, None].astype(x_t.dtype)
+    y = y.reshape(bsz, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    out = (y @ p["out_proj_w"])[:, None, :]
+    return out, SSMCache(state=state, conv_x=conv_x, conv_b=conv_b,
+                         conv_c=conv_c)

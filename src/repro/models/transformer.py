@@ -1,0 +1,539 @@
+"""Composable decoder stack covering all assigned architectures.
+
+A model is a sequence of *stacks*; each stack is ``groups`` repetitions of
+a layer ``pattern`` (tuple of LayerKind).  The forward scans over groups
+with stacked parameters ([G, ...] leaves) so the HLO is compact regardless
+of depth — 96-layer Nemotron compiles as fast as 2 layers.  Mixed layouts
+(Gemma-2 local/global alternation, RecurrentGemma's rec-rec-attn 1:2
+pattern, DeepSeek's dense-then-MoE split) are expressed as patterns /
+multiple stacks, never as unrolled layers.
+
+Three entry points per model:
+  * ``loss_fn``      — training loss (next-token CE), full sequence;
+  * ``prefill``      — forward + KV/state cache emission;
+  * ``decode_step``  — one token with cache (the ``serve_step``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.sharding_ctx import constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MLASpec:
+    kv_lora: int = 512
+    rope_dim: int = 64
+    nope_dim: int = 128
+    v_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_inner: int = 0
+    head_p: int = 64
+    state_n: int = 128
+    conv_w: int = 4
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUSpec:
+    width: int = 0
+    conv_w: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    mixer: str          # gqa | gqa_local | mla | ssm | rglru
+    mlp: str = "dense"  # dense | moe | none
+
+
+@dataclasses.dataclass(frozen=True)
+class StackSpec:
+    pattern: Tuple[LayerKind, ...]
+    groups: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    stacks: Tuple[StackSpec, ...]
+    mlp_act: str = "silu"
+    gated_mlp: bool = True
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    window: Optional[int] = None
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    query_scale: Optional[float] = None
+    moe: Optional[MoESpec] = None
+    mla: Optional[MLASpec] = None
+    ssm: Optional[SSMSpec] = None
+    rglru: Optional[RGLRUSpec] = None
+    post_norms: bool = False
+    emb_scale: Optional[float] = None
+    pos_embed: str = "rope"        # rope | sinusoidal
+    vlm_patches: int = 0
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    remat: bool = True
+    remat_policy: str = "full"     # full (save nothing) | dots (save dot outs)
+    attn_unroll: bool = False      # triangular causal schedule (nq ≤ 8)
+    # notes for DESIGN/dry-run (e.g. long-context applicability)
+    subquadratic: bool = False
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(s.pattern) * s.groups for s in self.stacks)
+
+    def param_count(self) -> int:
+        """Analytic total param count (for 6·N·D roofline terms)."""
+        import numpy as np
+        shapes = jax.eval_shape(lambda k: init_params(k, self, jnp.float32),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes)))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: shared + top-k experts only)."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        m = self.moe
+        per_expert = 3 * self.d_model * m.d_ff_expert
+        n_moe_layers = sum(
+            sum(1 for k in s.pattern if k.mlp == "moe") * s.groups
+            for s in self.stacks)
+        inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+        return total - inactive
+
+
+def uniform_stack(kind: LayerKind, n_layers: int) -> Tuple[StackSpec, ...]:
+    return (StackSpec(pattern=(kind,), groups=n_layers),)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key: Array, cfg: ModelConfig, kind: LayerKind, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p: dict = {"ln1_norm_scale": jnp.zeros((cfg.d_model,), dtype)}
+
+    if kind.mixer in ("gqa", "gqa_local"):
+        p["mixer"] = attn.init_gqa(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                   cfg.head_dim, cfg.qkv_bias, dtype)
+    elif kind.mixer == "mla":
+        m = cfg.mla
+        p["mixer"] = attn.init_mla(ks[0], cfg.d_model, cfg.n_heads,
+                                   kv_lora=m.kv_lora, rope_dim=m.rope_dim,
+                                   nope_dim=m.nope_dim, v_dim=m.v_dim,
+                                   dtype=dtype)
+    elif kind.mixer == "ssm":
+        s = cfg.ssm
+        p["mixer"] = ssm_mod.init_ssm(ks[0], cfg.d_model, d_inner=s.d_inner,
+                                      head_p=s.head_p, state_n=s.state_n,
+                                      conv_w=s.conv_w, dtype=dtype)
+    elif kind.mixer == "rglru":
+        r = cfg.rglru
+        p["mixer"] = rglru_mod.init_rglru_block(ks[0], cfg.d_model, r.width,
+                                                r.conv_w, dtype)
+    else:
+        raise ValueError(kind.mixer)
+
+    if kind.mlp != "none":
+        p["ln2_norm_scale"] = jnp.zeros((cfg.d_model,), dtype)
+        if kind.mlp == "moe":
+            m = cfg.moe
+            p["mlp"] = moe_mod.init_moe(ks[1], cfg.d_model, m.d_ff_expert,
+                                        m.n_experts, m.n_shared, cfg.mlp_act,
+                                        dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act,
+                                  cfg.gated_mlp, dtype)
+    if cfg.post_norms:
+        p["post1_norm_scale"] = jnp.zeros((cfg.d_model,), dtype)
+        if kind.mlp != "none":
+            p["post2_norm_scale"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def init_params(key: Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    n_stacks = len(cfg.stacks)
+    keys = jax.random.split(key, n_stacks + 2)
+    params: dict = {
+        "embed_tok": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                      * cfg.d_model ** -0.5).astype(dtype),
+        "final_norm_scale": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head_w"] = (jax.random.normal(keys[1], (cfg.d_model, cfg.vocab))
+                            * cfg.d_model ** -0.5).astype(dtype)
+    stacks = []
+    for si, spec in enumerate(cfg.stacks):
+        gkeys = jax.random.split(jax.random.fold_in(keys[2 + si], 7), spec.groups)
+        stack = {}
+        for pi, kind in enumerate(spec.pattern):
+            pkeys = jax.vmap(lambda k: jax.random.fold_in(k, pi))(gkeys)
+            stack[f"pos{pi}"] = jax.vmap(
+                lambda k: _init_layer(k, cfg, kind, dtype))(pkeys)
+        stacks.append(stack)
+    params["stacks"] = tuple(stacks)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _apply_mixer_full(kind, p, x, positions, cfg):
+    """Full-sequence mixer; returns (out, prefill_cache_entry)."""
+    if kind.mixer in ("gqa", "gqa_local"):
+        window = cfg.window if kind.mixer == "gqa_local" else None
+        out, (k, v) = attn.gqa_forward(
+            p, x, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            head_dim=cfg.head_dim, window=window,
+            attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            query_scale=cfg.query_scale, causal_unroll=cfg.attn_unroll)
+        return out, {"k": k, "v": v}
+    if kind.mixer == "mla":
+        m = cfg.mla
+        out, cache = attn.mla_forward(
+            p, x, positions, n_heads=cfg.n_heads, kv_lora=m.kv_lora,
+            rope_dim=m.rope_dim, nope_dim=m.nope_dim, v_dim=m.v_dim,
+            rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
+            kv_chunk=cfg.kv_chunk)
+        return out, cache
+    if kind.mixer == "ssm":
+        s = cfg.ssm
+        out, state = ssm_mod.ssm_forward(p, x, d_inner=s.d_inner,
+                                         head_p=s.head_p, state_n=s.state_n,
+                                         chunk=s.chunk)
+        return out, {"state": state}
+    if kind.mixer == "rglru":
+        out, state = rglru_mod.rglru_forward(p, x, width=cfg.rglru.width)
+        return out, {"state": state}
+    raise ValueError(kind.mixer)
+
+
+def _apply_layer_full(kind, p, x, positions, cfg):
+    h = L.rms_norm(x, p["ln1_norm_scale"])
+    out, _ = _apply_mixer_full(kind, p["mixer"], h, positions, cfg)
+    if cfg.post_norms:
+        out = L.rms_norm(out, p["post1_norm_scale"])
+    x = constrain(x + out, "batch", None, None)
+    if kind.mlp != "none":
+        h = L.rms_norm(x, p["ln2_norm_scale"])
+        if kind.mlp == "moe":
+            out = moe_mod.apply_moe(p["mlp"], h, top_k=cfg.moe.top_k,
+                                    act=cfg.mlp_act,
+                                    capacity_factor=cfg.moe.capacity_factor)
+        else:
+            out = L.apply_mlp(p["mlp"], h, cfg.mlp_act)
+        if cfg.post_norms:
+            out = L.rms_norm(out, p["post2_norm_scale"])
+        x = constrain(x + out, "batch", None, None)
+    return x
+
+
+def _apply_stack_full(spec: StackSpec, stack_params, x, positions, cfg):
+    def body(carry, group_params):
+        h = carry
+        for pi, kind in enumerate(spec.pattern):
+            h = _apply_layer_full(kind, group_params[f"pos{pi}"], h,
+                                  positions, cfg)
+        return h, None
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.checkpoint_dots
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    x, _ = jax.lax.scan(body, x, stack_params)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, tokens, patch_embeds=None):
+    x = params["embed_tok"][tokens]
+    if cfg.emb_scale is not None:
+        x = x * jnp.asarray(cfg.emb_scale, x.dtype)
+    if cfg.pos_embed == "sinusoidal":
+        s = tokens.shape[1]
+        pos = jnp.arange(s)
+        x = x + L.sinusoidal_positions(pos, cfg.d_model)[None].astype(x.dtype)
+    if cfg.vlm_patches and patch_embeds is not None:
+        x = jax.lax.dynamic_update_slice(
+            x, patch_embeds.astype(x.dtype), (0, 0, 0))
+    return constrain(x, "batch", None, None)
+
+
+def _head(params, cfg, x):
+    x = L.rms_norm(x, params["final_norm_scale"])
+    if cfg.tie_embeddings:
+        logits = x @ params["embed_tok"].T
+    else:
+        logits = x @ params["head_w"]
+    logits = constrain(logits, "batch", None, "vocab")
+    return L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens: Array,
+            patch_embeds: Optional[Array] = None) -> Array:
+    """[B, S] tokens → [B, S, V] logits (f32)."""
+    s = tokens.shape[1]
+    positions = jnp.arange(s)
+    x = _embed(params, cfg, tokens, patch_embeds)
+    for spec, sp in zip(cfg.stacks, params["stacks"]):
+        x = _apply_stack_full(spec, sp, x, positions, cfg)
+    return _head(params, cfg, x)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict) -> Array:
+    """Mean next-token cross-entropy.  batch: tokens, labels[, patch_embeds]."""
+    logits = forward(params, cfg, batch["tokens"],
+                     batch.get("patch_embeds"))
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# --- caches -----------------------------------------------------------------
+
+def _init_layer_cache(kind: LayerKind, cfg: ModelConfig, batch: int,
+                      capacity: int, dtype):
+    if kind.mixer == "gqa":
+        return attn.init_kv_cache(batch, capacity, cfg.n_kv, cfg.head_dim,
+                                  dtype=dtype)
+    if kind.mixer == "gqa_local":
+        cap = min(capacity, cfg.window or capacity)
+        return attn.init_kv_cache(batch, cap, cfg.n_kv, cfg.head_dim,
+                                  dtype=dtype)
+    if kind.mixer == "mla":
+        m = cfg.mla
+        return attn.init_mla_cache(batch, capacity, m.kv_lora, m.rope_dim, dtype)
+    if kind.mixer == "ssm":
+        s = cfg.ssm
+        return ssm_mod.init_ssm_cache(batch, s.d_inner, s.head_p, s.state_n,
+                                      s.conv_w, dtype)
+    if kind.mixer == "rglru":
+        return rglru_mod.init_rglru_cache(batch, cfg.rglru.width,
+                                          cfg.rglru.conv_w, dtype)
+    raise ValueError(kind.mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.float32):
+    """Stacked caches mirroring the param stacks: leaves [G, ...]."""
+    caches = []
+    for spec in cfg.stacks:
+        stack = {}
+        for pi, kind in enumerate(spec.pattern):
+            one = _init_layer_cache(kind, cfg, batch, capacity, dtype)
+            stack[f"pos{pi}"] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (spec.groups,) + x.shape),
+                one)
+        caches.append(stack)
+    return tuple(caches)
+
+
+def _apply_mixer_decode(kind, p, x_t, cache, pos, cfg):
+    if kind.mixer in ("gqa", "gqa_local"):
+        local = kind.mixer == "gqa_local"
+        return attn.gqa_decode(p, x_t, cache, pos, n_heads=cfg.n_heads,
+                               n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                               ring=local, window=cfg.window if local else None,
+                               attn_softcap=cfg.attn_softcap,
+                               rope_theta=cfg.rope_theta,
+                               query_scale=cfg.query_scale)
+    if kind.mixer == "mla":
+        m = cfg.mla
+        return attn.mla_decode(p, x_t, cache, pos, n_heads=cfg.n_heads,
+                               kv_lora=m.kv_lora, rope_dim=m.rope_dim,
+                               nope_dim=m.nope_dim, v_dim=m.v_dim,
+                               rope_theta=cfg.rope_theta)
+    if kind.mixer == "ssm":
+        s = cfg.ssm
+        return ssm_mod.ssm_decode(p, x_t, cache, d_inner=s.d_inner,
+                                  head_p=s.head_p, state_n=s.state_n)
+    if kind.mixer == "rglru":
+        return rglru_mod.rglru_decode(p, x_t, cache, width=cfg.rglru.width)
+    raise ValueError(kind.mixer)
+
+
+def _apply_layer_decode(kind, p, x_t, cache, pos, cfg):
+    h = L.rms_norm(x_t, p["ln1_norm_scale"])
+    out, cache = _apply_mixer_decode(kind, p["mixer"], h, cache, pos, cfg)
+    if cfg.post_norms:
+        out = L.rms_norm(out, p["post1_norm_scale"])
+    x_t = x_t + out
+    if kind.mlp != "none":
+        h = L.rms_norm(x_t, p["ln2_norm_scale"])
+        if kind.mlp == "moe":
+            out = moe_mod.apply_moe(p["mlp"], h, top_k=cfg.moe.top_k,
+                                    act=cfg.mlp_act,
+                                    capacity_factor=cfg.moe.capacity_factor)
+        else:
+            out = L.apply_mlp(p["mlp"], h, cfg.mlp_act)
+        if cfg.post_norms:
+            out = L.rms_norm(out, p["post2_norm_scale"])
+        x_t = x_t + out
+    return x_t, cache
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens_t: Array, pos):
+    """serve_step: one new token per sequence with existing caches.
+
+    tokens_t: [B, 1] int32; pos: scalar int32 (current position).
+    Returns (logits [B, 1, V], new caches).
+    """
+    x = params["embed_tok"][tokens_t]
+    if cfg.emb_scale is not None:
+        x = x * jnp.asarray(cfg.emb_scale, x.dtype)
+    if cfg.pos_embed == "sinusoidal":
+        x = x + L.sinusoidal_positions(
+            jnp.asarray(pos)[None], cfg.d_model)[None].astype(x.dtype)
+
+    new_caches = []
+    for spec, sp, sc in zip(cfg.stacks, params["stacks"], caches):
+        def body(carry, xs):
+            h = carry
+            gp, gc = xs
+            new_gc = {}
+            for pi, kind in enumerate(spec.pattern):
+                h, c = _apply_layer_decode(kind, gp[f"pos{pi}"], h,
+                                           gc[f"pos{pi}"], pos, cfg)
+                new_gc[f"pos{pi}"] = c
+            return h, new_gc
+
+        x, nc = jax.lax.scan(body, x, (sp, sc))
+        new_caches.append(nc)
+    return _head(params, cfg, x), tuple(new_caches)
+
+
+def prefill(params, cfg: ModelConfig, tokens: Array,
+            patch_embeds: Optional[Array] = None,
+            last_logits_only: bool = False):
+    """Forward over the prompt, emitting logits + caches for decode.
+
+    ``last_logits_only=True`` (the serving configuration) heads only the
+    final position — full-sequence f32 logits over a 150k-250k vocab are
+    a multi-GB/chip buffer that serving never needs (observed: 40-69 GB
+    peaks on the 32k-prefill dry-runs before this flag).
+
+    Note: emits *full-length* caches for gqa/mla layers (capacity = S);
+    ring-buffer layers keep the last ``window`` entries.
+    """
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    x = _embed(params, cfg, tokens, patch_embeds)
+    caches = []
+    for spec, sp in zip(cfg.stacks, params["stacks"]):
+        def body(carry, group_params):
+            h = carry
+            gcache = {}
+            for pi, kind in enumerate(spec.pattern):
+                p = group_params[f"pos{pi}"]
+                hin = L.rms_norm(h, p["ln1_norm_scale"])
+                out, centry = _apply_mixer_full(kind, p["mixer"], hin,
+                                                positions, cfg)
+                if cfg.post_norms:
+                    out = L.rms_norm(out, p["post1_norm_scale"])
+                h = h + out
+                if kind.mlp != "none":
+                    hin = L.rms_norm(h, p["ln2_norm_scale"])
+                    if kind.mlp == "moe":
+                        out = moe_mod.apply_moe(
+                            p["mlp"], hin, top_k=cfg.moe.top_k,
+                            act=cfg.mlp_act,
+                            capacity_factor=cfg.moe.capacity_factor)
+                    else:
+                        out = L.apply_mlp(p["mlp"], hin, cfg.mlp_act)
+                    if cfg.post_norms:
+                        out = L.rms_norm(out, p["post2_norm_scale"])
+                    h = h + out
+                gcache[f"pos{pi}"] = _prefill_cache_entry(kind, centry, cfg)
+            return h, gcache
+
+        x, stack_cache = jax.lax.scan(body, x, sp)
+        caches.append(stack_cache)
+    if last_logits_only:
+        x = x[:, -1:, :]
+    return _head(params, cfg, x), tuple(caches)
+
+
+def _prefill_cache_entry(kind: LayerKind, centry, cfg: ModelConfig):
+    """Convert a full-forward cache entry into decode-cache layout."""
+    if kind.mixer == "gqa":
+        return attn.KVCache(k=centry["k"], v=centry["v"])
+    if kind.mixer == "gqa_local":
+        w = cfg.window
+        k, v = centry["k"], centry["v"]
+        s = k.shape[1]
+        if s > w:
+            # last `w` entries laid out at ring slots (pos mod w)
+            k, v = k[:, -w:], v[:, -w:]
+            start = s - w
+            roll = -(start % w)
+            k = jnp.roll(k, roll, axis=1)
+            v = jnp.roll(v, roll, axis=1)
+        return attn.KVCache(k=k, v=v)
+    if kind.mixer == "mla":
+        return attn.MLACache(c_kv=centry["c_kv"], k_rope=centry["k_rope"])
+    if kind.mixer == "ssm":
+        s = cfg.ssm
+        b = centry["state"].shape[0]
+        # conv tail not tracked in chunked prefill path: zeros (drop-in for
+        # shape cells; exact streaming handoff is in tests via decode replay)
+        return ssm_mod.SSMCache(
+            state=centry["state"],
+            conv_x=jnp.zeros((b, s.conv_w - 1, s.d_inner), jnp.float32),
+            conv_b=jnp.zeros((b, s.conv_w - 1, s.state_n), jnp.float32),
+            conv_c=jnp.zeros((b, s.conv_w - 1, s.state_n), jnp.float32))
+    if kind.mixer == "rglru":
+        r = cfg.rglru
+        return rglru_mod.RGLRUCache(
+            state=centry["state"],
+            conv=jnp.zeros((centry["state"].shape[0], r.conv_w - 1, r.width),
+                           jnp.float32))
+    raise ValueError(kind.mixer)

@@ -1,0 +1,60 @@
+"""LR schedules, including the paper's clipped LC rule and MiniCPM's WSD.
+
+The LC clipped schedule (paper §3.3): η′_t = min(η_t, 1/μ).  As μ grows
+the permissible step shrinks, which keeps the L step stable against the
+μ(w - w_C) penalty gradient (our core smoke study reproduced the
+divergence without it).  ``lc_clip`` wraps *any* base schedule.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[..., jnp.ndarray]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exponential(lr0: float, decay: float, steps_per_decay: int) -> Schedule:
+    """Paper §5.3 style: α · γ^j with j advanced every ``steps_per_decay``."""
+    def f(step):
+        j = jnp.asarray(step) // steps_per_decay
+        return jnp.asarray(lr0, jnp.float32) * decay ** j.astype(jnp.float32)
+    return f
+
+
+def cosine(lr0: float, total_steps: int, warmup: int = 0,
+           final_frac: float = 0.1) -> Schedule:
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr0 * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = final_frac * lr0 + (1 - final_frac) * lr0 * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def wsd(lr0: float, total_steps: int, warmup_frac: float = 0.01,
+        decay_frac: float = 0.1) -> Schedule:
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395)."""
+    warm = max(1, int(total_steps * warmup_frac))
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = lr0 * step / warm
+        d = lr0 * 0.5 ** ((step - decay_start) /
+                          jnp.maximum(total_steps - decay_start, 1) * 6.0)
+        return jnp.where(step < warm, w,
+                         jnp.where(step < decay_start, lr0, d))
+    return f
+
+
+def lc_clip(base: Schedule) -> Callable:
+    """η′_t = min(η_t, 1/μ) — the paper's clipped LC schedule (§3.3)."""
+    def f(step, mu):
+        return jnp.minimum(base(step), 1.0 / jnp.maximum(mu, 1e-30))
+    return f

@@ -1,0 +1,69 @@
+"""Optimizers: SGD(+momentum/Nesterov) and AdamW — tiny optax-free
+implementations (pure pytrees, pjit-shardable like params).
+
+``init → (update, state)`` convention; ``update`` returns (new_params,
+new_state).  Learning rate is passed per-step (schedules live in
+repro/optim/schedules.py so the LC clipped-LR rule can wrap any of them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class SGDState(NamedTuple):
+    momentum: PyTree
+    step: jax.Array
+
+
+def sgd_init(params: PyTree) -> SGDState:
+    return SGDState(momentum=jax.tree_util.tree_map(jnp.zeros_like, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def sgd_update(params: PyTree, grads: PyTree, state: SGDState, lr,
+               momentum: float = 0.9, nesterov: bool = True,
+               weight_decay: float = 0.0) -> Tuple[PyTree, SGDState]:
+    tm = jax.tree_util.tree_map
+    if weight_decay:
+        grads = tm(lambda g, p: g + weight_decay * p, grads, params)
+    new_m = tm(lambda m, g: momentum * m + g, state.momentum, grads)
+    if nesterov:
+        new_p = tm(lambda p, g, m: p - lr * (g + momentum * m),
+                   params, grads, new_m)
+    else:
+        new_p = tm(lambda p, m: p - lr * m, params, new_m)
+    return new_p, SGDState(momentum=new_m, step=state.step + 1)
+
+
+class AdamWState(NamedTuple):
+    m: PyTree
+    v: PyTree
+    step: jax.Array
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    z = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamWState(m=z(), v=z(), step=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(params: PyTree, grads: PyTree, state: AdamWState, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.0) -> Tuple[PyTree, AdamWState]:
+    tm = jax.tree_util.tree_map
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = tm(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads)
+    new_v = tm(lambda v, g: b2 * v + (1 - b2) * g * g, state.v, grads)
+    new_p = tm(
+        lambda p, m, v: p - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                                  + weight_decay * p),
+        params, new_m, new_v)
+    return new_p, AdamWState(m=new_m, v=new_v, step=step)

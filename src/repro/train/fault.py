@@ -1,0 +1,114 @@
+"""Fault tolerance: supervised step loop with checkpoint/restart.
+
+On a real cluster the failure signals are coordinator heartbeats /
+preemption notices; in this container we exercise the identical control
+flow with injected failures, which is what the restart logic actually has
+to survive:
+
+* ``FailureInjector`` raises ``SimulatedNodeFailure`` at configured steps
+  (tests also inject at *checkpoint-write* time to verify atomicity);
+* ``supervised_run`` catches failures, restores the last checkpoint
+  (params/opt/LC state + data cursor) and resumes, with bounded restarts
+  and exponential backoff;
+* ``PreemptionSignal`` triggers a save-and-exit (SIGTERM-style handling).
+
+Straggler mitigation is structural (DESIGN §9): prefetch depth ≥ 2,
+C step fused into the jitted program, pod-axis gradient compression.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Set
+
+from repro.train import checkpoint as ckpt
+
+
+class SimulatedNodeFailure(RuntimeError):
+    pass
+
+
+class PreemptionSignal(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    fail_at_steps: Set[int] = dataclasses.field(default_factory=set)
+    preempt_at: Optional[int] = None
+    _fired: Set[int] = dataclasses.field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedNodeFailure(f"injected failure at step {step}")
+        if self.preempt_at is not None and step == self.preempt_at:
+            self.preempt_at = None
+            raise PreemptionSignal(f"preempted at step {step}")
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    max_restarts: int = 5
+    backoff_s: float = 0.0            # 0 in tests; seconds on real clusters
+    keep: int = 3
+
+
+def supervised_run(
+    *,
+    state: Any,
+    make_batches: Callable[[int], Iterator],   # start_step → batch iterator
+    step_fn: Callable[[Any, Any], Any],        # (state, batch) → (state, metrics)
+    num_steps: int,
+    cfg: SupervisorConfig,
+    injector: Optional[FailureInjector] = None,
+    extra_state: Optional[Dict] = None,
+) -> Any:
+    """Run ``num_steps`` with checkpoint/restart supervision.
+
+    ``state`` must be a pytree (TrainState works).  The data iterator is
+    re-created from the restored step so the stream resumes exactly.
+    Returns the final state.
+    """
+    restarts = 0
+    step = int(getattr(state, "step", 0))
+    start_state = state
+
+    while True:
+        try:
+            batches = make_batches(step)
+            while step < num_steps:
+                if injector is not None:
+                    injector.check(step)
+                state, metrics = step_fn(state, next(batches))
+                step += 1
+                if step % cfg.ckpt_every == 0 or step == num_steps:
+                    ckpt.save_checkpoint(
+                        cfg.ckpt_dir, step, state,
+                        extra={"data_step": step, **(extra_state or {})},
+                        keep=cfg.keep)
+            return state
+
+        except PreemptionSignal:
+            ckpt.save_checkpoint(cfg.ckpt_dir, step, state,
+                                 extra={"data_step": step,
+                                        **(extra_state or {})},
+                                 keep=cfg.keep)
+            raise
+
+        except SimulatedNodeFailure:
+            restarts += 1
+            if restarts > cfg.max_restarts:
+                raise
+            if cfg.backoff_s:
+                time.sleep(min(cfg.backoff_s * 2 ** (restarts - 1), 60.0))
+            last = ckpt.latest_step(cfg.ckpt_dir)
+            if last is None:
+                # no checkpoint yet — restart from scratch
+                state, step = start_state, int(getattr(start_state, "step", 0))
+                continue
+            state, extra, step = ckpt.restore_checkpoint(
+                cfg.ckpt_dir, like=state)
+            step = int(extra.get("data_step", step))

@@ -1,0 +1,177 @@
+"""Training runtime: the L step as ordinary (distributed) training.
+
+``make_train_step`` builds a jittable step:
+    grads = ∇L(w)  (+ LC penalty gradient μ(w - w_C) - λ, elementwise)
+    w ← optimizer(w, grads, lr)         lr = min(η_t, 1/μ)  (clipped rule)
+
+``LCTrainer`` owns the outer LC loop: run `steps_per_l` train steps (the
+L step, eq. 4), then the C step (eq. 5) + multiplier/μ update — matching
+the paper's pseudocode (figs. 2-4) with warm-started k-means.  The C step
+is also jitted; both steps carry the same shardings, so under pjit the
+whole LC iteration runs without host round-trips beyond the loop itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lc as lc_mod
+from repro.core.schemes import Scheme
+from repro.optim import schedules as sched
+from repro.optim import sgd as opt_mod
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt_state: Any
+    lc_state: Optional[lc_mod.LCState]
+    step: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    optimizer: str = "sgd"            # sgd | adamw
+    lr: float = 0.05
+    momentum: float = 0.95
+    nesterov: bool = True
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = None
+    steps_per_l: int = 200            # SGD steps per L step
+    schedule: str = "constant"        # constant | exponential | cosine | wsd
+    schedule_kwargs: tuple = ()
+    total_steps: int = 10000
+
+
+def _base_schedule(tc: TrainerConfig):
+    kw = dict(tc.schedule_kwargs)
+    if tc.schedule == "constant":
+        return sched.constant(tc.lr)
+    if tc.schedule == "exponential":
+        return sched.exponential(tc.lr, kw.get("decay", 0.99),
+                                 kw.get("steps_per_decay", tc.steps_per_l))
+    if tc.schedule == "cosine":
+        return sched.cosine(tc.lr, tc.total_steps, kw.get("warmup", 0))
+    if tc.schedule == "wsd":
+        return sched.wsd(tc.lr, tc.total_steps)
+    raise ValueError(tc.schedule)
+
+
+def _global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.vdot(g, g).real
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def make_train_step(
+    loss_fn: Callable[[PyTree, Any], jax.Array],
+    tc: TrainerConfig,
+    qspec: Optional[PyTree] = None,
+) -> Callable[[TrainState, Any], Tuple[TrainState, Dict[str, jax.Array]]]:
+    """Build the jittable train step (the inner loop of the L step).
+
+    ``loss_fn(params, batch) -> scalar``.  When the state carries an
+    LCState, the penalty gradient is added (zero communication: it is
+    elementwise on the weight shards).
+    """
+    base = _base_schedule(tc)
+    clipped = sched.lc_clip(base)
+
+    def step_fn(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        metrics = {"loss": loss}
+
+        if state.lc_state is not None:
+            pg = lc_mod.penalty_grad(state.params, state.lc_state, qspec)
+            grads = jax.tree_util.tree_map(jnp.add, grads, pg)
+            lr = clipped(state.step, state.lc_state.mu)
+            metrics["mu"] = state.lc_state.mu
+        else:
+            lr = base(state.step)
+        metrics["lr"] = lr
+
+        if tc.grad_clip is not None:
+            gn = _global_norm(grads)
+            scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gn, 1e-12))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+            metrics["grad_norm"] = gn
+
+        if tc.optimizer == "sgd":
+            params, opt_state = opt_mod.sgd_update(
+                state.params, grads, state.opt_state, lr,
+                momentum=tc.momentum, nesterov=tc.nesterov,
+                weight_decay=tc.weight_decay)
+        else:
+            params, opt_state = opt_mod.adamw_update(
+                state.params, grads, state.opt_state, lr,
+                weight_decay=tc.weight_decay)
+
+        return TrainState(params, opt_state, state.lc_state,
+                          state.step + 1), metrics
+
+    return step_fn
+
+
+def init_train_state(params: PyTree, tc: TrainerConfig,
+                     lc_state: Optional[lc_mod.LCState] = None) -> TrainState:
+    opt_state = (opt_mod.sgd_init(params) if tc.optimizer == "sgd"
+                 else opt_mod.adamw_init(params))
+    return TrainState(params=params, opt_state=opt_state, lc_state=lc_state,
+                      step=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# LC outer loop (host-side driver)
+# ---------------------------------------------------------------------------
+
+class LCTrainer:
+    """Paper figs. 2-4: alternate L steps (SGD epochs) with C steps."""
+
+    def __init__(self, loss_fn, scheme: Scheme, qspec, lc_cfg: lc_mod.LCConfig,
+                 tc: TrainerConfig, jit: bool = True):
+        self.loss_fn = loss_fn
+        self.scheme = scheme
+        self.qspec = qspec
+        self.lc_cfg = lc_cfg
+        self.tc = tc
+        self._train_step = make_train_step(loss_fn, tc, qspec)
+        self._c_step = functools.partial(
+            lc_mod.c_step, scheme=scheme, qspec=qspec, config=lc_cfg)
+        if jit:
+            self._train_step = jax.jit(self._train_step)
+            self._c_step = jax.jit(self._c_step,
+                                   static_argnames=("advance_mu",))
+
+    def init(self, key, params) -> TrainState:
+        lc_state = lc_mod.lc_init(key, params, self.scheme, self.qspec,
+                                  self.lc_cfg)
+        return init_train_state(params, self.tc, lc_state)
+
+    def run(self, state: TrainState, batches, log_every: int = 0,
+            callback: Optional[Callable] = None) -> TrainState:
+        """Full LC optimization: num_lc_iters × (L step; C step)."""
+        for j in range(self.lc_cfg.num_lc_iters):
+            for inner in range(max(1, self.lc_cfg.inner_alternations)):
+                for _ in range(self.tc.steps_per_l):
+                    state, metrics = self._train_step(state, next(batches))
+                advance = inner == self.lc_cfg.inner_alternations - 1
+                new_lc = self._c_step(state.params, state.lc_state,
+                                      advance_mu=advance)
+                state = state._replace(lc_state=new_lc)
+            gap = lc_mod.feasibility_gap(state.params, state.lc_state,
+                                         self.qspec)
+            if callback is not None:
+                callback(j, state, float(metrics["loss"]), float(gap))
+            if log_every and j % log_every == 0:
+                print(f"[LC {j:03d}] loss={float(metrics['loss']):.5f} "
+                      f"mu={float(state.lc_state.mu):.4g} gap={float(gap):.3e}")
+            if float(gap) < self.lc_cfg.tol:
+                break
+        return state
+
+    def finalize(self, state: TrainState) -> PyTree:
+        return lc_mod.finalize(state.params, state.lc_state, self.qspec)

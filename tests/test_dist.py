@@ -1,0 +1,198 @@
+"""Distributed semantics, run in subprocesses with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (tests in this process
+keep seeing 1 device, per the dry-run isolation rule).
+
+Covers: shard_map'd k-means == single-device k-means; histogram
+ternary-scale == exact sort solution; int8-compressed psum accuracy;
+elastic checkpoint reshard (save on 8-dev mesh, load on 4); sharding-rule
+divisibility validation."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(body: str) -> dict:
+    """Run ``body`` in a subprocess with 8 host devices; it must print a
+    JSON dict on the last line."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+    """) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=480)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_kmeans_equals_single_device():
+    res = run_sub("""
+        from repro.dist.cstep import sharded_kmeans
+        from repro.core.kmeans import kmeans_fit, quantile_init
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        w = jax.random.normal(jax.random.PRNGKey(0), (4096,))
+        cb0 = quantile_init(w, 4)
+        cb_d, assign_d, dist_d = sharded_kmeans(w, cb0, mesh, iters=20,
+                                                axis="model")
+        res_s = kmeans_fit(w, cb0, iters=20)
+        print(json.dumps({
+            "cb_close": bool(np.allclose(np.asarray(cb_d),
+                                         np.asarray(res_s.codebook),
+                                         rtol=1e-5, atol=1e-6)),
+            "dist_close": bool(np.isclose(float(dist_d),
+                                          float(res_s.distortion),
+                                          rtol=1e-5)),
+        }))
+    """)
+    assert res["cb_close"] and res["dist_close"]
+
+
+def test_histogram_ternary_scale_matches_exact():
+    res = run_sub("""
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.cstep import ternary_scale_histogram
+        from repro.core.quant_ops import ternarize_scale
+        mesh = jax.make_mesh((8,), ("model",))
+        w = jax.random.normal(jax.random.PRNGKey(1), (8192,))
+        @partial(shard_map, mesh=mesh, in_specs=P("model"),
+                 out_specs=P(None), check_rep=False)
+        def dist_scale(ws):
+            return ternary_scale_histogram(ws, "model")[None]
+        a_d = float(dist_scale(w)[0])
+        _, a_exact = ternarize_scale(w)
+        print(json.dumps({"a_d": a_d, "a_exact": float(a_exact)}))
+    """)
+    assert res["a_d"] == pytest.approx(res["a_exact"], rel=2e-3)
+
+
+def test_compressed_psum_accuracy():
+    res = run_sub("""
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.cstep import compressed_psum
+        mesh = jax.make_mesh((8,), ("pod",))
+        g = jax.random.normal(jax.random.PRNGKey(2), (8, 4096)) \
+            * jnp.logspace(-2, 0, 8)[:, None]   # heterogeneous scales
+        @partial(shard_map, mesh=mesh, in_specs=P("pod", None),
+                 out_specs=P("pod", None), check_rep=False)
+        def comp(x):
+            return compressed_psum(x[0], "pod")[None]
+        @partial(shard_map, mesh=mesh, in_specs=P("pod", None),
+                 out_specs=P("pod", None), check_rep=False)
+        def exact(x):
+            return jax.lax.psum(x[0], "pod")[None]
+        c = np.asarray(comp(g))[0]
+        e = np.asarray(exact(g))[0]
+        rel = float(np.linalg.norm(c - e) / np.linalg.norm(e))
+        print(json.dumps({"rel_err": rel}))
+    """)
+    assert res["rel_err"] < 0.02
+
+
+def test_elastic_checkpoint_reshard():
+    res = run_sub("""
+        import tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.train import checkpoint as ckpt
+        tmp = tempfile.mkdtemp()
+        mesh8 = jax.make_mesh((2, 4), ("data", "model"))
+        x = jnp.arange(64.0).reshape(8, 8)
+        xs = jax.device_put(x, NamedSharding(mesh8, P(None, "model")))
+        ckpt.save_checkpoint(tmp, 1, {"w": xs})
+        mesh4 = jax.make_mesh((2, 2), ("data", "model"))
+        sh = {"w": NamedSharding(mesh4, P("model", None))}
+        out, _, _ = ckpt.restore_checkpoint(tmp, like={"w": x}, shardings=sh)
+        ok = bool(np.allclose(np.asarray(out["w"]), np.asarray(x)))
+        nshards = len(out["w"].sharding.device_set)
+        print(json.dumps({"ok": ok, "nshards": nshards}))
+    """)
+    assert res["ok"] and res["nshards"] == 4
+
+
+def test_param_sharding_rules_divisibility():
+    res = run_sub("""
+        from repro.dist.sharding import param_shardings
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        params = {
+            "embed_tok": jnp.zeros((50281, 64)),      # 50281 % 4 != 0
+            "stacks": ({"pos0": {"mixer": {"wq": jnp.zeros((2, 64, 64))},
+                                 "mlp": {"w_in": jnp.zeros((2, 64, 128))}}},),
+        }
+        sh = param_shardings(params, mesh)
+        emb = sh["embed_tok"].spec
+        wq = sh["stacks"][0]["pos0"]["mixer"]["wq"].spec
+        w_in = sh["stacks"][0]["pos0"]["mlp"]["w_in"].spec
+        print(json.dumps({"emb": str(emb), "wq": str(wq),
+                          "w_in": str(w_in)}))
+    """)
+    assert "model" not in res["emb"]               # dropped: not divisible
+    assert res["wq"] == "PartitionSpec(None, None, 'model')"
+    assert res["w_in"] == "PartitionSpec(None, None, 'model')"
+
+
+def test_debug_mesh_dryrun_tiny():
+    """End-to-end mini dry-run on an 8-device (2,2,2) multi-pod mesh:
+    lower+compile the reduced qwen train step with production shardings."""
+    res = run_sub("""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config, reduce_config
+        from repro.dist import sharding as shard_rules
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models import sharding_ctx
+        from repro.models import transformer as tfm
+        mesh = make_debug_mesh(2, 2, pods=2)
+        cfg = reduce_config(get_config("qwen1.5-0.5b"))
+        sharding_ctx.set_policy(sharding_ctx.Policy(mesh, mode="tp"))
+        params_sh = jax.eval_shape(
+            lambda k: tfm.init_params(k, cfg, jnp.bfloat16),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        p_shard = shard_rules.param_shardings(params_sh, mesh)
+        batch = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
+        b_shard = shard_rules.batch_shardings(batch, mesh)
+        def loss(p, b):
+            return tfm.loss_fn(p, cfg, b)
+        with mesh:
+            compiled = jax.jit(loss, in_shardings=(p_shard, b_shard),
+                               out_shardings=NamedSharding(mesh, P())
+                               ).lower(params_sh, batch).compile()
+        mem = compiled.memory_analysis()
+        print(json.dumps({"ok": True,
+                          "peak": int(mem.peak_memory_in_bytes)}))
+    """)
+    assert res["ok"] and res["peak"] > 0
+
+
+def test_moe_ep_shard_map_equals_vmap():
+    """Rank-local EP dispatch (shard_map) == the local vmap path."""
+    res = run_sub("""
+        from repro.models.moe import apply_moe, init_moe
+        from repro.models import sharding_ctx
+        key = jax.random.PRNGKey(0)
+        p = init_moe(key, 16, 8, 8, 1, "silu")
+        x = jax.random.normal(key, (4, 16, 16))
+        y_ref = apply_moe(p, x, top_k=2, capacity_factor=4.0)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        sharding_ctx.set_policy(sharding_ctx.Policy(mesh, mode="tp"))
+        with mesh:
+            y_ep = jax.jit(lambda p, x: apply_moe(p, x, top_k=2,
+                                                  capacity_factor=4.0))(p, x)
+        ok = bool(np.allclose(np.asarray(y_ref), np.asarray(y_ep),
+                              rtol=2e-4, atol=2e-5))
+        print(json.dumps({"ok": ok}))
+    """)
+    assert res["ok"]

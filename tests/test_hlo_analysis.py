@@ -1,0 +1,66 @@
+"""Unit tests for the static HLO analyzer (the roofline's data source):
+trip-count multiplication, collective byte conventions, dot FLOPs via the
+symbol table — against a hand-written HLO text fixture."""
+from repro.launch import hlo_analysis as H
+
+FIXTURE = """
+HloModule jit_fn, entry_computation_layout={()->f32[8,8]{1,0}}
+
+%body.1 (param.0: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %param.0 = (s32[], f32[128,256]{1,0}) parameter(0)
+  %gte.0 = s32[] get-tuple-element(%param.0), index=0
+  %gte.1 = f32[128,256]{1,0} get-tuple-element(%param.0), index=1
+  %w = f32[256,256]{1,0} constant(0)
+  %dot.1 = f32[128,256]{1,0} dot(%gte.1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar.1 = f32[128,256]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups=[4,2]<=[8]
+  %one = s32[] constant(1)
+  %next = s32[] add(%gte.0, %one)
+  ROOT %tup = (s32[], f32[128,256]{1,0}) tuple(%next, %ar.1)
+}
+
+%cond.1 (param.1: (s32[], f32[128,256])) -> pred[] {
+  %param.1 = (s32[], f32[128,256]{1,0}) parameter(0)
+  %gte.2 = s32[] get-tuple-element(%param.1), index=0
+  %trip = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%gte.2, %trip), direction=LT
+}
+
+ENTRY %main.1 (arg: f32[128,256]) -> f32[8,8] {
+  %arg = f32[128,256]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[128,256]{1,0}) tuple(%zero, %arg)
+  %while.1 = (s32[], f32[128,256]{1,0}) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"12"}}
+  %gte.3 = f32[128,256]{1,0} get-tuple-element(%while.1), index=1
+  %w2 = f32[256,8]{1,0} constant(0)
+  %dot.2 = f32[128,8]{1,0} dot(%gte.3, %w2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag.1 = f32[64,8]{1,0} all-gather(%dot.2), dimensions={0}, channel_id=2
+  %rs.1 = f32[8,8]{1,0} reduce-scatter(%ag.1), dimensions={0}, channel_id=3, to_apply=%add.1
+  ROOT %out = f32[8,8]{1,0} copy(%rs.1)
+}
+"""
+
+
+def test_collective_bytes_with_trip_counts():
+    res = H.analyze(FIXTURE)
+    bd = res["collective_breakdown"]
+    # all-reduce inside the while: 128·256·4 B × 12 trips
+    assert bd["all-reduce"] == 128 * 256 * 4 * 12
+    # all-gather: output bytes, once
+    assert bd["all-gather"] == 64 * 8 * 4
+    # reduce-scatter: OPERAND bytes (the all-gather output)
+    assert bd["reduce-scatter"] == 64 * 8 * 4
+
+
+def test_dot_flops_with_symbol_table():
+    res = H.analyze(FIXTURE)
+    # dot.1: 2·(128·256)·256 per trip × 12; dot.2: 2·(128·8)·256 once
+    expected = 2 * 128 * 256 * 256 * 12 + 2 * 128 * 8 * 256
+    assert res["dot_flops"] == expected
+
+
+def test_trip_count_fallback_from_condition():
+    # strip backend_config → the parser must recover trip=12 from %cond.1
+    text = FIXTURE.replace(
+        ', backend_config={"known_trip_count":{"n":"12"}}', "")
+    res = H.analyze(text)
+    assert res["collective_breakdown"]["all-reduce"] == 128 * 256 * 4 * 12

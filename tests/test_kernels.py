@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape/dtype
+sweeps + hypothesis fuzzing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("p", [3, 100, 1024, 4096, 70001])
+@pytest.mark.parametrize("k", [2, 3, 16, 64])
+def test_kmeans_assign_matches_ref(p, k):
+    key = jax.random.PRNGKey(p * 131 + k)
+    w = jax.random.normal(key, (p,))
+    cb = jnp.sort(jax.random.normal(jax.random.fold_in(key, 1), (k,)))
+    a1, s1, c1 = ops.kmeans_assign(w, cb)
+    a2, s2, c2 = ref.kmeans_assign_ref(w, cb)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=0.5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kmeans_assign_dtypes(dtype):
+    w = jax.random.normal(jax.random.PRNGKey(0), (2048,)).astype(dtype)
+    cb = jnp.asarray([-1.0, 0.0, 1.0])
+    a1, s1, c1 = ops.kmeans_assign(w, cb)
+    a2, s2, c2 = ref.kmeans_assign_ref(w.astype(jnp.float32), cb)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+@pytest.mark.parametrize("m,kd,n", [(8, 32, 16), (128, 512, 128),
+                                    (100, 300, 77), (1, 2048, 1)])
+@pytest.mark.parametrize("k", [2, 4, 256])
+def test_codebook_matmul_matches_ref(m, kd, n, k):
+    key = jax.random.PRNGKey(m + n + k)
+    x = jax.random.normal(key, (m, kd), jnp.float32)
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (kd, n), 0, k
+                             ).astype(jnp.uint8 if k <= 256 else jnp.int32)
+    cb = jax.random.normal(jax.random.fold_in(key, 2), (k,))
+    y1 = ops.codebook_matmul(x, idx, cb, bm=32, bn=32, bk=64)
+    y2 = ref.codebook_matmul_ref(x, idx, cb)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=3e-5, atol=3e-4)
+
+
+def test_codebook_matmul_bf16_activations():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 128), jnp.bfloat16)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (128, 64), 0, 4
+                             ).astype(jnp.uint8)
+    cb = jnp.asarray([-0.5, -0.1, 0.1, 0.5])
+    y1 = ops.codebook_matmul(x, idx, cb, bm=32, bn=32, bk=64)
+    y2 = ref.codebook_matmul_ref(x, idx, cb)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32),
+                               rtol=2e-2, atol=2e-1)
+
+
+@pytest.mark.parametrize("mode", ["binary", "ternary", "pow2"])
+@pytest.mark.parametrize("shape", [(5,), (100,), (33, 77), (8, 1024)])
+def test_fixed_quant_matches_ref(mode, shape):
+    w = 2.0 * jax.random.normal(jax.random.PRNGKey(42), shape)
+    q1 = ops.fixed_quant(w, mode)
+    q2 = ref.fixed_quant_ref(w, mode)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@pytest.mark.parametrize("scale", [0.5, 1.0, 2.3])
+def test_fixed_quant_scale(scale):
+    w = jax.random.normal(jax.random.PRNGKey(7), (999,))
+    q1 = ops.fixed_quant(w, "ternary", scale=scale)
+    q2 = ref.fixed_quant_ref(w, "ternary", scale=scale)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 3000), st.integers(2, 32), st.integers(0, 10 ** 6))
+def test_kmeans_assign_fuzz(p, k, seed):
+    key = jax.random.PRNGKey(seed)
+    w = 3 * jax.random.normal(key, (p,))
+    cb = jnp.sort(jax.random.normal(jax.random.fold_in(key, 1), (k,)))
+    a1, s1, c1 = ops.kmeans_assign(w, cb)
+    a2, s2, c2 = ref.kmeans_assign_ref(w, cb)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=0.5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-4, atol=2e-3)

@@ -1,0 +1,76 @@
+"""1-D k-means: exactness of the sorted assignment, monotone descent,
+warm-start behaviour (paper fig. 10), grouped vmap."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeans as KM
+
+
+def test_assignment_is_exact_nearest():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (2000,))
+    cb = jnp.sort(jax.random.normal(jax.random.PRNGKey(1), (8,)))
+    res = KM.kmeans_fit(w, cb, iters=1)
+    # after one iteration, assignments are nearest-centroid of the *input*
+    from repro.core.quant_ops import fixed_codebook_assign
+    a0 = fixed_codebook_assign(w, cb)
+    d = (np.asarray(w)[:, None] - np.asarray(cb)[None, :]) ** 2
+    np.testing.assert_array_equal(np.asarray(a0), np.argmin(d, axis=1))
+
+
+def test_distortion_descends():
+    key = jax.random.PRNGKey(0)
+    w = jnp.concatenate([jax.random.normal(key, (500,)) * 0.2,
+                         3 + jax.random.normal(key, (500,)) * 0.2])
+    cb = KM.quantile_init(w, 4)
+    prev = None
+    for iters in [1, 2, 4, 8, 16]:
+        res = KM.kmeans_fit(w, cb, iters=iters)
+        d = float(res.distortion)
+        if prev is not None:
+            assert d <= prev + 1e-6
+        prev = d
+
+
+def test_warm_start_converges_fast():
+    """Paper fig. 10: after the first C step, k-means needs ~1 iteration."""
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (5000,))
+    res1 = KM.kmeans_fit(w, KM.kmeans_plus_plus_init(key, w, 4), iters=50)
+    assert int(res1.iters_run) < 50
+    # perturb weights slightly (as an L step would) and warm start
+    w2 = w + 0.001 * jax.random.normal(jax.random.PRNGKey(3), w.shape)
+    res2 = KM.kmeans_fit(w2, res1.codebook, iters=50)
+    assert int(res2.iters_run) <= 3
+
+
+def test_weighted_equals_replicated():
+    key = jax.random.PRNGKey(4)
+    w = jax.random.normal(key, (100,))
+    nw = jnp.asarray(np.random.RandomState(0).randint(1, 4, 100), jnp.float32)
+    rep = jnp.repeat(w, np.asarray(nw, int))
+    cb0 = KM.quantile_init(rep, 3)
+    r_w = KM.kmeans_fit(w, cb0, iters=30, point_weights=nw)
+    r_r = KM.kmeans_fit(rep, cb0, iters=30)
+    np.testing.assert_allclose(np.asarray(r_w.codebook),
+                               np.asarray(r_r.codebook), rtol=1e-5, atol=1e-6)
+
+
+def test_grouped_vmap():
+    key = jax.random.PRNGKey(5)
+    w = jax.random.normal(key, (3, 1000))
+    cbs = KM.quantile_init_grouped(w, 4)
+    assert cbs.shape == (3, 4)
+    res = KM.kmeans_fit_grouped(w, cbs, 10)
+    assert res.codebook.shape == (3, 4)
+    assert res.assignments.shape == (3, 1000)
+    # each group's codebook sorted
+    assert bool(jnp.all(jnp.diff(res.codebook, axis=1) >= 0))
+
+
+def test_empty_cluster_keeps_centroid():
+    w = jnp.asarray([0.0, 0.1, 0.2])
+    cb = jnp.asarray([0.1, 100.0])          # second centroid acquires nothing
+    res = KM.kmeans_fit(w, cb, iters=5)
+    assert np.asarray(res.codebook)[1] == 100.0

@@ -1,0 +1,197 @@
+"""LC algorithm behaviour: DC limit, feasibility convergence, KKT
+stationarity with accurate path-following, LC ≥ DC on anisotropic losses,
+baselines (DC/iDC/BinaryConnect plumbing)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LCConfig, baselines, c_step, codebook_entry_count,
+                        default_qspec, feasibility_gap, finalize, lc_init,
+                        make_scheme, param_counts, penalty_grad)
+
+KEY = jax.random.PRNGKey(0)
+TARGET = jax.random.normal(jax.random.PRNGKey(2), (8, 16))
+
+
+def _params(w=None):
+    return {"layer": {"w": TARGET if w is None else w,
+                      "b": jnp.zeros((16,))}}
+
+
+def _quad_loss(p):
+    return jnp.mean((p["layer"]["w"] - TARGET) ** 2)
+
+
+def test_qspec_excludes_biases():
+    qspec = default_qspec(_params())
+    assert qspec["layer"]["w"].quantize
+    assert not qspec["layer"]["b"].quantize
+
+
+def test_lc_init_is_direct_compression():
+    """μ→0⁺ limit: w_C = Δ(Π(w̄)) — the DC point (paper §3.4)."""
+    params = _params()
+    qspec = default_qspec(params)
+    scheme = make_scheme("adaptive:2")
+    state = lc_init(KEY, params, scheme, qspec, LCConfig())
+    dc, _ = baselines.direct_compression(KEY, params, scheme, qspec)
+    np.testing.assert_allclose(np.asarray(state.w_c["layer"]["w"]),
+                               np.asarray(dc["layer"]["w"]), atol=1e-6)
+
+
+@pytest.mark.parametrize("scheme_spec", ["adaptive:2", "adaptive:4",
+                                         "binary", "ternary_scale",
+                                         "binary_scale", "pow2:4"])
+def test_lc_converges_feasible(scheme_spec):
+    """Every scheme: gap → 0 and final weights live in the codebook."""
+    params = _params()
+    qspec = default_qspec(params)
+    scheme = make_scheme(scheme_spec)
+    cfg = LCConfig(mu0=1e-2, mu_growth=1.5, num_lc_iters=30)
+    state = lc_init(KEY, params, scheme, qspec, cfg)
+
+    p = params
+    for _ in range(cfg.num_lc_iters):
+        lr = min(0.1, 1.0 / float(state.mu))
+        for _ in range(60):
+            g = jax.grad(_quad_loss)(p)
+            pg = penalty_grad(p, state, qspec)
+            p = jax.tree_util.tree_map(lambda x, a, b: x - lr * (a + b),
+                                       p, g, pg)
+        state = c_step(p, state, scheme, qspec, cfg)
+    gap = float(feasibility_gap(p, state, qspec))
+    assert gap < 5e-2, (scheme_spec, gap)
+    final = finalize(p, state, qspec)
+    uniq = np.unique(np.asarray(final["layer"]["w"]))
+    k_max = {"adaptive:2": 2, "adaptive:4": 4, "binary": 2,
+             "binary_scale": 2, "ternary_scale": 3, "pow2:4": 11}[scheme_spec]
+    assert len(uniq) <= k_max
+
+
+def test_lc_reaches_loss_optimal_quantization_anisotropic():
+    """With accurate path-following (slow μ, inner alternations) LC finds
+    the loss-optimal K=2 codebook of an anisotropic quadratic — beating
+    DC — and satisfies the KKT condition (cluster-mean gradient ≈ 0)."""
+    n = 128
+    t = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (n,)))
+    h = np.asarray([50.0] * 8 + [0.1] * 120)
+    hj, tj = jnp.asarray(h)[None, :], jnp.asarray(t)[None, :]
+
+    params = {"w": tj}
+    qspec = default_qspec(params)
+    scheme = make_scheme("adaptive:2")
+
+    def loss(p):
+        d = p["w"].ravel() - t
+        return jnp.sum(jnp.asarray(h) * d * d) / n
+
+    # loss-optimal = weighted 2-means (split search over sorted t)
+    order = np.argsort(t)
+    ts, hs = t[order], h[order]
+    best = 1e18
+    for split in range(1, n):
+        c1 = np.sum(hs[:split] * ts[:split]) / np.sum(hs[:split])
+        c2 = np.sum(hs[split:] * ts[split:]) / np.sum(hs[split:])
+        e = (np.sum(hs[:split] * (ts[:split] - c1) ** 2)
+             + np.sum(hs[split:] * (ts[split:] - c2) ** 2))
+        best = min(best, e / n)
+
+    cfg = LCConfig(mu0=1e-3, mu_growth=1.1, num_lc_iters=100,
+                   inner_alternations=3)
+    state = lc_init(KEY, params, scheme, qspec, cfg)
+    p = params
+    for j in range(cfg.num_lc_iters):
+        for inner in range(cfg.inner_alternations):
+            mu = state.mu
+            w = (2 * hj / n * tj + mu * state.w_c["w"] + state.lam["w"]) \
+                / (2 * hj / n + mu)                      # exact L step
+            p = {"w": w}
+            state = c_step(p, state, scheme, qspec, cfg,
+                           advance_mu=inner == cfg.inner_alternations - 1)
+
+    final = finalize(p, state, qspec)
+    lc_loss = float(loss(final))
+    dc, _ = baselines.direct_compression(KEY, params, scheme, qspec)
+    dc_loss = float(loss(dc))
+    assert lc_loss <= dc_loss + 1e-6, (lc_loss, dc_loss)
+    assert lc_loss <= best * 1.005, (lc_loss, best)
+
+    # KKT: cluster-mean gradient ~ 0
+    g = np.asarray(jax.grad(loss)(final)["w"]).ravel()
+    fw = np.asarray(final["w"]).ravel()
+    for c in np.unique(fw):
+        assert abs(g[fw == c].mean()) < 1e-3
+
+
+def test_idc_round_requantizes():
+    params = _params()
+    qspec = default_qspec(params)
+    scheme = make_scheme("adaptive:2")
+    _, state = baselines.direct_compression(KEY, params, scheme, qspec)
+    p2 = _params(TARGET + 0.05)
+    q2, state2 = baselines.idc_round(p2, state, scheme, qspec)
+    assert len(np.unique(np.asarray(q2["layer"]["w"]))) <= 2
+
+
+def test_binaryconnect_straight_through():
+    params = _params()
+    qspec = default_qspec(params)
+    vg = baselines.make_binaryconnect_grad(
+        lambda p, b: _quad_loss(p), qspec)
+    loss, g = vg(params, None)
+    # loss evaluated at binarized weights
+    bparams = baselines.binaryconnect_forward_params(params, qspec)
+    assert np.isclose(float(loss), float(_quad_loss(bparams)))
+    clipped = baselines.binaryconnect_clip(
+        {"layer": {"w": TARGET * 10, "b": jnp.zeros((16,))}}, qspec)
+    assert float(jnp.max(jnp.abs(clipped["layer"]["w"]))) <= 1.0
+
+
+def test_param_counts_and_codebook_entries():
+    params = _params()
+    qspec = default_qspec(params)
+    p1, p0 = param_counts(params, qspec)
+    assert p1 == 128 and p0 == 16
+    scheme = make_scheme("adaptive:4")
+    state = lc_init(KEY, params, scheme, qspec, LCConfig())
+    assert codebook_entry_count(state, scheme) == 4
+
+
+def test_adaptive_zero_scheme_prunes():
+    """Paper §4.2 footnote 2: a zero-pinned centroid gives joint
+    pruning + quantization; the zero entry survives every C step."""
+    key = jax.random.PRNGKey(0)
+    w = jnp.concatenate([0.02 * jax.random.normal(key, (800,)),
+                         1.0 + 0.1 * jax.random.normal(key, (200,))])
+    s = make_scheme("adaptive_zero:4")
+    st = s.init(key, w)
+    q, st = s.c_step(w, st, first=True)
+    cb = np.asarray(st["codebook"])
+    assert 0.0 in cb
+    assert float(s.sparsity(w, st)) > 0.3
+    q2, st2 = s.c_step(q, st)
+    assert 0.0 in np.asarray(st2["codebook"])
+
+
+def test_quadratic_penalty_variant_converges():
+    """use_lagrangian=False (λ≡0) is the paper's quadratic-penalty method;
+    it must still reach feasibility under the μ schedule."""
+    params = _params()
+    qspec = default_qspec(params)
+    scheme = make_scheme("adaptive:2")
+    cfg = LCConfig(mu0=1e-2, mu_growth=1.5, num_lc_iters=30,
+                   use_lagrangian=False)
+    state = lc_init(KEY, params, scheme, qspec, cfg)
+    p = params
+    for _ in range(cfg.num_lc_iters):
+        lr = min(0.1, 1.0 / float(state.mu))
+        for _ in range(60):
+            g = jax.grad(_quad_loss)(p)
+            pg = penalty_grad(p, state, qspec)
+            p = jax.tree_util.tree_map(lambda x, a, b: x - lr * (a + b),
+                                       p, g, pg)
+        state = c_step(p, state, scheme, qspec, cfg)
+    # λ stays exactly zero in QP mode
+    assert float(jnp.max(jnp.abs(state.lam["layer"]["w"]))) == 0.0
+    assert float(feasibility_gap(p, state, qspec)) < 5e-2

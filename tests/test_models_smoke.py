@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step asserting shapes + no NaNs, plus exact decode-replay consistency
+(teacher-forced decode == full forward) for every mixer family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, reduce_config
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_params, loss_fn, prefill)
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+    if cfg.vlm_patches:
+        batch["patch_embeds"] = 0.1 * jax.random.normal(
+            KEY, (B, cfg.vlm_patches, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_loss_grad(arch):
+    cfg = reduce_config(get_config(arch))
+    params = init_params(KEY, cfg)
+    batch = _batch(cfg)
+    logits = forward(params, cfg, batch["tokens"], batch.get("patch_embeds"))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not np.any(np.isnan(np.asarray(logits)))
+    l, g = jax.value_and_grad(lambda p: loss_fn(p, cfg, batch))(params)
+    assert np.isfinite(float(l))
+    gn = sum(float(jnp.vdot(x, x)) for x in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_replay_matches_forward(arch):
+    """Feed tokens one-by-one through decode_step from an empty cache; the
+    final-position logits must match the full forward (exact KV/state
+    streaming equivalence — catches cache-layout and masking bugs)."""
+    cfg = reduce_config(get_config(arch))
+    if cfg.vlm_patches:
+        cfg = cfg.__class__(**{**cfg.__dict__, "vlm_patches": 0})
+    params = init_params(KEY, cfg)
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    ref_logits = forward(params, cfg, tokens)
+
+    caches = init_cache(cfg, B, S)
+    step = jax.jit(lambda c, t, p: decode_step(params, cfg, c, t, p))
+    outs = []
+    for t in range(S):
+        logits_t, caches = step(caches, tokens[:, t:t + 1],
+                                jnp.asarray(t, jnp.int32))
+        outs.append(logits_t[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref_logits),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "gemma2-9b",
+                                  "deepseek-v2-lite-16b"])
+def test_prefill_then_decode(arch):
+    """prefill(S-1 tokens) + decode_step(last) ≈ forward's last logits.
+    (Exact for attention caches; SSM/RG-LRU conv tails are zeros after
+    chunked prefill — covered exactly by the replay test above.)"""
+    cfg = reduce_config(get_config(arch))
+    if cfg.vlm_patches:
+        return
+    params = init_params(KEY, cfg)
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    ref_logits = forward(params, cfg, tokens)
+
+    pre_logits, caches = prefill(params, cfg, tokens[:, :S - 1])
+    np.testing.assert_allclose(np.asarray(pre_logits),
+                               np.asarray(ref_logits[:, :S - 1]),
+                               rtol=2e-2, atol=2e-2)
+    # grow attention caches to capacity S
+    def pad_to(leaf):
+        if leaf.ndim >= 3 and leaf.shape[2] == S - 1:   # [G,B,S-1,...]
+            pad = [(0, 0)] * leaf.ndim
+            pad[2] = (0, 1)
+            return jnp.pad(leaf, pad)
+        return leaf
+    caches = jax.tree_util.tree_map(pad_to, caches)
+    logits_t, _ = decode_step(params, cfg, caches, tokens[:, -1:],
+                              jnp.asarray(S - 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits_t[:, 0]),
+                               np.asarray(ref_logits[:, -1]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_banded_local_attention_equals_masked_full():
+    """The banded sliding-window path == full attention with window mask."""
+    from repro.models.attention import chunked_attention
+    key = jax.random.PRNGKey(3)
+    b, s, h, hd, w = 1, 64, 2, 8, 16
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, hd))
+    pos = jnp.arange(s)
+    banded = chunked_attention(q, k, v, pos, pos, window=w,
+                               q_chunk=16, kv_chunk=16)
+    full = chunked_attention(q, k, v, pos, pos, window=w,
+                             q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(banded), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_routing_conservation():
+    """Every kept (token, slot) contributes with its router prob; dropped
+    slots contribute zero — output norm bounded by input scale."""
+    from repro.models.moe import apply_moe, init_moe
+    p = init_moe(KEY, 16, 8, 4, 0, "silu")
+    x = jax.random.normal(KEY, (2, 8, 16))
+    y = apply_moe(p, x, top_k=2, capacity_factor=2.0)
+    assert y.shape == x.shape
+    assert not np.any(np.isnan(np.asarray(y)))
+    # capacity 0 drop-all edge: capacity_factor tiny → finite output
+    y0 = apply_moe(p, x, top_k=2, capacity=1)
+    assert not np.any(np.isnan(np.asarray(y0)))
+
+
+def test_triangular_attention_equals_scan():
+    """attn_unroll (the §Perf triangular schedule) == the scan path."""
+    from repro.models.attention import chunked_attention
+    key = jax.random.PRNGKey(11)
+    b, s, h, hd = 2, 128, 4, 16
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, 2, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, 2, hd))
+    pos = jnp.arange(s)
+    a1 = chunked_attention(q, k, v, pos, pos, q_chunk=32, kv_chunk=32)
+    a2 = chunked_attention(q, k, v, pos, pos, q_chunk=32, kv_chunk=32,
+                           causal_unroll=True)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2),
+                               rtol=2e-4, atol=2e-5)

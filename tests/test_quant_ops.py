@@ -1,0 +1,96 @@
+"""Unit tests for the closed-form quantization operators (Theorems A.1-A.3,
+eq. 11) — each checked against brute force."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant_ops as Q
+
+
+def _rand(n, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), (n,))
+
+
+class TestFixedNoScale:
+    def test_binarize_sign_convention(self):
+        t = jnp.asarray([-2.0, -0.0, 0.0, 3.0])
+        # sgn(0) = +1 per paper eq. 12
+        np.testing.assert_array_equal(np.asarray(Q.binarize(t)),
+                                      [-1.0, 1.0, 1.0, 1.0])
+
+    def test_ternarize_threshold(self):
+        t = jnp.asarray([-0.51, -0.5, -0.49, 0.0, 0.49, 0.5, 0.51])
+        np.testing.assert_array_equal(
+            np.asarray(Q.ternarize(t)), [-1, -1, 0, 0, 0, 1, 1])
+
+    @pytest.mark.parametrize("c", [0, 2, 4, 7])
+    def test_pow2_matches_bruteforce(self, c):
+        codebook = np.array(sorted({s * m for m in
+                                    [0.0] + [2.0 ** (-i) for i in range(c + 1)]
+                                    for s in (-1.0, 1.0)}))
+        t = np.asarray(_rand(500, seed=c, scale=2.0))
+        q = np.asarray(Q.pow2_quantize(jnp.asarray(t), c))
+        brute = codebook[np.argmin((t[:, None] - codebook[None, :]) ** 2, 1)]
+        err_q = (t - q) ** 2
+        err_b = (t - brute) ** 2
+        # optimal distortion (ties may pick different entries, same error)
+        np.testing.assert_allclose(err_q, err_b, rtol=1e-5, atol=1e-7)
+
+    def test_pow2_zero(self):
+        assert float(Q.pow2_quantize(jnp.asarray(0.0), 4)) == 0.0
+
+    def test_fixed_codebook_tie_break_larger_index(self):
+        cb = jnp.asarray([-1.0, 1.0])
+        # midpoint 0 → larger index (eq. 11 left-closed intervals)
+        assert int(Q.fixed_codebook_assign(jnp.asarray(0.0), cb)) == 1
+
+    def test_fixed_codebook_quantize_optimal(self):
+        cb = jnp.sort(_rand(7, seed=3))
+        t = _rand(300, seed=4, scale=2.0)
+        q = Q.fixed_codebook_quantize(t, cb)
+        d = np.asarray(t)[:, None] - np.asarray(cb)[None, :]
+        best = np.min(d * d, axis=1)
+        np.testing.assert_allclose(np.asarray((t - q) ** 2), best,
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestScaled:
+    def test_binarize_scale_thm_a2(self):
+        w = _rand(1000, seed=5)
+        q, a = Q.binarize_scale(w)
+        assert np.isclose(float(a), float(jnp.mean(jnp.abs(w))))
+        # optimal vs grid search over a
+        e_opt = float(jnp.sum((w - q) ** 2))
+        for ag in np.linspace(0.01, 2.0, 200):
+            e = float(jnp.sum((w - ag * jnp.sign(w)) ** 2))
+            assert e_opt <= e + 1e-4
+
+    def test_ternarize_scale_thm_a3_vs_grid(self):
+        w = _rand(64, seed=6)
+        q, a = Q.ternarize_scale(w)
+        e_opt = float(jnp.sum((w - q) ** 2))
+        best = 1e18
+        for ag in np.linspace(1e-3, 3.0, 4000):
+            th = np.sign(w) * (np.abs(w) >= ag / 2)
+            best = min(best, float(np.sum((np.asarray(w) - ag * th) ** 2)))
+        assert e_opt <= best + 1e-5
+
+    def test_ternarize_scale_consistency(self):
+        # Thm A.3 proof invariant: |w_(j*)| > a/2 > |w_(j*+1)|
+        w = _rand(200, seed=7)
+        q, a = Q.ternarize_scale(w)
+        nz = np.asarray(jnp.abs(w))[np.asarray(q) != 0]
+        z = np.asarray(jnp.abs(w))[np.asarray(q) == 0]
+        if nz.size and z.size:
+            assert nz.min() >= float(a) / 2 - 1e-7
+            assert z.max() <= float(a) / 2 + 1e-7
+
+    def test_fixed_scale_fit_monotone(self):
+        w = _rand(500, seed=8, scale=0.3)
+        cb = jnp.asarray([-1.0, -0.25, 0.0, 0.25, 1.0])
+        q, a, assign = Q.fixed_scale_fit(w, cb, iters=25)
+        e = float(jnp.sum((w - q) ** 2))
+        # must beat the un-scaled fixed codebook
+        q0 = Q.fixed_codebook_quantize(w, cb)
+        assert e <= float(jnp.sum((w - q0) ** 2)) + 1e-5

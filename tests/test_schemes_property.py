@@ -1,0 +1,110 @@
+"""Hypothesis property tests on the quantization invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression, quant_ops as Q
+from repro.core.kmeans import kmeans_fit, quantile_init
+
+F32 = st.floats(-100.0, 100.0, allow_nan=False, width=32)
+ARRAYS = st.lists(F32, min_size=2, max_size=200).map(
+    lambda xs: jnp.asarray(xs, jnp.float32))
+
+
+@settings(max_examples=50, deadline=None)
+@given(ARRAYS)
+def test_binarize_idempotent(w):
+    q = Q.binarize(w)
+    np.testing.assert_array_equal(np.asarray(Q.binarize(q)), np.asarray(q))
+
+
+@settings(max_examples=50, deadline=None)
+@given(ARRAYS)
+def test_ternarize_idempotent(w):
+    q = Q.ternarize(w)
+    np.testing.assert_array_equal(np.asarray(Q.ternarize(q)), np.asarray(q))
+
+
+@settings(max_examples=50, deadline=None)
+@given(ARRAYS, st.integers(0, 6))
+def test_pow2_idempotent_and_in_codebook(w, c):
+    q = np.asarray(Q.pow2_quantize(w, c))
+    codebook = sorted({s * m for m in [0.0] + [2.0 ** (-i) for i in range(c + 1)]
+                       for s in (-1.0, 1.0)})
+    assert set(np.unique(q)).issubset(set(codebook))
+    q2 = np.asarray(Q.pow2_quantize(jnp.asarray(q), c))
+    np.testing.assert_array_equal(q2, q)
+
+
+@settings(max_examples=50, deadline=None)
+@given(ARRAYS)
+def test_binarize_scale_optimal_scale(w):
+    """a* = mean|w| is stationary: E(a) is quadratic in a with min there."""
+    q, a = Q.binarize_scale(w)
+    a = float(a)
+    e0 = float(jnp.sum((w - q) ** 2))
+    for eps in (1e-3, -1e-3):
+        qe = (a + eps) * Q.sgn(w)
+        ee = float(jnp.sum((w - qe) ** 2))
+        assert e0 <= ee * (1 + 1e-5) + 1e-6      # f32 ULP headroom
+
+
+@settings(max_examples=30, deadline=None)
+@given(ARRAYS)
+def test_c_step_assignment_beats_any_shift(w):
+    """Voronoi assignment is distortion-optimal vs shifted assignments."""
+    cb = jnp.sort(jnp.asarray([-1.0, -0.3, 0.4, 2.0]))
+    assign = Q.fixed_codebook_assign(w, cb)
+    d_opt = float(jnp.sum((w - cb[assign]) ** 2))
+    for shift in (-1, 1):
+        alt = jnp.clip(assign + shift, 0, 3)
+        d_alt = float(jnp.sum((w - cb[alt]) ** 2))
+        assert d_opt <= d_alt + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(F32, min_size=8, max_size=100), st.integers(2, 5))
+def test_kmeans_from_grid_beats_fixed_grid(xs, k):
+    """Adaptive codebook ≥ fixed codebook (paper §2.1): k-means *started
+    from* a uniform grid can only lower the grid's distortion (descent).
+    (Note: from an arbitrary init k-means may hit a worse local optimum —
+    hypothesis found [0×6,1,2]/K=3 — so the property is stated via the
+    descent guarantee, as in the paper's k-means argument.)"""
+    w = jnp.asarray(xs, jnp.float32)
+    lo, hi = float(jnp.min(w)), float(jnp.max(w))
+    grid = jnp.linspace(lo, hi if hi > lo else lo + 1.0, k)
+    q_grid = grid[Q.fixed_codebook_assign(w, grid)]
+    grid_dist = float(jnp.sum((w - q_grid) ** 2))
+    res = kmeans_fit(w, grid, iters=30)
+    assert float(res.distortion) <= grid_dist * (1 + 1e-5) + 1e-4
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 256), st.integers(1, 2000))
+def test_pack_unpack_roundtrip(k, n):
+    rng = np.random.RandomState(n)
+    assign = rng.randint(0, k, size=n)
+    words, lanes = compression.pack_indices(assign, k)
+    out = np.asarray(compression.unpack_indices(jnp.asarray(words), n, k))
+    np.testing.assert_array_equal(out, assign)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 256))
+def test_compression_ratio_monotone_in_k(k):
+    """ρ(K) decreases (weakly) as K grows — paper eq. 14 sanity."""
+    p1, p0 = 266200, 410
+    r_small = compression.compression_ratio(p1, p0, k, k)
+    r_big = compression.compression_ratio(p1, p0, min(k * 2, 512),
+                                          min(k * 2, 512))
+    assert r_big <= r_small + 1e-9
+
+
+def test_compression_ratio_matches_paper_lenet300():
+    """Paper fig. 9 table: LeNet300, per-layer codebooks (3 layers)."""
+    p1, p0 = 266200, 410
+    expected = {2: 30.5, 4: 15.6, 8: 10.5, 16: 7.9, 32: 6.3, 64: 5.3}
+    for k, rho in expected.items():
+        got = compression.compression_ratio(p1, p0, k, 3 * k)
+        assert abs(got - rho) < 0.1, (k, got, rho)

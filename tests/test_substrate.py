@@ -1,0 +1,186 @@
+"""Substrate: data determinism, schedules, checkpoint atomicity/integrity,
+fault-injection recovery, trainer integration."""
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.data.pipeline import LMTokenPipeline, prefetch
+from repro.models.paper_nets import (cross_entropy, init_mlp_classifier,
+                                     mlp_logits)
+from repro.optim import schedules
+from repro.train import checkpoint as ckpt
+from repro.train.fault import (FailureInjector, PreemptionSignal,
+                               SimulatedNodeFailure, SupervisorConfig,
+                               supervised_run)
+from repro.train.trainer import (TrainerConfig, init_train_state,
+                                 make_train_step)
+
+
+def test_lm_batch_deterministic():
+    b1 = synthetic.lm_batch(7, 3, 4, 32, 1000)
+    b2 = synthetic.lm_batch(7, 3, 4, 32, 1000)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = synthetic.lm_batch(7, 4, 4, 32, 1000)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    # labels are next tokens
+    np.testing.assert_array_equal(np.asarray(b1["labels"][:, :-1]),
+                                  np.asarray(b1["tokens"][:, 1:]))
+
+
+def test_lm_structure_learnable():
+    """Markov structure: bigram model beats unigram entropy."""
+    b = synthetic.lm_batch(0, 0, 16, 256, 64)
+    toks = np.asarray(b["tokens"]).ravel()
+    # transition counts
+    joint = np.ones((64, 64))
+    for a, c in zip(toks[:-1], toks[1:]):
+        joint[a, c] += 1
+    cond = joint / joint.sum(1, keepdims=True)
+    marg = joint.sum(0) / joint.sum()
+    h_cond = -np.mean(np.log([cond[a, c] for a, c in zip(toks[:-1], toks[1:])]))
+    h_marg = -np.mean(np.log([marg[c] for c in toks[1:]]))
+    assert h_cond < h_marg - 0.2
+
+
+def test_pipeline_cursor_resume():
+    p1 = LMTokenPipeline(seed=1, batch=2, seq_len=16, vocab=100)
+    batches = [p1.next() for _ in range(5)]
+    p2 = LMTokenPipeline(seed=1, batch=2, seq_len=16, vocab=100,
+                         start_step=3)
+    np.testing.assert_array_equal(np.asarray(batches[3]["tokens"]),
+                                  np.asarray(p2.next()["tokens"]))
+
+
+def test_prefetch_order():
+    it = prefetch(iter(range(20)), depth=3)
+    assert list(it) == list(range(20))
+
+
+def test_superres_weight_distribution_clustered():
+    """§5.2 setup: optimal W has a dominant cluster at 0 + positive
+    clusters (the paper's non-Gaussian fig. 7 distribution)."""
+    x, y = synthetic.superres_data(0, n=400, hi_side=12, factor=2)
+    w, *_ = np.linalg.lstsq(np.asarray(x), np.asarray(y), rcond=None)
+    w = w.ravel()
+    near_zero = np.mean(np.abs(w) < 0.05)
+    assert near_zero > 0.35         # large cluster at zero
+    assert np.max(w) > 0.15         # plus real positive weights
+
+
+def test_schedules():
+    s = schedules.exponential(0.1, 0.5, 10)
+    assert float(s(0)) == pytest.approx(0.1)
+    assert float(s(10)) == pytest.approx(0.05)
+    clipped = schedules.lc_clip(schedules.constant(1.0))
+    assert float(clipped(0, 100.0)) == pytest.approx(0.01)
+    assert float(clipped(0, 0.1)) == pytest.approx(1.0)
+    w = schedules.wsd(1.0, 100)
+    assert float(w(50)) == pytest.approx(1.0)
+    assert float(w(99)) < 0.6
+
+
+def test_checkpoint_roundtrip_and_integrity(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 3))}}
+    ckpt.save_checkpoint(str(tmp_path), 5, tree, extra={"note": 1})
+    out, extra, step = ckpt.restore_checkpoint(str(tmp_path), like=tree)
+    assert step == 5 and extra["note"] == 1
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(10.0))
+    # corrupt → integrity error
+    path = os.path.join(str(tmp_path), "step_00000005", "arrays.npz")
+    with open(path, "r+b") as f:
+        f.seek(100)
+        f.write(b"\x00\x01\x02")
+    with pytest.raises(IOError):
+        ckpt.restore_checkpoint(str(tmp_path), like=tree)
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    tree = {"x": jnp.zeros(4)}
+    for s in [1, 2, 3, 4, 5]:
+        ckpt.save_checkpoint(str(tmp_path), s, tree, keep=2)
+    steps = sorted(d for d in os.listdir(str(tmp_path))
+                   if d.startswith("step_"))
+    assert steps == ["step_00000004", "step_00000005"]
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def _mini_problem():
+    X, Y = synthetic.mnist_like(0, 512)
+    params = init_mlp_classifier(jax.random.PRNGKey(0), [784, 16, 10])
+
+    def loss_fn(p, batch):
+        return cross_entropy(mlp_logits(p, batch[0]), batch[1])
+
+    def make_batches(start):
+        def gen():
+            i = start
+            while True:
+                k = jax.random.fold_in(jax.random.PRNGKey(9), i)
+                idx = jax.random.randint(k, (64,), 0, X.shape[0])
+                yield (X[idx], Y[idx])
+                i += 1
+        return gen()
+
+    return params, loss_fn, make_batches
+
+
+def test_supervised_run_recovers_from_failures(tmp_path):
+    params, loss_fn, make_batches = _mini_problem()
+    tc = TrainerConfig(lr=0.05, steps_per_l=10)
+    state = init_train_state(params, tc)
+    step = jax.jit(make_train_step(loss_fn, tc))
+    inj = FailureInjector(fail_at_steps={17, 42})
+    cfg = SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=10,
+                           max_restarts=4)
+    out = supervised_run(state=state, make_batches=make_batches,
+                         step_fn=step, num_steps=60, cfg=cfg, injector=inj)
+    assert int(out.step) == 60
+    # deterministic data cursor ⇒ same result as a failure-free run
+    state2 = init_train_state(params, tc)
+    it = make_batches(0)
+    for _ in range(60):
+        state2, _ = step(state2, next(it))
+    np.testing.assert_allclose(
+        np.asarray(out.params["fc0"]["w"]),
+        np.asarray(state2.params["fc0"]["w"]), rtol=2e-4, atol=2e-5)
+
+
+def test_supervised_run_exhausts_restarts(tmp_path):
+    params, loss_fn, make_batches = _mini_problem()
+    tc = TrainerConfig(lr=0.05)
+    state = init_train_state(params, tc)
+    step = jax.jit(make_train_step(loss_fn, tc))
+    inj = FailureInjector(fail_at_steps=set(range(100)))
+    inj._fired = set()      # refire every restart
+
+    class AlwaysFail(FailureInjector):
+        def check(self, step):
+            raise SimulatedNodeFailure("flaky")
+
+    cfg = SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=10,
+                           max_restarts=2)
+    with pytest.raises(SimulatedNodeFailure):
+        supervised_run(state=state, make_batches=make_batches, step_fn=step,
+                       num_steps=50, cfg=cfg, injector=AlwaysFail())
+
+
+def test_preemption_saves_checkpoint(tmp_path):
+    params, loss_fn, make_batches = _mini_problem()
+    tc = TrainerConfig(lr=0.05)
+    state = init_train_state(params, tc)
+    step = jax.jit(make_train_step(loss_fn, tc))
+    inj = FailureInjector(preempt_at=7)
+    cfg = SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=100,
+                           max_restarts=0)
+    with pytest.raises(PreemptionSignal):
+        supervised_run(state=state, make_batches=make_batches, step_fn=step,
+                       num_steps=50, cfg=cfg, injector=inj)
+    assert ckpt.latest_step(str(tmp_path)) == 7
