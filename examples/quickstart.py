@@ -2,17 +2,29 @@
 
     PYTHONPATH=src python examples/quickstart.py [--k 2] [--scheme adaptive]
 
-Walks the full paper pipeline: train reference → DC baseline → LC
-(learning-compression) → compression accounting — and prints the same
-comparison the paper's fig. 9 makes.
+The whole pipeline hangs off two artifacts:
+
+* ``CompressionPlan`` — a declarative spec bundling the quantization
+  *scheme* (``adaptive:K``, ``binary``, ``ternary_scale``, ``pow2:C`` …,
+  resolved through the scheme registry), the *qspec policy* (which leaves
+  quantize — multiplicative weights only, paper §5), and the *LC config*
+  (μ schedule, iterations).  Every stage — DC baseline, LC training,
+  distributed C steps — consumes the same plan.
+* ``PackedModel`` — what ``plan.pack(params, lc_state)`` emits after the
+  fit: bit-packed assignment indices + per-leaf codebooks + the paper's
+  eq.-14 accounting, with ``save``/``load``/``decode`` and a
+  ``serving_params()`` layout the quantized serving path executes
+  directly (see examples/serve_quantized.py).
+
+This script walks the paper's comparison (fig. 9): train reference →
+DC baseline → LC → pack + accounting.
 """
 import argparse
 
 import jax
 import numpy as np
 
-from repro.core import (LCConfig, baselines, compression, default_qspec,
-                        make_scheme, param_counts, codebook_entry_count)
+from repro.core import CompressionPlan, LCConfig, baselines
 from repro.data.synthetic import mnist_like
 from repro.models.paper_nets import (classification_error, cross_entropy,
                                      init_mlp_classifier, mlp_logits)
@@ -56,17 +68,15 @@ def main():
 
     spec = (f"adaptive:{args.k}" if args.scheme == "adaptive"
             else args.scheme)
-    scheme = make_scheme(spec)
-    qspec = default_qspec(ref)
+    plan = CompressionPlan.parse(
+        spec, lc=LCConfig(mu0=1e-3, mu_growth=1.25, num_lc_iters=30))
 
-    print(f"2) direct compression (DC) baseline with scheme={spec}...")
-    dc, _ = baselines.direct_compression(jax.random.PRNGKey(0), ref, scheme,
-                                         qspec)
+    print(f"2) direct compression (DC) baseline with plan={spec}...")
+    dc, _ = baselines.direct_compression(jax.random.PRNGKey(0), ref, plan)
     print(f"   DC loss = {float(loss_fn(dc, (X, Y))):.5f}")
 
     print("3) LC algorithm (augmented Lagrangian, clipped-LR L steps)...")
-    tr = LCTrainer(loss_fn, scheme, qspec,
-                   LCConfig(mu0=1e-3, mu_growth=1.25, num_lc_iters=30), tc)
+    tr = LCTrainer.from_plan(loss_fn, plan, ref, tc)
     st = tr.init(jax.random.PRNGKey(0), ref)
     st = tr.run(st, it, log_every=10)
     q = tr.finalize(st)
@@ -75,11 +85,12 @@ def main():
           f"err = {float(classification_error(mlp_logits(q, X), Y)):.3f}")
     print(f"   layer-0 values: {np.unique(np.asarray(q['fc0']['w']))}")
 
-    p1, p0 = param_counts(ref, qspec)
-    entries = codebook_entry_count(st.lc_state, scheme)
-    rho = compression.compression_ratio(p1, p0, max(args.k, 2), entries)
-    print(f"4) compression: P1={p1} P0={p0} ρ = ×{rho:.1f}  "
-          f"({scheme.bits_per_weight} bit/weight + {entries} codebook floats)")
+    packed = plan.pack(st.params, st.lc_state, tr.qspec)
+    s = packed.summary()
+    print(f"4) compression (eq. 14): P1={s['p1']} P0={s['p0']} "
+          f"ρ = ×{s['ratio']:.1f}  ({s['bits_per_weight']} bit/weight + "
+          f"{s['codebook_entries']} codebook floats; "
+          f"{s['ref_bytes']} B → {s['packed_bytes']} B packed)")
 
 
 if __name__ == "__main__":

@@ -1,23 +1,33 @@
-"""Serve a quantized LM with batched requests through the packed
-codebook representation (the memory-roofline payoff of the paper).
+"""End-to-end quantized serving through the CompressionPlan → PackedModel
+API (the memory-roofline payoff of the paper).
 
     PYTHONPATH=src python examples/serve_quantized.py [--requests 4]
 
-Pipeline: train-tiny → LC-quantize (K=16 ⇒ 4-bit weights) → pack indices
-→ batched prefill + decode loop where the MLP matmuls run through the
-codebook-matmul kernel path (interpret mode on CPU; Mosaic on TPU).
-Prints per-request generated tokens + the serving byte accounting.
+Pipeline — each arrow is one API call:
+
+    CompressionPlan.parse("adaptive:K")          # scheme+qspec+LC config
+      → LCTrainer.from_plan(...).run(...)        # LC fit (train-tiny)
+      → plan.pack(params, lc_state)              # PackedModel artifact
+      → packed.save(dir) / PackedModel.load(dir) # on-disk round trip
+      → packed.serving_params()                  # uint8 idx + codebooks
+      → prefill/decode (MLP matmuls via repro.kernels.dispatch:
+        Mosaic codebook-matmul on TPU, jnp reference on CPU)
+
+The script verifies the acceptance contract: ``load().decode()`` is
+bit-exact vs the LC ``finalize`` params, and serving from the packed
+artifact reproduces the dense-reference logits within 1e-2.
 """
 import argparse
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduce_config
-from repro.core import (LCConfig, compression, default_qspec, make_scheme)
+from repro.core import CompressionPlan, LCConfig, PackedModel
 from repro.data.pipeline import LMTokenPipeline
-from repro.kernels import ops as kops
+from repro.kernels import dispatch
 from repro.models.transformer import (decode_step, init_params, loss_fn,
                                       prefill)
 from repro.train.trainer import LCTrainer, TrainerConfig
@@ -38,55 +48,70 @@ def main():
     def loss(p, batch):
         return loss_fn(p, cfg, batch)
 
-    print("training + LC-quantizing a tiny LM (K =", args.k, ")...")
-    qspec = default_qspec(params)
-    tr = LCTrainer(loss, make_scheme(f"adaptive:{args.k}"), qspec,
-                   LCConfig(mu0=1e-2, mu_growth=1.5, num_lc_iters=5),
-                   TrainerConfig(optimizer="adamw", lr=2e-3, steps_per_l=15))
+    # --- CompressionPlan → LC fit ------------------------------------------
+    plan = CompressionPlan.parse(
+        f"adaptive:{args.k}",
+        lc=LCConfig(mu0=1e-2, mu_growth=1.5, num_lc_iters=5))
+    print(f"training + LC-quantizing a tiny LM (plan: {plan.scheme.spec})...")
+    tr = LCTrainer.from_plan(loss, plan, params,
+                             TrainerConfig(optimizer="adamw", lr=2e-3,
+                                           steps_per_l=15))
     st = tr.init(jax.random.PRNGKey(1), params)
     st = tr.run(st, iter(pipe))
-    qparams = tr.finalize(st)
+    qparams = tr.finalize(st)                      # dense reference
 
-    # --- pack one layer and demonstrate the serving kernel -----------------
-    w = np.asarray(qparams["stacks"][0]["pos0"]["mlp"]["w_in"][0])
-    cb = np.unique(w)
-    assign = np.argmin((w[..., None] - cb) ** 2, axis=-1)
-    words, lanes = compression.pack_indices(assign, len(cb))
-    idx = compression.unpack_indices(jnp.asarray(words), assign.size,
-                                     len(cb)).reshape(assign.shape)
-    x = jax.random.normal(jax.random.PRNGKey(2), (4, w.shape[0]))
-    y_kernel = kops.codebook_matmul(x, idx.astype(jnp.uint8),
-                                    jnp.asarray(cb), bm=32, bn=32, bk=32)
-    y_dense = x @ w
-    err = float(jnp.max(jnp.abs(y_kernel - y_dense)))
-    bits = compression.bits_per_index(len(cb))
-    print(f"codebook-matmul kernel |Δ| = {err:.2e}; weight bytes "
-          f"{w.size * 4}B f32 → {words.size * 4}B packed "
-          f"({bits} bit/weight, ×{w.size * 4 / (words.size * 4):.1f} smaller)")
+    # --- pack → save/load → verify -----------------------------------------
+    packed = plan.pack(st.params, st.lc_state, tr.qspec)
+    with tempfile.TemporaryDirectory() as tmp:
+        packed.save(tmp)
+        packed = PackedModel.load(tmp)
+    dec = packed.decode()
+    exact = all(bool(jnp.all(a == b)) for a, b in
+                zip(jax.tree_util.tree_leaves(qparams),
+                    jax.tree_util.tree_leaves(dec)))
+    s = packed.summary()
+    print(f"PackedModel: {s['bits_per_weight']} bit/weight, "
+          f"{s['ref_bytes']} B f32 → {s['packed_bytes']} B packed "
+          f"(×{s['ratio']:.1f}, eq. 14); save/load→decode bit-exact: {exact}")
+    assert exact, "packed decode must be bit-exact vs lc.finalize"
 
-    # --- batched serving loop ----------------------------------------------
-    print(f"serving {args.requests} batched requests...")
+    # --- serve from the packed artifact ------------------------------------
+    sparams = packed.serving_params()              # MLP stays quantized
+    print(f"serving {args.requests} batched requests from the packed "
+          f"artifact (kernel backend: {dispatch.default_backend()})...")
     prompts = pipe.next()["tokens"][:args.requests, :args.prompt_len]
-    capacity = args.prompt_len + args.gen_len
-    logits, caches = prefill(qparams, cfg, prompts, last_logits_only=True)
 
-    def grow(leaf):
-        if leaf.ndim >= 3 and leaf.shape[2] == args.prompt_len:
-            pad = [(0, 0)] * leaf.ndim
-            pad[2] = (0, args.gen_len)
-            return jnp.pad(leaf, pad)
-        return leaf
+    def serve(p):
+        logits0, caches = prefill(p, cfg, prompts, last_logits_only=True)
 
-    caches = jax.tree_util.tree_map(grow, caches)
-    step = jax.jit(lambda c, t, p: decode_step(qparams, cfg, c, t, p))
-    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    generated = [tok]
-    for t in range(args.gen_len - 1):
-        logits, caches = step(caches, tok,
+        def grow(leaf):
+            if leaf.ndim >= 3 and leaf.shape[2] == args.prompt_len:
+                pad = [(0, 0)] * leaf.ndim
+                pad[2] = (0, args.gen_len)
+                return jnp.pad(leaf, pad)
+            return leaf
+
+        caches = jax.tree_util.tree_map(grow, caches)
+        step = jax.jit(lambda c, t, pos: decode_step(p, cfg, c, t, pos))
+        tok = jnp.argmax(logits0[:, -1], -1)[:, None].astype(jnp.int32)
+        out, logits = [tok], [logits0]
+        for t in range(args.gen_len - 1):
+            lg, caches = step(caches, tok,
                               jnp.asarray(args.prompt_len + t, jnp.int32))
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        generated.append(tok)
-    gen = np.asarray(jnp.concatenate(generated, axis=1))
+            tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+            out.append(tok)
+            logits.append(lg)
+        return jnp.concatenate(out, 1), jnp.concatenate(logits, 1)
+
+    gen_q, logits_q = serve(sparams)
+    gen_d, logits_d = serve(qparams)
+    err = float(jnp.max(jnp.abs(logits_q - logits_d)))
+    same = bool(jnp.all(gen_q == gen_d))
+    print(f"packed-vs-dense serve: max |Δlogits| = {err:.2e} "
+          f"(tokens identical: {same})")
+    assert err < 1e-2, "packed serving must match dense logits within 1e-2"
+
+    gen = np.asarray(gen_q)
     for r in range(args.requests):
         print(f"  req{r}: prompt={np.asarray(prompts[r])[:8]}... "
               f"generated={gen[r]}")

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the command CI and local dev both run (ROADMAP.md).
+#
+#   ./scripts/verify.sh [extra pytest args]
+#
+# Notes on XLA host-device flags (SNIPPETS.md): the distributed tests
+# (tests/test_dist.py) spawn subprocesses that set
+#   XLA_FLAGS=--xla_force_host_platform_device_count=8
+# themselves — the parent process must stay single-device (the dry-run
+# isolation rule: jax locks the device count at first init).  Do NOT
+# export that flag here; export it only when running a multi-device
+# entry point directly, e.g.:
+#   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+#       python -m repro.launch.train --reduced --mesh 2x4 --lc
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

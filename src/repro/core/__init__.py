@@ -1,11 +1,16 @@
 """LC-Quant core: the paper's contribution as a composable JAX module.
 
-Public API::
+Public API (new code goes plan-first)::
 
-    from repro.core import (
-        LCConfig, LCState, lc_init, c_step, penalty_grad, penalty_value,
-        feasibility_gap, finalize, default_qspec, make_scheme,
-    )
+    from repro.core import CompressionPlan, PackedModel
+
+    plan = CompressionPlan.parse("adaptive:16")     # scheme+qspec+LC config
+    ...LC fit...                                    # trainer / plan.c_step
+    packed = plan.pack(params, state)               # deployable artifact
+    packed.save(dir); PackedModel.load(dir)         # → serving path
+
+Lower-level pieces (LCConfig, lc_init/c_step, make_scheme, …) stay
+exported for the existing call sites and for string-spec compatibility.
 """
 from repro.core.lc import (          # noqa: F401
     LCConfig,
@@ -28,5 +33,10 @@ from repro.core.schemes import (     # noqa: F401
     ScaledFixedScheme,
     Scheme,
     make_scheme,
+    parse_spec,
+    register_scheme,
+    registered_schemes,
 )
+from repro.core.compression import PackedLeaf, PackedModel  # noqa: F401
+from repro.core.plan import CompressionPlan, QSpecPolicy    # noqa: F401
 from repro.core import baselines, compression, kmeans, quant_ops  # noqa: F401

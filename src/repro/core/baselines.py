@@ -15,7 +15,7 @@ comparisons differ only in the *algorithm*, exactly as in the paper.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,10 +28,18 @@ PyTree = Any
 
 
 def direct_compression(
-    key: Array, params: PyTree, scheme: Scheme, qspec: PyTree,
+    key: Array, params: PyTree, scheme: Any, qspec: Optional[PyTree] = None,
 ) -> Tuple[PyTree, lc_mod.LCState]:
-    """DC: Θ = Π(w̄), w_DC = Δ(Θ).  Returns (quantized params, state)."""
-    cfg = lc_mod.LCConfig()
+    """DC: Θ = Π(w̄), w_DC = Δ(Θ).  Returns (quantized params, state).
+
+    ``scheme`` may be a bare Scheme (then ``qspec`` is required) or a
+    CompressionPlan (then ``qspec`` defaults to the plan's policy).
+    """
+    if qspec is None:
+        if not hasattr(scheme, "build_qspec"):
+            raise TypeError("qspec required when passing a bare Scheme")
+        qspec = scheme.build_qspec(params)
+    cfg = getattr(scheme, "lc", None) or lc_mod.LCConfig()
     state = lc_mod.lc_init(key, params, scheme, qspec, cfg)
     return lc_mod.finalize(params, state, qspec), state
 

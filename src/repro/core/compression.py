@@ -1,4 +1,5 @@
-"""Compression accounting (paper eq. 14) and index bit-packing.
+"""Compression accounting (paper eq. 14), index bit-packing, and the
+:class:`PackedModel` artifact.
 
 ratio ρ(K) = #bits(reference) / #bits(quantized)
   #bits(reference) = (P1 + P0)·b
@@ -10,17 +11,29 @@ stated — the paper is explicit that b must be quoted).
 
 Bit-packing stores ⌈log2 K⌉-bit assignment indices in uint32 words, the
 on-disk / serving format consumed by the codebook-matmul kernel.
+
+``PackedModel`` is the deployable artifact of a finished LC run: per-leaf
+packed assignment words + effective decode codebooks for every quantized
+leaf, dense storage for the rest, with eq.-14 accounting attached.  It is
+what ``CompressionPlan.pack`` emits, what ``save``/``load`` round-trips,
+and what the serving path (``repro.kernels.dispatch`` + ``launch/serve.py
+--packed``) consumes instead of dense params.
 """
 from __future__ import annotations
 
+import dataclasses
+import json
 import math
-from typing import Tuple
+import os
+import re
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 Array = jax.Array
+PyTree = Any
 
 
 def bits_per_index(k: int) -> int:
@@ -70,3 +83,270 @@ def quantized_bytes(p1: int, p0: int, k: int, codebook_entries: int,
                     b: int = 32) -> int:
     """Absolute storage in bytes of the packed model (for bench tables)."""
     return (p1 * bits_per_index(k) + (p0 + codebook_entries) * b + 7) // 8
+
+
+# ---------------------------------------------------------------------------
+# Path-keyed pytree (de)construction
+# ---------------------------------------------------------------------------
+
+PathToken = Union[str, int]
+_PATH_RE = re.compile(r"\['([^']*)'\]|\[(\d+)\]")
+
+
+def path_tokens(path: str) -> Tuple[PathToken, ...]:
+    """``"['stacks'][0]['mlp']['w_in']"`` → ``("stacks", 0, "mlp", "w_in")``
+    (the inverse of ``jax.tree_util.keystr`` on dict/sequence trees)."""
+    tokens: List[PathToken] = []
+    pos = 0
+    for m in _PATH_RE.finditer(path):
+        if m.start() != pos:
+            raise ValueError(f"unparseable tree path {path!r}")
+        pos = m.end()
+        tokens.append(m.group(1) if m.group(1) is not None
+                      else int(m.group(2)))
+    if pos != len(path) or not tokens:
+        raise ValueError(f"unparseable tree path {path!r}")
+    return tuple(tokens)
+
+
+def unflatten_paths(entries: Dict[Tuple[PathToken, ...], Any]) -> PyTree:
+    """Rebuild a nested dict/tuple tree from token-path-keyed leaves.
+    Integer-keyed levels become tuples (the params convention)."""
+    root: dict = {}
+    for tokens, val in entries.items():
+        node = root
+        for t in tokens[:-1]:
+            node = node.setdefault(t, {})
+        node[tokens[-1]] = val
+
+    def finish(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(isinstance(k, int) for k in node):
+            if sorted(node) != list(range(len(node))):
+                raise ValueError(f"non-contiguous sequence keys {sorted(node)}")
+            return tuple(finish(node[i]) for i in range(len(node)))
+        return {k: finish(v) for k, v in node.items()}
+
+    return finish(root)
+
+
+# ---------------------------------------------------------------------------
+# PackedModel — the deployable artifact
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackedLeaf:
+    """One quantized leaf: bit-packed assignment words + effective decode
+    codebook.  Grouped (stacked-layer) leaves carry a leading G axis on
+    both ``words`` [G, W] and ``codebook`` [G, K]."""
+
+    words: np.ndarray        # uint32, [W] or [G, W]
+    codebook: np.ndarray     # float32, [K] or [G, K]
+    shape: Tuple[int, ...]   # original leaf shape
+    k: int                   # index-space size (≤ codebook.shape[-1])
+    dtype: str               # original leaf dtype
+
+    @property
+    def grouped(self) -> bool:
+        return self.words.ndim == 2
+
+    @property
+    def bits(self) -> int:
+        return bits_per_index(self.k)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+    def indices(self) -> Array:
+        """Unpacked int32 assignment indices in the original leaf shape."""
+        words = jnp.asarray(self.words)
+        if self.grouped:
+            n = int(np.prod(self.shape[1:]))
+            idx = jax.vmap(lambda w: unpack_indices(w, n, self.k))(words)
+        else:
+            idx = unpack_indices(words, self.size, self.k)
+        return idx.reshape(self.shape)
+
+    def decode(self) -> Array:
+        """Δ(Θ): codebook gather — bit-exact vs the LC ``finalize`` leaf."""
+        idx = self.indices()
+        cb = jnp.asarray(self.codebook)
+        if self.grouped:
+            dec = jax.vmap(lambda i, c: c[i])(idx.reshape(idx.shape[0], -1), cb)
+        else:
+            dec = cb[idx.reshape(-1)]
+        return dec.reshape(self.shape).astype(self.dtype)
+
+
+def _pack_assignments(assign: np.ndarray, k: int) -> np.ndarray:
+    words, _ = pack_indices(assign.ravel(), k)
+    return words
+
+
+@dataclasses.dataclass
+class PackedModel:
+    """Deployable quantized-model artifact (pack → save/load → serve).
+
+    ``packed``: keystr path → PackedLeaf for every quantized leaf;
+    ``dense``: keystr path → raw array for everything else (biases, norms);
+    eq.-14 accounting (``summary``) rides along.
+    """
+
+    packed: Dict[str, PackedLeaf]
+    dense: Dict[str, np.ndarray]
+    scheme_spec: str
+    k: int
+    codebook_entries: int
+    bits_ref: int = 32
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def pack(cls, params: PyTree, state, plan, qspec: Optional[PyTree] = None,
+             bits_ref: int = 32) -> "PackedModel":
+        """Pack a finished LC run: ``state`` is the LCState whose Θ defines
+        the codebooks; ``plan`` a CompressionPlan (or bare Scheme)."""
+        from repro.core import lc as lc_mod
+
+        from repro.core.schemes import as_scheme
+
+        scheme = as_scheme(plan)
+        if qspec is None:
+            qspec = (plan.build_qspec(params) if hasattr(plan, "build_qspec")
+                     else lc_mod.default_qspec(params))
+        w_c = lc_mod.finalize(params, state, qspec)
+        grouped = lc_mod._grouped_lookup(qspec)
+        quant_paths = set(lc_mod.quant_leaf_paths(qspec))
+        k = scheme.index_entries
+
+        packed: Dict[str, PackedLeaf] = {}
+        dense: Dict[str, np.ndarray] = {}
+        flat = jax.tree_util.tree_flatten_with_path(w_c)[0]
+        for path, leaf in flat:
+            ks = jax.tree_util.keystr(path)
+            if ks not in quant_paths:
+                dense[ks] = np.asarray(leaf)
+                continue
+            th = state.theta[ks]
+            if grouped[ks]:
+                assign = jax.vmap(scheme.assignments)(leaf, th)
+                cb = jax.vmap(lambda t: scheme.decode(jnp.arange(k), t))(th)
+                assign_np = np.asarray(assign)
+                words = np.stack([_pack_assignments(a, k) for a in assign_np])
+            else:
+                assign = scheme.assignments(leaf, th)
+                cb = scheme.decode(jnp.arange(k), th)
+                words = _pack_assignments(np.asarray(assign), k)
+            packed[ks] = PackedLeaf(
+                words=words, codebook=np.asarray(cb, np.float32),
+                shape=tuple(leaf.shape), k=k, dtype=str(leaf.dtype))
+        return cls(packed=packed, dense=dense, scheme_spec=scheme.spec, k=k,
+                   codebook_entries=lc_mod.codebook_entry_count(state, scheme),
+                   bits_ref=bits_ref)
+
+    # -- consumption --------------------------------------------------------
+
+    def decode(self) -> PyTree:
+        """Full dense params pytree — bit-exact vs ``lc.finalize``."""
+        entries: Dict[Tuple[PathToken, ...], Any] = {}
+        for ks, leaf in self.packed.items():
+            entries[path_tokens(ks)] = leaf.decode()
+        for ks, arr in self.dense.items():
+            entries[path_tokens(ks)] = jnp.asarray(arr)
+        return unflatten_paths(entries)
+
+    def serving_params(
+        self, quant_names: Tuple[str, ...] = ("w_in", "w_gate", "w_out"),
+    ) -> PyTree:
+        """Params pytree for quantized serving: leaves named in
+        ``quant_names`` stay quantized as ``<name>_idx`` (uint8 indices) +
+        ``<name>_cb`` (codebook) — the layout ``models.layers.apply_mlp``
+        routes through ``kernels.dispatch`` — everything else decodes dense.
+        """
+        entries: Dict[Tuple[PathToken, ...], Any] = {}
+        for ks, leaf in self.packed.items():
+            tokens = path_tokens(ks)
+            name = tokens[-1]
+            if isinstance(name, str) and name in quant_names and leaf.k <= 256:
+                idx = leaf.indices().astype(jnp.uint8)
+                entries[tokens[:-1] + (f"{name}_idx",)] = idx
+                entries[tokens[:-1] + (f"{name}_cb",)] = jnp.asarray(
+                    leaf.codebook, jnp.float32)
+            else:
+                entries[tokens] = leaf.decode()
+        for ks, arr in self.dense.items():
+            entries[path_tokens(ks)] = jnp.asarray(arr)
+        return unflatten_paths(entries)
+
+    # -- accounting (paper eq. 14) ------------------------------------------
+
+    @property
+    def p1(self) -> int:
+        return sum(leaf.size for leaf in self.packed.values())
+
+    @property
+    def p0(self) -> int:
+        return sum(int(a.size) for a in self.dense.values())
+
+    def ratio(self) -> float:
+        return compression_ratio(self.p1, self.p0, self.k,
+                                 self.codebook_entries, b=self.bits_ref)
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "scheme": self.scheme_spec,
+            "k": self.k,
+            "bits_per_weight": bits_per_index(self.k),
+            "p1": self.p1,
+            "p0": self.p0,
+            "codebook_entries": self.codebook_entries,
+            "ref_bytes": (self.p1 + self.p0) * self.bits_ref // 8,
+            "packed_bytes": quantized_bytes(self.p1, self.p0, self.k,
+                                            self.codebook_entries,
+                                            b=self.bits_ref),
+            "ratio": self.ratio(),
+        }
+
+    # -- persistence --------------------------------------------------------
+
+    def save(self, directory: str) -> str:
+        """Write ``manifest.json`` + ``arrays.npz`` under ``directory``."""
+        os.makedirs(directory, exist_ok=True)
+        arrays: Dict[str, np.ndarray] = {}
+        manifest: Dict[str, Any] = {
+            "version": 1, "scheme": self.scheme_spec, "k": self.k,
+            "codebook_entries": self.codebook_entries,
+            "bits_ref": self.bits_ref, "packed": [], "dense": [],
+        }
+        for i, (ks, leaf) in enumerate(sorted(self.packed.items())):
+            arrays[f"p{i}_words"] = leaf.words
+            arrays[f"p{i}_cb"] = leaf.codebook
+            manifest["packed"].append({"path": ks, "shape": list(leaf.shape),
+                                       "k": leaf.k, "dtype": leaf.dtype})
+        for j, (ks, arr) in enumerate(sorted(self.dense.items())):
+            arrays[f"d{j}"] = arr
+            manifest["dense"].append({"path": ks})
+        np.savez(os.path.join(directory, "arrays.npz"), **arrays)
+        with open(os.path.join(directory, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        return directory
+
+    @classmethod
+    def load(cls, directory: str) -> "PackedModel":
+        with open(os.path.join(directory, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(directory, "arrays.npz"))
+        packed = {}
+        for i, rec in enumerate(manifest["packed"]):
+            packed[rec["path"]] = PackedLeaf(
+                words=data[f"p{i}_words"], codebook=data[f"p{i}_cb"],
+                shape=tuple(rec["shape"]), k=int(rec["k"]),
+                dtype=rec["dtype"])
+        dense = {rec["path"]: data[f"d{j}"]
+                 for j, rec in enumerate(manifest["dense"])}
+        return cls(packed=packed, dense=dense,
+                   scheme_spec=manifest["scheme"], k=int(manifest["k"]),
+                   codebook_entries=int(manifest["codebook_entries"]),
+                   bits_ref=int(manifest["bits_ref"]))

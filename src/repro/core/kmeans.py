@@ -76,12 +76,18 @@ def kmeans_fit(
     iters: int = 30,
     point_weights: Optional[Array] = None,
     axis_name: Optional[Union[str, Sequence[str]]] = None,
+    tol: float = 1e-4,
 ) -> KMeansResult:
     """Run ≤ ``iters`` exact 1-D k-means iterations from ``init_codebook``.
 
-    Iterations after the assignment fixpoint are no-ops (pure-jnp loops must
-    have static trip counts); ``iters_run`` reports when the fixpoint was
-    reached — the paper's Fig. 10 warm-start claim is measured with it.
+    Iterations after convergence are no-ops (pure-jnp loops must have static
+    trip counts); ``iters_run`` reports when convergence was reached — the
+    paper's Fig. 10 warm-start claim is measured with it.  Convergence is
+    either the assignment fixpoint or a distortion plateau: relative
+    improvement ≤ ``tol`` per iteration.  The plateau stop is what makes
+    warm starts cheap — near the optimum, boundary points can keep flipping
+    between adjacent cells for many iterations while the distortion is
+    already flat.
 
     Empty clusters keep their previous centroid (can re-acquire points later).
     """
@@ -93,7 +99,7 @@ def kmeans_fit(
         return jax.lax.psum(x, axis_name) if axis_name is not None else x
 
     def step(carry, _):
-        c, prev_assign, done, n_run = carry
+        c, prev_assign, prev_dist, done, n_run = carry
         assign = fixed_codebook_assign(flat, c)
         sums = psum(jax.ops.segment_sum(flat * nw, assign, num_segments=k))
         counts = psum(jax.ops.segment_sum(nw, assign, num_segments=k))
@@ -101,22 +107,30 @@ def kmeans_fit(
         c_new = jnp.sort(c_new)
         # Convergence must be GLOBAL: a shard whose local assignments are
         # already stable must keep iterating with the others, else the
-        # replicated codebooks diverge across shards.
+        # replicated codebooks diverge across shards.  (The distortion is
+        # psum'd, so the plateau criterion is global too.)
         changed = jnp.any(assign != prev_assign).astype(jnp.float32)
         changed = psum(changed) > 0
+        # f32 accumulation: the carry slot is f32, and bf16 would both
+        # break the scan carry-type match and swamp the plateau test.
+        resid = (flat - c[assign]).astype(jnp.float32)
+        dist = psum(jnp.sum(nw.astype(jnp.float32) * resid * resid))
+        plateau = (prev_dist - dist) <= tol * jnp.abs(dist)
         # Freeze once converged so iters_run is the true fixpoint index.
         c_out = jnp.where(done, c, c_new)
         n_run = n_run + jnp.where(done, 0, 1)
-        done = done | ~changed
-        return (c_out, assign, done, n_run), None
+        done = done | ~changed | plateau
+        return (c_out, assign, dist, done, n_run), None
 
     c0 = jnp.sort(init_codebook.astype(flat.dtype))
-    init = (c0, jnp.full(flat.shape, -1, jnp.int32), jnp.asarray(False), jnp.asarray(0, jnp.int32))
-    (c, _, _, n_run), _ = jax.lax.scan(step, init, None, length=iters)
+    init = (c0, jnp.full(flat.shape, -1, jnp.int32),
+            jnp.asarray(jnp.inf, jnp.float32), jnp.asarray(False),
+            jnp.asarray(0, jnp.int32))
+    (c, _, _, _, n_run), _ = jax.lax.scan(step, init, None, length=iters)
 
     assign = fixed_codebook_assign(flat, c)
-    resid = flat - c[assign]
-    dist = psum(jnp.sum(nw * resid * resid))
+    resid = (flat - c[assign]).astype(jnp.float32)
+    dist = psum(jnp.sum(nw.astype(jnp.float32) * resid * resid))
     return KMeansResult(c, assign.reshape(w.shape), dist, n_run)
 
 

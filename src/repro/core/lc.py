@@ -37,7 +37,7 @@ from typing import Any, Callable, Dict, List, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.schemes import Scheme
+from repro.core.schemes import Scheme, as_scheme
 
 Array = jax.Array
 PyTree = Any
@@ -85,15 +85,17 @@ def default_qspec(
     params: PyTree,
     exclude: re.Pattern = DEFAULT_EXCLUDE,
     grouped_min_ndim: int = 3,
+    min_ndim: int = 2,
 ) -> PyTree:
-    """Quantize every leaf with ndim ≥ 2 whose path avoids ``exclude``.
+    """Quantize every leaf with ndim ≥ ``min_ndim`` whose path avoids
+    ``exclude``.
 
     Leaves with ndim ≥ ``grouped_min_ndim`` are assumed to be stacked-layer
     tensors ([G, ...]) and get per-layer codebooks.
     """
     def make(path, leaf):
         name = jax.tree_util.keystr(path)
-        if leaf.ndim < 2 or exclude.search(name):
+        if leaf.ndim < min_ndim or exclude.search(name):
             return LeafSpec(quantize=False)
         return LeafSpec(quantize=True, grouped=leaf.ndim >= grouped_min_ndim)
 
@@ -145,7 +147,12 @@ def lc_init(
     key: Array, params: PyTree, scheme: Scheme, qspec: PyTree,
     config: LCConfig,
 ) -> LCState:
-    """Initialize at the direct-compression point (μ→0⁺, λ=0): Θ = Π(w̄)."""
+    """Initialize at the direct-compression point (μ→0⁺, λ=0): Θ = Π(w̄).
+
+    ``scheme`` may be a bare Scheme or anything carrying one under
+    ``.scheme`` (a CompressionPlan) — the LC driver is plan-agnostic.
+    """
+    scheme = as_scheme(scheme)
     grouped = _grouped_lookup(qspec)
     paths = quant_leaf_paths(qspec)
     keys = dict(zip(paths, jax.random.split(jax.random.fold_in(key, 0),
@@ -184,6 +191,7 @@ def c_step(
     shows 2–3 inner alternations recover the loss-optimal codebook where
     one alternation lands measurably off-stationary.
     """
+    scheme = as_scheme(scheme)
     mu = state.mu
     grouped = _grouped_lookup(qspec)
     new_theta: Dict[str, Any] = {}
@@ -269,6 +277,7 @@ def param_counts(params: PyTree, qspec: PyTree) -> Tuple[int, int]:
 
 def codebook_entry_count(state: LCState, scheme: Scheme) -> int:
     """Total stored float entries across per-group codebooks (for eq. 14)."""
+    scheme = as_scheme(scheme)
     n = 0
     for th in state.theta.values():
         first = next(iter(th.values()))

@@ -1,0 +1,121 @@
+"""CompressionPlan — the declarative front door of the quantization
+pipeline (Part I's framing: one constrained-optimization pipeline from
+reference net to deployable compressed net).
+
+A plan bundles the three policy decisions every caller used to wire by
+hand:
+
+* **scheme** — which Δ(Θ)/Π(w) pair (resolved through the
+  ``repro.core.schemes`` registry);
+* **qspec policy** — which leaves are quantized, and which get per-layer
+  (grouped) codebooks (paper §5: multiplicative weights only);
+* **lc** — the LC/augmented-Lagrangian hyperparameters (μ schedule etc.).
+
+The same plan object drives every stage end to end::
+
+    plan = CompressionPlan.parse("adaptive:16")
+    qspec = plan.build_qspec(params)
+    state = plan.init(key, params, qspec)           # DC point (Θ = Π(w̄))
+    ...L steps (trainer)... state = plan.c_step(params, state, qspec)
+    packed = plan.pack(params, state, qspec)        # → PackedModel artifact
+    packed.save(path)                               # → serve (dispatch)
+
+and the distributed C step (``repro.dist.cstep.sharded_c_step``) takes the
+identical plan, so nothing downstream ever inspects scheme strings again.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.core import lc as lc_mod
+from repro.core.compression import PackedModel
+from repro.core.lc import DEFAULT_EXCLUDE, LCConfig, LCState
+from repro.core.schemes import Scheme, make_scheme
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class QSpecPolicy:
+    """Which leaves quantize: path-regex exclusion + ndim thresholds."""
+
+    exclude: str = DEFAULT_EXCLUDE.pattern
+    min_ndim: int = 2
+    grouped_min_ndim: int = 3
+
+    def build(self, params: PyTree) -> PyTree:
+        return lc_mod.default_qspec(
+            params, exclude=re.compile(self.exclude, re.IGNORECASE),
+            grouped_min_ndim=self.grouped_min_ndim, min_ndim=self.min_ndim)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPlan:
+    scheme: Scheme
+    qspec: QSpecPolicy = QSpecPolicy()
+    lc: LCConfig = LCConfig()
+    bits_ref: int = 32          # b of eq. 14 — quote it with every ratio
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def parse(cls, spec: str, *, lc: Optional[LCConfig] = None,
+              qspec: Optional[QSpecPolicy] = None, bits_ref: int = 32,
+              **scheme_kw: Any) -> "CompressionPlan":
+        """Build a plan from a scheme spec string (``adaptive:4`` …) —
+        the CLI/config entry point; validation happens in the registry."""
+        return cls(scheme=make_scheme(spec, **scheme_kw),
+                   lc=lc or LCConfig(), qspec=qspec or QSpecPolicy(),
+                   bits_ref=bits_ref)
+
+    # -- pipeline stages ----------------------------------------------------
+
+    def build_qspec(self, params: PyTree) -> PyTree:
+        return self.qspec.build(params)
+
+    def init(self, key: Array, params: PyTree,
+             qspec: Optional[PyTree] = None) -> LCState:
+        """LC init at the direct-compression point."""
+        qspec = self.build_qspec(params) if qspec is None else qspec
+        return lc_mod.lc_init(key, params, self.scheme, qspec, self.lc)
+
+    def c_step(self, params: PyTree, state: LCState, qspec: PyTree,
+               advance_mu: bool = True) -> LCState:
+        return lc_mod.c_step(params, state, self.scheme, qspec, self.lc,
+                             advance_mu=advance_mu)
+
+    def finalize(self, params: PyTree, state: LCState,
+                 qspec: PyTree) -> PyTree:
+        return lc_mod.finalize(params, state, qspec)
+
+    def pack(self, params: PyTree, state: LCState,
+             qspec: Optional[PyTree] = None) -> PackedModel:
+        """Finished LC run → deployable PackedModel artifact."""
+        return PackedModel.pack(params, state, self,
+                                qspec=qspec, bits_ref=self.bits_ref)
+
+    # -- accounting ---------------------------------------------------------
+
+    def summary(self, params: PyTree, state: LCState,
+                qspec: Optional[PyTree] = None) -> Dict[str, Any]:
+        """Eq.-14 accounting without materializing the packed artifact."""
+        from repro.core import compression as C
+
+        qspec = self.build_qspec(params) if qspec is None else qspec
+        p1, p0 = lc_mod.param_counts(params, qspec)
+        entries = lc_mod.codebook_entry_count(state, self.scheme)
+        k = self.scheme.index_entries
+        return {
+            "scheme": self.scheme.spec,
+            "k": k,
+            "bits_per_weight": self.scheme.bits_per_weight,
+            "p1": p1, "p0": p0, "codebook_entries": entries,
+            "ratio": C.compression_ratio(p1, p0, k, entries, b=self.bits_ref),
+            "packed_bytes": C.quantized_bytes(p1, p0, k, entries,
+                                              b=self.bits_ref),
+        }

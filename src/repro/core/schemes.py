@@ -13,12 +13,19 @@ are scheme-agnostic:
 multiplicative weights, or a [G, ...] stack — see ``grouped``).  Biases &
 co. are excluded at the qspec level (paper §5: only multiplicative weights
 are quantized).
+
+Schemes register themselves under a spec name with :func:`register_scheme`;
+``make_scheme("adaptive:4")`` resolves through that registry (structured
+``name[:arg]`` parse + per-factory validation), so downstream packages can
+add schemes without touching this module.  :class:`repro.core.plan
+.CompressionPlan` is the preferred entry point and carries a Scheme built
+here.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +57,16 @@ class Scheme:
     def codebook_entries(self) -> int:
         """Float entries stored alongside the indices (K, or 1 for a scale)."""
         raise NotImplementedError
+
+    @property
+    def index_entries(self) -> int:
+        """Size of the assignment index space (the K of pack_indices)."""
+        raise NotImplementedError
+
+    @property
+    def spec(self) -> str:
+        """Canonical ``make_scheme`` spec string (artifact manifests)."""
+        return self.name
 
     # -- algorithm ----------------------------------------------------------
     def init(self, key: Array, w: Array) -> SchemeState:
@@ -87,6 +104,14 @@ class AdaptiveScheme(Scheme):
     @property
     def codebook_entries(self) -> int:
         return self.k
+
+    @property
+    def index_entries(self) -> int:
+        return self.k
+
+    @property
+    def spec(self) -> str:
+        return f"{self.name}:{self.k}"
 
     def init(self, key: Array, w: Array) -> SchemeState:
         if self.init_method == "kmeans++":
@@ -189,6 +214,14 @@ class FixedScheme(Scheme):
     def codebook_entries(self) -> int:
         return 0  # fixed values: nothing stored
 
+    @property
+    def index_entries(self) -> int:
+        return self._k
+
+    @property
+    def spec(self) -> str:
+        return f"pow2:{self.pow2_c}" if self.kind == "pow2" else self.kind
+
     def init(self, key, w):
         return {"codebook": self._codebook(jnp.float32)}
 
@@ -225,6 +258,14 @@ class ScaledFixedScheme(Scheme):
     def codebook_entries(self) -> int:
         return 1  # the scale
 
+    @property
+    def index_entries(self) -> int:
+        return self._k
+
+    @property
+    def spec(self) -> str:
+        return self.kind
+
     def init(self, key, w):
         return {"scale": jnp.mean(jnp.abs(w))}
 
@@ -248,20 +289,102 @@ class ScaledFixedScheme(Scheme):
         return a * base[assign]
 
 
+def as_scheme(obj: Any) -> Scheme:
+    """Normalize a plan-or-scheme argument: anything carrying a Scheme
+    under ``.scheme`` (a CompressionPlan) unwraps; a Scheme passes
+    through.  Every plan-aware entry point calls this once at its
+    boundary."""
+    scheme = getattr(obj, "scheme", obj)
+    if not isinstance(scheme, Scheme):
+        raise TypeError(f"expected a Scheme or CompressionPlan, got {obj!r}")
+    return scheme
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+SchemeFactory = Callable[..., Scheme]
+_REGISTRY: Dict[str, SchemeFactory] = {}
+
+
+def register_scheme(name: str, *aliases: str):
+    """Decorator registering ``factory(arg: Optional[str], **kw) -> Scheme``
+    under ``name`` (+ aliases).  ``arg`` is the text after the first ``:``
+    in a spec like ``adaptive:4`` (None when absent); the factory owns its
+    validation and raises ``ValueError`` on a malformed arg."""
+    def deco(factory: SchemeFactory) -> SchemeFactory:
+        for n in (name,) + aliases:
+            if n in _REGISTRY:
+                raise ValueError(f"scheme {n!r} registered twice")
+            _REGISTRY[n] = factory
+        return factory
+    return deco
+
+
+def registered_schemes() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def parse_spec(spec: str) -> Tuple[str, Optional[str]]:
+    """``"adaptive:4"`` → ``("adaptive", "4")``; ``"binary"`` → ``("binary",
+    None)``.  Validates the name against the registry."""
+    name, _, arg = spec.partition(":")
+    name = name.strip()
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown scheme spec {spec!r}; registered: "
+                         f"{registered_schemes()}")
+    return name, (arg.strip() or None) if arg else None
+
+
+def _int_arg(name: str, arg: Optional[str], default: int, lo: int) -> int:
+    if arg is None:
+        return default
+    try:
+        val = int(arg)
+    except ValueError as e:
+        raise ValueError(f"scheme {name!r}: arg {arg!r} is not an int") from e
+    if val < lo:
+        raise ValueError(f"scheme {name!r}: arg must be ≥ {lo}, got {val}")
+    return val
+
+
+@register_scheme("adaptive")
+def _make_adaptive(arg: Optional[str] = None, **kw: Any) -> Scheme:
+    k = _int_arg("adaptive", arg, kw.pop("k", 4), lo=2)
+    return AdaptiveScheme(k=k, **kw)
+
+
+@register_scheme("adaptive_zero")
+def _make_adaptive_zero(arg: Optional[str] = None, **kw: Any) -> Scheme:
+    k = _int_arg("adaptive_zero", arg, kw.pop("k", 4), lo=2)
+    return AdaptiveZeroScheme(k=k, **kw)
+
+
+@register_scheme("pow2")
+def _make_pow2(arg: Optional[str] = None, **kw: Any) -> Scheme:
+    c = _int_arg("pow2", arg, kw.pop("pow2_c", 4), lo=0)
+    return FixedScheme(kind="pow2", pow2_c=c, **kw)
+
+
+def _register_parameter_free(kind: str, cls) -> None:
+    @register_scheme(kind)
+    def factory(arg: Optional[str] = None, **kw: Any) -> Scheme:
+        if arg is not None:
+            raise ValueError(f"scheme {kind!r} takes no arg, got {arg!r}")
+        kw.setdefault("kind", kind)
+        return cls(**kw)
+
+
+for _kind in ("binary", "ternary"):
+    _register_parameter_free(_kind, FixedScheme)
+for _kind in ("binary_scale", "ternary_scale"):
+    _register_parameter_free(_kind, ScaledFixedScheme)
+
+
 def make_scheme(spec: str, **kw: Any) -> Scheme:
-    """Parse scheme specs like ``adaptive:4``, ``binary``, ``ternary_scale``,
-    ``pow2:4`` — the CLI / config entry point."""
-    if spec.startswith("adaptive_zero"):
-        k = int(spec.split(":")[1]) if ":" in spec else kw.pop("k", 4)
-        return AdaptiveZeroScheme(k=k, **kw)
-    if spec.startswith("adaptive"):
-        k = int(spec.split(":")[1]) if ":" in spec else kw.pop("k", 4)
-        return AdaptiveScheme(k=k, **kw)
-    if spec.startswith("pow2"):
-        c = int(spec.split(":")[1]) if ":" in spec else kw.pop("pow2_c", 4)
-        return FixedScheme(kind="pow2", pow2_c=c, **kw)
-    if spec in ("binary", "ternary"):
-        return FixedScheme(kind=spec, **kw)
-    if spec in ("binary_scale", "ternary_scale"):
-        return ScaledFixedScheme(kind=spec, **kw)
-    raise ValueError(f"unknown scheme spec {spec!r}")
+    """Resolve a spec string (``adaptive:4``, ``binary``, ``ternary_scale``,
+    ``pow2:4``) through the registry — the CLI / config / shim entry point.
+    Prefer ``CompressionPlan.parse`` in new code."""
+    name, arg = parse_spec(spec)
+    return _REGISTRY[name](arg, **kw)

@@ -1,0 +1,11 @@
+"""Distributed layer: param/batch/cache sharding rules and the sharded
+C-step primitives (paper §4 solved under a mesh decomposition).
+
+Everything here is mesh-agnostic: the rules take any ``jax.sharding.Mesh``
+with some subset of the ("pod", "data", "model") axes, and the C-step
+primitives take an ``axis_name`` so the same code runs inside any
+``shard_map``.  The scheme dispatch (which primitive solves which scheme's
+C step) goes through :func:`repro.dist.cstep.sharded_c_step`, keyed by the
+same :class:`repro.core.plan.CompressionPlan` the single-device path uses.
+"""
+from repro.dist import cstep, sharding  # noqa: F401

@@ -1,0 +1,199 @@
+"""Sharded C-step primitives (paper §4 under a mesh decomposition).
+
+The C step ``min_Θ ||w - Δ(Θ)||²`` touches every weight, so at production
+scale it must run where the weight shards live.  Three primitives cover
+every registered scheme:
+
+* :func:`sharded_kmeans` — the adaptive-codebook C step (§4.1): each shard
+  computes local per-centroid (Σw, count) statistics and a ``psum`` merges
+  them — the *exact* global k-means update with 2·K floats of traffic per
+  iteration (the weights never leave their chips).
+* :func:`ternary_scale_histogram` — the ternary-with-scale C step
+  (Theorem A.3).  The exact solution needs a global sort of |w|; the
+  distributed reformulation bins |w| into a psum'd histogram and optimizes
+  the prefix objective over bin boundaries — per-bin Σ|w| is accumulated
+  exactly, so the only approximation is restricting the threshold to bin
+  edges (rel. error ~1e-4 at 4k bins).
+* :func:`compressed_psum` — int8-compressed all-reduce: each shard ships
+  ⌈1 byte/value⌉ (own max-abs scale, symmetric round-to-nearest int8)
+  instead of 4-byte floats — the paper's codebook-with-scale idea applied
+  to the gradient collective on the slow (cross-pod) axis.
+
+:func:`sharded_c_step` dispatches a scheme (or a
+:class:`~repro.core.plan.CompressionPlan`) to these primitives, so the
+distributed C step is driven by exactly the same plan object as the
+single-device path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import quant_ops
+from repro.core.kmeans import kmeans_fit
+from repro.core.schemes import (AdaptiveScheme, FixedScheme, ScaledFixedScheme,
+                                Scheme, as_scheme)
+
+Array = jax.Array
+AxisName = Union[str, Tuple[str, ...]]
+
+
+# ---------------------------------------------------------------------------
+# Adaptive codebook: psum-exact k-means
+# ---------------------------------------------------------------------------
+
+def sharded_kmeans(w: Array, init_codebook: Array, mesh: Mesh,
+                   iters: int = 20, axis: str = "model",
+                   tol: float = 1e-4) -> Tuple[Array, Array, Array]:
+    """Global k-means over ``w`` sharded on ``mesh`` axis ``axis``.
+
+    Returns (codebook [K] replicated, assignments sharded like ``w``,
+    distortion scalar).  Bit-for-bit the same update as
+    :func:`repro.core.kmeans.kmeans_fit` — the per-centroid statistics are
+    merged with a psum before the centroid step, and the convergence /
+    plateau tests are global, so every shard walks the identical codebook
+    trajectory.
+    """
+    def body(ws, cb):
+        res = kmeans_fit(ws, cb, iters=iters, axis_name=axis, tol=tol)
+        return res.codebook, res.assignments, res.distortion
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P()),
+                   out_specs=(P(), P(axis), P()), check_rep=False)
+    return fn(w, init_codebook)
+
+
+# ---------------------------------------------------------------------------
+# Ternary scale: histogram-CDF reformulation of Theorem A.3
+# ---------------------------------------------------------------------------
+
+def ternary_scale_histogram(w: Array, axis_name: Optional[AxisName],
+                            bins: int = 4096) -> Array:
+    """Optimal ternary scale  a* = max_j (1/j)Σ_{i≤j}|w|_(i)  s.t.
+    j* = argmax_j (1/√j)Σ_{i≤j}|w|_(i)  — evaluated over a global
+    |w|-histogram instead of a global sort.
+
+    Call inside ``shard_map`` with the local weight shard; ``axis_name``
+    merges max/histogram across shards (pass None for single-device use).
+    Per-bin Σ|w| is accumulated exactly; only the candidate thresholds are
+    discretized to bin edges.
+    """
+    aw = jnp.abs(w.ravel()).astype(jnp.float32)
+
+    def pmerge(x):
+        return jax.lax.psum(x, axis_name) if axis_name is not None else x
+
+    gmax = jnp.max(aw, initial=0.0)
+    if axis_name is not None:
+        gmax = jax.lax.pmax(gmax, axis_name)
+    scale = jnp.maximum(gmax, jnp.finfo(jnp.float32).tiny)
+    idx = jnp.clip((aw / scale * bins).astype(jnp.int32), 0, bins - 1)
+    counts = pmerge(jax.ops.segment_sum(jnp.ones_like(aw), idx,
+                                        num_segments=bins))
+    sums = pmerge(jax.ops.segment_sum(aw, idx, num_segments=bins))
+
+    # Descending-magnitude prefixes = suffix-cumsum over ascending bins.
+    n_desc = jnp.cumsum(counts[::-1])
+    s_desc = jnp.cumsum(sums[::-1])
+    obj = jnp.where(n_desc > 0, s_desc / jnp.sqrt(jnp.maximum(n_desc, 1.0)),
+                    -jnp.inf)
+    jstar = jnp.argmax(obj)
+    return s_desc[jstar] / jnp.maximum(n_desc[jstar], 1.0)
+
+
+def binary_scale_psum(w: Array, axis_name: Optional[AxisName]) -> Array:
+    """Optimal binary scale a* = mean|w| (Theorem A.2) — *exact* under
+    sharding: a single psum of (Σ|w|, count)."""
+    s = jnp.sum(jnp.abs(w))
+    n = jnp.asarray(w.size, jnp.float32)
+    if axis_name is not None:
+        s = jax.lax.psum(s, axis_name)
+        n = jax.lax.psum(n, axis_name)
+    return s / n
+
+
+# ---------------------------------------------------------------------------
+# int8-compressed all-reduce
+# ---------------------------------------------------------------------------
+
+def compressed_psum(x: Array, axis_name: AxisName) -> Array:
+    """psum(x) over ``axis_name`` shipping int8 payloads + one f32 scale
+    per shard (per-shard symmetric max-abs quantization).
+
+    Wire bytes: 1 B/value (+4 B) vs 4 B f32 — the collective the multi-pod
+    "pod" axis uses for gradient sync.  Heterogeneous per-shard scales are
+    handled exactly: each shard's payload is dequantized with *its own*
+    scale before the sum, so a small-gradient shard is not crushed by a
+    large-gradient one.
+    """
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    qg = jax.lax.all_gather(q, axis_name)          # [n_shards, ...] int8 wire
+    sg = jax.lax.all_gather(scale, axis_name)      # [n_shards] f32
+    sg = sg.reshape((-1,) + (1,) * x.ndim)
+    return jnp.sum(qg.astype(jnp.float32) * sg, axis=0).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Plan-driven dispatch
+# ---------------------------------------------------------------------------
+
+def sharded_c_step(plan_or_scheme, w: Array, axis_name: Optional[AxisName],
+                   codebook: Optional[Array] = None, iters: int = 5,
+                   ) -> Tuple[Array, dict]:
+    """Solve Π(w) for one sharded quantization group, *inside* shard_map.
+
+    ``plan_or_scheme``: a CompressionPlan or bare Scheme — the same object
+    that drives the single-device C step, so launch code is scheme- and
+    mesh-agnostic.  Returns (quantized local shard, new Θ state).
+    """
+    scheme: Scheme = as_scheme(plan_or_scheme)
+    if isinstance(scheme, AdaptiveScheme):
+        if codebook is None:
+            raise ValueError("adaptive sharded C step needs a warm codebook "
+                             "(histogram-quantile init it on the first step)")
+        res = kmeans_fit(w, codebook, iters=iters, axis_name=axis_name)
+        q = res.codebook[res.assignments]
+        return q.astype(w.dtype), {"codebook": res.codebook,
+                                   "kmeans_iters": res.iters_run}
+    if isinstance(scheme, ScaledFixedScheme):
+        if scheme.kind == "binary_scale":
+            a = binary_scale_psum(w, axis_name)
+            return (a * quant_ops.sgn(w)).astype(w.dtype), {"scale": a}
+        a = ternary_scale_histogram(w, axis_name)
+        q = quant_ops.sgn(w) * a * (jnp.abs(w) >= 0.5 * a).astype(w.dtype)
+        return q.astype(w.dtype), {"scale": a}
+    if isinstance(scheme, FixedScheme):
+        # Parameter-free codebooks are elementwise: zero communication.
+        q, state = scheme.c_step(w, scheme.init(jax.random.PRNGKey(0), w))
+        return q, state
+    raise TypeError(f"no sharded C step for scheme {scheme!r}")
+
+
+def histogram_quantiles(w: Array, k: int, axis_name: Optional[AxisName],
+                        bins: int = 4096) -> Array:
+    """Distributed quantile codebook init (the sharded analogue of
+    :func:`repro.core.kmeans.quantile_init`): global-histogram CDF inverse
+    at the k mid-quantiles."""
+    flat = w.ravel().astype(jnp.float32)
+    lo, hi = jnp.min(flat), jnp.max(flat)
+    if axis_name is not None:
+        lo = -jax.lax.pmax(-lo, axis_name)
+        hi = jax.lax.pmax(hi, axis_name)
+    span = jnp.maximum(hi - lo, jnp.finfo(jnp.float32).tiny)
+    idx = jnp.clip(((flat - lo) / span * bins).astype(jnp.int32), 0, bins - 1)
+    counts = jax.ops.segment_sum(jnp.ones_like(flat), idx, num_segments=bins)
+    if axis_name is not None:
+        counts = jax.lax.psum(counts, axis_name)
+    cdf = jnp.cumsum(counts)
+    total = cdf[-1]
+    qs = (jnp.arange(k, dtype=jnp.float32) + 0.5) / k * total
+    bidx = jnp.searchsorted(cdf, qs, side="left")
+    centers = lo + (bidx.astype(jnp.float32) + 0.5) / bins * span
+    return jnp.sort(centers)

@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer: compute hot-spots of quantized training/serving.
+
+``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp oracles,
+``dispatch`` the backend router (Mosaic on TPU / reference on CPU) the
+serving path calls into.
+"""
+from repro.kernels import dispatch, ops, ref  # noqa: F401

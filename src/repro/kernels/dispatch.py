@@ -1,0 +1,99 @@
+"""Backend dispatch for quantized serving — the layer between the
+PackedModel artifact and the kernels.
+
+One call site (``models.layers.apply_mlp``, ``launch/serve.py --packed``)
+routes every codebook matmul here; this module picks the implementation:
+
+* ``pallas``            — the Mosaic ``codebook_matmul`` kernel
+  (dequant-in-VMEM one-hot contraction; TPU only);
+* ``pallas_interpret``  — same kernel body, Python interpreter (CPU
+  correctness checks; slow);
+* ``ref``               — pure-jnp gather-dequant + dot
+  (``kernels.ref``) — the CPU serving default, and the allclose oracle.
+
+Default: pallas on TPU, ref elsewhere; override with
+``REPRO_KERNEL_BACKEND=pallas|pallas_interpret|ref`` or per call.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+Array = jax.Array
+
+_BACKENDS = ("pallas", "pallas_interpret", "ref")
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        if env not in _BACKENDS:
+            raise ValueError(f"REPRO_KERNEL_BACKEND={env!r}; "
+                             f"choose from {_BACKENDS}")
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def codebook_matmul(x: Array, idx: Array, codebook: Array, *,
+                    backend: Optional[str] = None,
+                    bm: int = 128, bn: int = 128, bk: int = 512) -> Array:
+    """y[M, N] = x[M, Kd] · codebook[idx[Kd, N]] on the chosen backend."""
+    b = backend or default_backend()
+    if b == "pallas":
+        return ops.codebook_matmul(x, idx, codebook, bm=bm, bn=bn, bk=bk,
+                                   interpret=False)
+    if b == "pallas_interpret":
+        return ops.codebook_matmul(x, idx, codebook, bm=bm, bn=bn, bk=bk,
+                                   interpret=True)
+    return ref.codebook_matmul_ref(x, idx, codebook)
+
+
+def quantized_matmul(x: Array, idx: Array, codebook: Array, *,
+                     backend: Optional[str] = None) -> Array:
+    """Batched-x wrapper: x[..., Kd] · codebook[idx[Kd, N]] → [..., N].
+
+    This is the serve-path entry ``apply_mlp`` uses when a param leaf is
+    stored quantized (``<name>_idx`` + ``<name>_cb``).
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = codebook_matmul(x2, idx, codebook, backend=backend)
+    return y.reshape(lead + (idx.shape[-1],)).astype(x.dtype)
+
+
+def decode_leaf(idx: Array, codebook: Array, dtype=None) -> Array:
+    """Materialize a dense weight from (indices, codebook) — the fallback
+    for call sites without a fused kernel.  A 2-D codebook is per-group
+    ([G, K] against idx [G, ...]): gathered group-wise."""
+    idx = idx.astype(jnp.int32)
+    if codebook.ndim == 2:
+        w = jax.vmap(lambda i, c: c[i])(idx, codebook)
+    else:
+        w = codebook[idx]
+    return w.astype(dtype) if dtype is not None else w
+
+
+def decode_params(tree: Any) -> Any:
+    """In-jit dense reconstruction of a ``serving_params``-layout tree:
+    every ``<name>_idx``/``<name>_cb`` pair collapses to a dense ``<name>``
+    leaf.  Under jit only the packed arrays are HBM-resident inputs; the
+    dense weights are temporaries XLA schedules per use."""
+    if isinstance(tree, dict):
+        out = {}
+        for key, val in tree.items():
+            if key.endswith("_idx"):
+                name = key[:-4]
+                out[name] = decode_leaf(val, tree[f"{name}_cb"])
+            elif key.endswith("_cb") and f"{key[:-3]}_idx" in tree:
+                continue
+            else:
+                out[key] = decode_params(val)
+        return out
+    if isinstance(tree, (tuple, list)):
+        return type(tree)(decode_params(v) for v in tree)
+    return tree

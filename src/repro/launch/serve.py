@@ -6,6 +6,13 @@
 Loads (or initializes) params, shards them with the production rules,
 prefills a batch of prompts and runs a greedy decode loop — the same
 ``decode_step`` the dry-run lowers for the decode_32k/long_500k cells.
+
+``--packed <dir>`` serves straight from a PackedModel artifact (the
+output of ``launch.train --lc`` / ``CompressionPlan.pack``): MLP weights
+stay quantized in HBM (uint8 idx + codebook) and their matmuls route
+through ``repro.kernels.dispatch`` — Mosaic codebook-matmul on TPU, jnp
+reference on CPU.  The arch/config must match the one the artifact was
+packed from.
 """
 import argparse
 import os
@@ -45,6 +52,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--packed", default=None,
+                    help="PackedModel artifact dir: serve quantized")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -58,9 +67,17 @@ def main():
         mesh = make_production_mesh()
     sharding_ctx.set_policy(sharding_ctx.Policy(mesh, mode="tp"))
 
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    if args.ckpt_dir:
-        params, _, _ = ckpt.restore_checkpoint(args.ckpt_dir, like=params)
+    if args.packed:
+        from repro.core import PackedModel
+        packed = PackedModel.load(args.packed)
+        params = packed.serving_params()
+        s = packed.summary()
+        print(f"serving packed artifact: {s['scheme']} "
+              f"({s['bits_per_weight']} bit/weight, ×{s['ratio']:.1f})")
+    else:
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        if args.ckpt_dir:
+            params, _, _ = ckpt.restore_checkpoint(args.ckpt_dir, like=params)
     p_shard = shard_rules.param_shardings(params, mesh)
     params = jax.tree_util.tree_map(jax.device_put, params, p_shard)
 

@@ -35,7 +35,7 @@ import jax                                    # noqa: E402
 import jax.numpy as jnp                       # noqa: E402
 
 from repro.configs import get_config, list_archs, reduce_config  # noqa: E402
-from repro.core import (LCConfig, default_qspec, make_scheme)    # noqa: E402
+from repro.core import CompressionPlan, LCConfig                 # noqa: E402
 from repro.data.pipeline import LMTokenPipeline, shard_batch     # noqa: E402
 from repro.dist import sharding as shard_rules                   # noqa: E402
 from repro.launch.mesh import make_production_mesh               # noqa: E402
@@ -63,6 +63,8 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--lc", action="store_true", help="enable LC quantization")
+    ap.add_argument("--scheme", default=None,
+                    help="scheme spec (default adaptive:<k>), e.g. ternary_scale")
     ap.add_argument("--k", type=int, default=4)
     ap.add_argument("--lc-iters", type=int, default=5)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
@@ -93,19 +95,26 @@ def main():
 
     with mesh:
         if args.lc:
-            qspec = default_qspec(params)
-            tr = LCTrainer(loss, make_scheme(f"adaptive:{args.k}"), qspec,
-                           LCConfig(mu0=1e-2, mu_growth=1.4,
-                                    num_lc_iters=args.lc_iters),
-                           TrainerConfig(optimizer="adamw", lr=2e-3,
-                                         steps_per_l=max(
-                                             1, args.steps // args.lc_iters)))
+            plan = CompressionPlan.parse(
+                args.scheme or f"adaptive:{args.k}",
+                lc=LCConfig(mu0=1e-2, mu_growth=1.4,
+                            num_lc_iters=args.lc_iters))
+            tr = LCTrainer.from_plan(
+                loss, plan, params,
+                TrainerConfig(optimizer="adamw", lr=2e-3,
+                              steps_per_l=max(1, args.steps // args.lc_iters)))
             state = tr.init(jax.random.PRNGKey(1), params)
             state = tr.run(state, batches(), log_every=1)
             ckpt.save_checkpoint(args.ckpt_dir, int(state.step), state,
                                  extra={"data_step": pipe.state.step})
-            print("LC training done; quantized checkpoint saved to",
-                  args.ckpt_dir)
+            packed = plan.pack(state.params, state.lc_state, tr.qspec)
+            art = os.path.join(args.ckpt_dir, "packed")
+            packed.save(art)
+            s = packed.summary()
+            print(f"LC training done; checkpoint in {args.ckpt_dir}; "
+                  f"PackedModel artifact in {art} "
+                  f"(×{s['ratio']:.1f}, {s['packed_bytes']} B) — serve with "
+                  f"launch.serve --packed")
         else:
             from repro.train.trainer import init_train_state, make_train_step
             tc = TrainerConfig(optimizer="adamw", lr=2e-3)

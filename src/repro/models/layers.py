@@ -91,21 +91,36 @@ def mlp_weight(p, name: str, dtype) -> Array:
 
     Quantized serving stores ``<name>_idx`` (uint8, the C-step assignment)
     + ``<name>_cb`` ([K] codebook): 1 B/weight of HBM traffic instead of
-    2 B bf16.  The dequant here is jnp (gather); on TPU the fused
-    dequant-in-VMEM path is repro.kernels.codebook_matmul.
+    2 B bf16.  The dequant here is jnp (gather); the matmul path below
+    routes through repro.kernels.dispatch for the fused dequant-in-VMEM
+    kernel on TPU.
     """
     if f"{name}_idx" in p:
-        return p[f"{name}_cb"][p[f"{name}_idx"].astype(jnp.int32)].astype(dtype)
+        from repro.kernels import dispatch
+        return dispatch.decode_leaf(p[f"{name}_idx"], p[f"{name}_cb"], dtype)
     return p[name]
+
+
+def mlp_matmul(p, name: str, x: Array) -> Array:
+    """x @ <name>, where <name> may be stored dense or quantized.
+
+    Quantized leaves (``<name>_idx`` + ``<name>_cb`` — the PackedModel
+    serving layout) dispatch to the codebook-matmul kernel path: Mosaic on
+    TPU, jnp reference on CPU (repro.kernels.dispatch picks).
+    """
+    if f"{name}_idx" in p:
+        from repro.kernels import dispatch
+        return dispatch.quantized_matmul(x, p[f"{name}_idx"], p[f"{name}_cb"])
+    return x @ p[name]
 
 
 def apply_mlp(p, x: Array, act: str) -> Array:
     from repro.models.sharding_ctx import constrain
     f = act_fn(act)
-    h = x @ mlp_weight(p, "w_in", x.dtype)
+    h = mlp_matmul(p, "w_in", x)
     if "w_gate" in p or "w_gate_idx" in p:
-        h = f(x @ mlp_weight(p, "w_gate", x.dtype)) * h
+        h = f(mlp_matmul(p, "w_gate", x)) * h
     else:
         h = f(h)
     h = constrain(h, "batch", None, "ffn")
-    return h @ mlp_weight(p, "w_out", x.dtype)
+    return mlp_matmul(p, "w_out", h)

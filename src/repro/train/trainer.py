@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lc as lc_mod
-from repro.core.schemes import Scheme
+from repro.core.schemes import Scheme, as_scheme
 from repro.optim import schedules as sched
 from repro.optim import sgd as opt_mod
 
@@ -133,6 +133,7 @@ class LCTrainer:
 
     def __init__(self, loss_fn, scheme: Scheme, qspec, lc_cfg: lc_mod.LCConfig,
                  tc: TrainerConfig, jit: bool = True):
+        scheme = as_scheme(scheme)                   # accept a plan too
         self.loss_fn = loss_fn
         self.scheme = scheme
         self.qspec = qspec
@@ -145,6 +146,15 @@ class LCTrainer:
             self._train_step = jax.jit(self._train_step)
             self._c_step = jax.jit(self._c_step,
                                    static_argnames=("advance_mu",))
+
+    @classmethod
+    def from_plan(cls, loss_fn, plan, params, tc: TrainerConfig,
+                  jit: bool = True) -> "LCTrainer":
+        """Build a trainer straight from a CompressionPlan: the plan's
+        qspec policy is applied to ``params``, its scheme and LC config
+        drive the L/C alternation."""
+        return cls(loss_fn, plan.scheme, plan.build_qspec(params), plan.lc,
+                   tc, jit=jit)
 
     def init(self, key, params) -> TrainState:
         lc_state = lc_mod.lc_init(key, params, self.scheme, self.qspec,

@@ -1,10 +1,16 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape/dtype
-sweeps + hypothesis fuzzing."""
+sweeps + hypothesis fuzzing.  The deterministic sweeps always run; only
+the fuzz test skips when hypothesis is not installed
+(``pip install -r requirements-dev.txt``)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # dev-only dep: fuzzing skips, sweeps still run
+    given = None
 
 from repro.kernels import ops, ref
 
@@ -76,15 +82,20 @@ def test_fixed_quant_scale(scale):
     np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(2, 3000), st.integers(2, 32), st.integers(0, 10 ** 6))
-def test_kmeans_assign_fuzz(p, k, seed):
-    key = jax.random.PRNGKey(seed)
-    w = 3 * jax.random.normal(key, (p,))
-    cb = jnp.sort(jax.random.normal(jax.random.fold_in(key, 1), (k,)))
-    a1, s1, c1 = ops.kmeans_assign(w, cb)
-    a2, s2, c2 = ref.kmeans_assign_ref(w, cb)
-    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
-    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=0.5)
-    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
-                               rtol=2e-4, atol=2e-3)
+if given is not None:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(2, 3000), st.integers(2, 32), st.integers(0, 10 ** 6))
+    def test_kmeans_assign_fuzz(p, k, seed):
+        key = jax.random.PRNGKey(seed)
+        w = 3 * jax.random.normal(key, (p,))
+        cb = jnp.sort(jax.random.normal(jax.random.fold_in(key, 1), (k,)))
+        a1, s1, c1 = ops.kmeans_assign(w, cb)
+        a2, s2, c2 = ref.kmeans_assign_ref(w, cb)
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+        np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=0.5)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=2e-4, atol=2e-3)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev.txt)")
+    def test_kmeans_assign_fuzz():
+        pass

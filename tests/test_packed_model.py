@@ -1,0 +1,149 @@
+"""CompressionPlan → PackedModel pipeline: non-power-of-two bit-packing,
+save/load → decode bit-exactness, serving layout, and the scheme-registry
+string shim."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CompressionPlan, LCConfig, PackedModel, compression,
+                        make_scheme, schemes)
+
+
+# ---------------------------------------------------------------------------
+# pack_indices / unpack_indices at non-power-of-two K
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [3, 5, 17])
+@pytest.mark.parametrize("n", [1, 7, 64, 1000])
+def test_pack_unpack_roundtrip_non_pow2(k, n):
+    rng = np.random.RandomState(k * 1000 + n)
+    assign = rng.randint(0, k, size=n)
+    words, lanes = compression.pack_indices(assign, k)
+    bits = compression.bits_per_index(k)
+    assert lanes == 32 // bits
+    assert words.dtype == np.uint32
+    assert words.size == -(-n // lanes)          # ceil-div: no straddling
+    out = np.asarray(compression.unpack_indices(jnp.asarray(words), n, k))
+    np.testing.assert_array_equal(out, assign)
+
+
+@pytest.mark.parametrize("k", [3, 5, 17])
+def test_pack_unpack_roundtrip_2d_shapes(k):
+    rng = np.random.RandomState(k)
+    assign = rng.randint(0, k, size=(13, 9))
+    words, _ = compression.pack_indices(assign, k)
+    out = np.asarray(compression.unpack_indices(jnp.asarray(words),
+                                                assign.size, k))
+    np.testing.assert_array_equal(out.reshape(assign.shape), assign)
+
+
+# ---------------------------------------------------------------------------
+# PackedModel: pack → save/load → decode bit-exactness
+# ---------------------------------------------------------------------------
+
+def _toy_params(key):
+    """Mixed tree: 2-D leaves, a grouped [G, ...] stack, and excluded
+    (bias/norm) leaves — the structures default_qspec distinguishes."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "fc": {"w": jax.random.normal(k1, (12, 8)),
+               "b_bias": jnp.zeros((8,))},
+        "stack": ({"w_in": jax.random.normal(k2, (3, 8, 16)),
+                   "norm_scale": jnp.zeros((3, 8))},),
+        "head_w": jax.random.normal(k3, (8, 6)),
+    }
+
+
+@pytest.mark.parametrize("spec,k", [("adaptive:5", 5), ("ternary", 3),
+                                    ("ternary_scale", 3)])
+def test_packed_model_save_load_decode_bit_exact(tmp_path, spec, k):
+    params = _toy_params(jax.random.PRNGKey(0))
+    plan = CompressionPlan.parse(spec, lc=LCConfig(num_lc_iters=2))
+    qspec = plan.build_qspec(params)
+    state = plan.init(jax.random.PRNGKey(1), params, qspec)
+    state = plan.c_step(params, state, qspec)
+    dense = plan.finalize(params, state, qspec)
+
+    packed = plan.pack(params, state, qspec)
+    assert packed.k == k
+    packed.save(str(tmp_path))
+    loaded = PackedModel.load(str(tmp_path))
+    assert loaded.scheme_spec == plan.scheme.spec
+
+    decoded = loaded.decode()
+    assert (jax.tree_util.tree_structure(decoded)
+            == jax.tree_util.tree_structure(dense))
+    for a, b in zip(jax.tree_util.tree_leaves(dense),
+                    jax.tree_util.tree_leaves(decoded)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # eq. 14 accounting carried through the round trip
+    s = loaded.summary()
+    assert s["p1"] == 12 * 8 + 3 * 8 * 16 + 8 * 6
+    assert s["p0"] == 8 + 3 * 8
+    assert s["ratio"] > 1.0
+
+
+def test_serving_params_layout_and_equivalence():
+    params = _toy_params(jax.random.PRNGKey(2))
+    plan = CompressionPlan.parse("adaptive:4")
+    qspec = plan.build_qspec(params)
+    state = plan.init(jax.random.PRNGKey(3), params, qspec)
+    packed = plan.pack(params, state, qspec)
+
+    sp = packed.serving_params(quant_names=("w_in",))
+    layer = sp["stack"][0]
+    assert "w_in_idx" in layer and "w_in_cb" in layer and "w_in" not in layer
+    assert layer["w_in_idx"].dtype == jnp.uint8
+    assert layer["w_in_cb"].shape == (3, 4)      # grouped: per-layer codebook
+
+    from repro.kernels import dispatch
+    dense = plan.finalize(params, state, qspec)
+    dp = dispatch.decode_params(sp)
+    for a, b in zip(jax.tree_util.tree_leaves(dense),
+                    jax.tree_util.tree_leaves(dp)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Scheme registry + string shim
+# ---------------------------------------------------------------------------
+
+def test_make_scheme_string_shim_still_resolves():
+    assert make_scheme("adaptive:4").k == 4
+    assert make_scheme("adaptive_zero:8").k == 8
+    assert make_scheme("pow2:3").pow2_c == 3
+    assert make_scheme("binary").kind == "binary"
+    assert make_scheme("ternary_scale").kind == "ternary_scale"
+    assert make_scheme("adaptive").k == 4        # default preserved
+
+
+def test_registry_validation_errors():
+    with pytest.raises(ValueError, match="registered"):
+        make_scheme("no_such_scheme")
+    with pytest.raises(ValueError, match="not an int"):
+        make_scheme("adaptive:four")
+    with pytest.raises(ValueError, match="≥"):
+        make_scheme("adaptive:1")
+    with pytest.raises(ValueError, match="no arg"):
+        make_scheme("binary:2")
+
+
+def test_register_scheme_decorator_extends_registry():
+    name = "unit_test_scheme"
+    assert name not in schemes.registered_schemes()
+
+    @schemes.register_scheme(name)
+    def factory(arg=None, **kw):
+        return schemes.FixedScheme(kind="binary")
+
+    try:
+        assert name in schemes.registered_schemes()
+        assert make_scheme(name).kind == "binary"
+        with pytest.raises(ValueError, match="twice"):
+            schemes.register_scheme(name)(factory)
+    finally:
+        schemes._REGISTRY.pop(name, None)

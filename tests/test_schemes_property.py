@@ -1,8 +1,15 @@
-"""Hypothesis property tests on the quantization invariants."""
+"""Hypothesis property tests on the quantization invariants.
+
+Every test here fuzzes through hypothesis, so the whole module skips
+when it is not installed (``pip install -r requirements-dev.txt``).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import compression, quant_ops as Q
 from repro.core.kmeans import kmeans_fit, quantile_init
