@@ -1,19 +1,40 @@
 """Kernel microbenchmarks: Pallas (interpret mode — correctness-grade
 timing only on CPU) vs the jnp reference, plus serving-path byte
-accounting (the roofline story of codebook_matmul)."""
+accounting (the roofline story of codebook_matmul).
+
+Byte accounting uses ``compression.bits_per_index(k)`` — the eq.-14 index
+width — so the roofline row is correct for any K, and the packed-route
+rows report the *actual* HBM bytes of the uint32 word operand
+(``pidx.nbytes``), which must equal bits/8 per weight (+ codebook).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import time_call
-from repro.kernels import ops, ref
+from repro.core import compression
+from repro.kernels import dispatch, ops, ref
+
+
+def _accounting(kd: int, n: int, k: int) -> str:
+    bits = compression.bits_per_index(k)
+    lanes = 32 // bits
+    bytes_bf16 = kd * n * 2
+    # Actual pack_indices_2d word-layout bytes (not the entropy formula):
+    # lane counts that don't divide 32 waste the word's top bits.
+    bytes_packed = -(-kd // lanes) * n * 4 + k * 4
+    return (f"weight_bytes bf16={bytes_bf16} packed={bytes_packed} "
+            f"({bits}-bit; x{bytes_bf16 / bytes_packed:.1f} HBM reduction "
+            f"at decode)")
 
 
 def run():
     rows = []
     key = jax.random.PRNGKey(0)
 
+    # -- roofline accounting row (prefill-ish shape, K=16) -------------------
     m, kd, n, k = 256, 2048, 512, 16
     x = jax.random.normal(key, (m, kd), jnp.float32)
     idx = jax.random.randint(key, (kd, n), 0, k).astype(jnp.uint8)
@@ -21,12 +42,7 @@ def run():
 
     us_ref = time_call(jax.jit(ref.codebook_matmul_ref), x, idx, cb,
                        warmup=2, iters=5)
-    bytes_bf16 = kd * n * 2
-    bytes_packed = kd * n * 4 // 8 + k * 4      # 4-bit packing for K=16
-    rows.append((
-        "codebook_matmul_ref_jit", us_ref,
-        f"weight_bytes bf16={bytes_bf16} packed={bytes_packed} "
-        f"(x{bytes_bf16 / bytes_packed:.1f} HBM reduction at decode)"))
+    rows.append(("codebook_matmul_ref_jit", us_ref, _accounting(kd, n, k)))
 
     us_pal = time_call(lambda *a: ops.codebook_matmul(*a, bm=128, bn=128,
                                                       bk=512), x, idx, cb,
@@ -34,6 +50,43 @@ def run():
     rows.append(("codebook_matmul_pallas_interpret", us_pal,
                  "interpret-mode (correctness only; TPU target)"))
 
+    # -- packed vs uint8 vs ref across the serving K range -------------------
+    # kd2 is a multiple of 32 so every lane count packs without a ragged
+    # tail and pidx.nbytes is exactly bits/8 per weight.
+    m2, kd2, n2 = 64, 1024, 256
+    x2 = jax.random.normal(key, (m2, kd2), jnp.float32)
+    rng = np.random.RandomState(0)
+    for k in (2, 4, 16, 256):
+        bits = compression.bits_per_index(k)
+        idx_np = rng.randint(0, k, size=(kd2, n2))
+        idx2 = jnp.asarray(idx_np.astype(np.uint8))
+        pidx = jnp.asarray(compression.pack_indices_2d(idx_np, k))
+        cb2 = jax.random.normal(jax.random.fold_in(key, k), (k,))
+        bm, bn, bk = dispatch.packed_block_sizes(m2, kd2, n2, bits)
+
+        us = time_call(jax.jit(ref.codebook_matmul_ref), x2, idx2, cb2,
+                       warmup=2, iters=5)
+        rows.append((f"codebook_matmul_ref_K{k}", us,
+                     f"dense-gather oracle ({bits}-bit indices)"))
+
+        us = time_call(lambda *a: ops.codebook_matmul(*a, bm=bm, bn=bn,
+                                                      bk=bk),
+                       x2, idx2, cb2, warmup=1, iters=2)
+        rows.append((f"codebook_matmul_uint8_interp_K{k}", us,
+                     "idx_bytes/weight=1.0 (uint8 HBM layout)"))
+
+        us = time_call(lambda *a: ops.packed_codebook_matmul(
+            *a, bm=bm, bn=bn, bk=bk), x2, pidx, cb2, warmup=1, iters=2)
+        bpw = pidx.size * 4 / (kd2 * n2)
+        expect = bits / 8
+        flag = "" if abs(bpw - expect) < 1e-9 else " MISMATCH"
+        rows.append((
+            f"codebook_matmul_packed_interp_K{k}", us,
+            f"idx_bytes/weight={bpw:.4f} (== bits_per_index/8 = "
+            f"{expect:.4f}{flag}; +{k * 4} B codebook; "
+            f"blocks bm={bm} bn={bn} bk={bk})"))
+
+    # -- kmeans assign -------------------------------------------------------
     p = 1 << 20
     w = jax.random.normal(key, (p,))
     cbk = jnp.sort(jax.random.normal(key, (16,)))

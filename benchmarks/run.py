@@ -1,9 +1,14 @@
 """Benchmark harness — one module per paper table/figure + systems benches.
 
-Prints ``name,us_per_call,derived`` CSV.  Select with --only <substring>.
+Prints ``name,us_per_call,derived`` CSV.  Select with --only <substring>;
+``--json <path>`` additionally writes a machine-readable
+``{name: {"us_per_call": float, "derived": str}}`` dump (e.g.
+``BENCH_kernels.json``) so the perf trajectory is tracked across PRs —
+CI runs ``--only kernels --json BENCH_kernels.json`` and uploads it.
 """
 import argparse
 import importlib
+import json
 import sys
 import traceback
 
@@ -23,9 +28,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run modules whose name contains this substring")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON "
+                         "(name → us_per_call + derived)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    results = {}
     failures = 0
     for modname in MODULES:
         if args.only and args.only not in modname:
@@ -34,10 +43,17 @@ def main() -> None:
             mod = importlib.import_module(modname)
             for name, us, derived in mod.run():
                 print(f"{name},{us:.1f},{derived}", flush=True)
+                results[name] = {"us_per_call": round(float(us), 1),
+                                 "derived": str(derived)}
         except Exception:                          # noqa: BLE001
             failures += 1
-            print(f"{modname},ERROR,{traceback.format_exc(limit=3)!r}",
-                  flush=True)
+            err = traceback.format_exc(limit=3)
+            print(f"{modname},ERROR,{err!r}", flush=True)
+            results[modname] = {"us_per_call": None, "derived": f"ERROR: {err}"}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(results)} rows to {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

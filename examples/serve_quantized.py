@@ -9,13 +9,17 @@ Pipeline — each arrow is one API call:
       → LCTrainer.from_plan(...).run(...)        # LC fit (train-tiny)
       → plan.pack(params, lc_state)              # PackedModel artifact
       → packed.save(dir) / PackedModel.load(dir) # on-disk round trip
-      → packed.serving_params()                  # uint8 idx + codebooks
-      → prefill/decode (MLP matmuls via repro.kernels.dispatch:
-        Mosaic codebook-matmul on TPU, jnp reference on CPU)
+      → packed.serving_params(packed=True)       # bit-packed uint32 words
+                                                 #   + codebooks + layout
+      → prefill/decode (MLP matmuls via repro.kernels.dispatch
+        packed_codebook_matmul: Mosaic on TPU, jnp reference on CPU —
+        bits_per_index(K)/8 bytes/weight of HBM index traffic)
 
 The script verifies the acceptance contract: ``load().decode()`` is
-bit-exact vs the LC ``finalize`` params, and serving from the packed
-artifact reproduces the dense-reference logits within 1e-2.
+bit-exact vs the LC ``finalize`` params, and serving from the bit-packed
+layout reproduces both the legacy uint8-index layout (the retained
+fallback/oracle, ``packed=False``) and the dense-reference logits within
+1e-2.
 """
 import argparse
 import tempfile
@@ -76,9 +80,11 @@ def main():
     assert exact, "packed decode must be bit-exact vs lc.finalize"
 
     # --- serve from the packed artifact ------------------------------------
-    sparams = packed.serving_params()              # MLP stays quantized
+    sparams = packed.serving_params(packed=True)   # bit-packed MLP weights
+    uparams = packed.serving_params(packed=False)  # uint8 oracle layout
     print(f"serving {args.requests} batched requests from the packed "
-          f"artifact (kernel backend: {dispatch.default_backend()})...")
+          f"artifact (kernel backend: {dispatch.default_backend()}, "
+          f"{s['bits_per_weight']/8:g} B/weight HBM index traffic)...")
     prompts = pipe.next()["tokens"][:args.requests, :args.prompt_len]
 
     def serve(p):
@@ -104,12 +110,16 @@ def main():
         return jnp.concatenate(out, 1), jnp.concatenate(logits, 1)
 
     gen_q, logits_q = serve(sparams)
+    gen_u, logits_u = serve(uparams)
     gen_d, logits_d = serve(qparams)
     err = float(jnp.max(jnp.abs(logits_q - logits_d)))
+    err_u = float(jnp.max(jnp.abs(logits_q - logits_u)))
     same = bool(jnp.all(gen_q == gen_d))
-    print(f"packed-vs-dense serve: max |Δlogits| = {err:.2e} "
-          f"(tokens identical: {same})")
+    print(f"bit-packed-vs-dense serve: max |Δlogits| = {err:.2e} "
+          f"(tokens identical: {same}); vs uint8 oracle layout: "
+          f"max |Δlogits| = {err_u:.2e}")
     assert err < 1e-2, "packed serving must match dense logits within 1e-2"
+    assert err_u < 1e-4, "bit-packed layout must match the uint8 oracle"
 
     gen = np.asarray(gen_q)
     for r in range(args.requests):

@@ -18,3 +18,8 @@ cd "$(dirname "$0")/.."
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# Kernel-bench smoke (serve-path byte accounting + perf trajectory): the
+# same CSV/JSON CI uploads as an artifact (BENCH_kernels.{csv,json}).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
+    --only kernels --json BENCH_kernels.json | tee BENCH_kernels.csv

@@ -37,6 +37,10 @@ from repro.core.schemes import (     # noqa: F401
     register_scheme,
     registered_schemes,
 )
-from repro.core.compression import PackedLeaf, PackedModel  # noqa: F401
+from repro.core.compression import (  # noqa: F401
+    PackedLayout,
+    PackedLeaf,
+    PackedModel,
+)
 from repro.core.plan import CompressionPlan, QSpecPolicy    # noqa: F401
 from repro.core import baselines, compression, kmeans, quant_ops  # noqa: F401

@@ -79,6 +79,66 @@ def unpack_indices(words: Array, n: int, k: int) -> Array:
     return out.ravel()[:n].astype(jnp.int32)
 
 
+def pack_indices_2d(idx: np.ndarray, k: int) -> np.ndarray:
+    """Column-preserving pack for the serve-path matmul operand.
+
+    ``idx`` [Kd, N] → uint32 words [⌈Kd/lanes⌉, N]: word (w, n) holds the
+    ``lanes`` consecutive *reduction-axis* indices idx[w·lanes+l, n] at bit
+    offset l·bits (same little-endian no-straddle layout as
+    :func:`pack_indices`, applied per output column).  This is the HBM
+    layout ``kernels.codebook_matmul_packed`` consumes: one [bkw, bn] word
+    tile unpacks in VMEM to a [bkw·lanes, bn] index tile with a shift+mask.
+    """
+    bits = bits_per_index(k)
+    lanes = 32 // bits
+    idx = np.asarray(idx, dtype=np.uint32)
+    kd, n = idx.shape
+    pad = (-kd) % lanes
+    idx = np.pad(idx, ((0, pad), (0, 0)))
+    idx = idx.reshape(-1, lanes, n)
+    words = np.zeros((idx.shape[0], n), dtype=np.uint32)
+    for lane in range(lanes):
+        words |= idx[:, lane, :] << np.uint32(lane * bits)
+    return words
+
+
+def unpack_indices_2d(words: Array, kd: int, k: int) -> Array:
+    """Inverse of :func:`pack_indices_2d` (jnp; usable on device / in-jit)."""
+    bits = bits_per_index(k)
+    lanes = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    shifts = jnp.arange(lanes, dtype=jnp.uint32) * bits
+    out = (words[:, None, :] >> shifts[None, :, None]) & mask
+    return out.reshape(-1, words.shape[-1])[:kd].astype(jnp.int32)
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class PackedLayout:
+    """Static lane metadata of one packed-index matmul operand.
+
+    Registered static so it rides inside a params pytree (including through
+    ``jax.lax.scan`` over stacked layers) without becoming a traced leaf —
+    the kernel needs these as Python ints at trace time.
+    """
+
+    kd: int        # true reduction dim (rows of the unpacked idx)
+    n: int         # output dim (columns)
+    k: int         # index-space size (codebook entries)
+    bits: int      # bits per index = bits_per_index(k)
+    lanes: int     # indices per uint32 word = 32 // bits
+
+    @classmethod
+    def make(cls, kd: int, n: int, k: int) -> "PackedLayout":
+        bits = bits_per_index(k)
+        return cls(kd=kd, n=n, k=k, bits=bits, lanes=32 // bits)
+
+    @property
+    def words(self) -> int:
+        """Rows of the packed word array: ⌈kd/lanes⌉."""
+        return -(-self.kd // self.lanes)
+
+
 def quantized_bytes(p1: int, p0: int, k: int, codebook_entries: int,
                     b: int = 32) -> int:
     """Absolute storage in bytes of the packed model (for bench tables)."""
@@ -259,23 +319,47 @@ class PackedModel:
 
     def serving_params(
         self, quant_names: Tuple[str, ...] = ("w_in", "w_gate", "w_out"),
+        packed: bool = False,
     ) -> PyTree:
         """Params pytree for quantized serving: leaves named in
-        ``quant_names`` stay quantized as ``<name>_idx`` (uint8 indices) +
-        ``<name>_cb`` (codebook) — the layout ``models.layers.apply_mlp``
-        routes through ``kernels.dispatch`` — everything else decodes dense.
+        ``quant_names`` stay quantized — everything else decodes dense.
+
+        ``packed=False`` (legacy/oracle layout): ``<name>_idx`` uint8
+        indices + ``<name>_cb`` codebook — 1 B/weight of HBM index traffic.
+
+        ``packed=True`` (the bit-packed serve layout): ``<name>_pidx``
+        uint32 words from :func:`pack_indices_2d` ([⌈Kd/lanes⌉, N], with a
+        leading G axis on grouped leaves), ``<name>_cb``, and
+        ``<name>_layout`` (static :class:`PackedLayout` lane metadata) —
+        exactly ``bits_per_index(k)/8`` bytes/weight of HBM index traffic,
+        consumed directly by ``kernels.dispatch.packed_codebook_matmul``.
+        No uint8 (or wider) index array is ever materialized.
         """
         entries: Dict[Tuple[PathToken, ...], Any] = {}
         for ks, leaf in self.packed.items():
             tokens = path_tokens(ks)
             name = tokens[-1]
-            if isinstance(name, str) and name in quant_names and leaf.k <= 256:
-                idx = leaf.indices().astype(jnp.uint8)
-                entries[tokens[:-1] + (f"{name}_idx",)] = idx
-                entries[tokens[:-1] + (f"{name}_cb",)] = jnp.asarray(
-                    leaf.codebook, jnp.float32)
-            else:
+            if not (isinstance(name, str) and name in quant_names
+                    and leaf.k <= 256):
                 entries[tokens] = leaf.decode()
+                continue
+            cb = jnp.asarray(leaf.codebook, jnp.float32)
+            if packed:
+                idx = np.asarray(leaf.indices())
+                if leaf.grouped:
+                    words = np.stack([pack_indices_2d(g, leaf.k)
+                                      for g in idx])
+                    kd, n = idx.shape[1], idx.shape[2]
+                else:
+                    words = pack_indices_2d(idx, leaf.k)
+                    kd, n = idx.shape
+                entries[tokens[:-1] + (f"{name}_pidx",)] = jnp.asarray(words)
+                entries[tokens[:-1] + (f"{name}_layout",)] = (
+                    PackedLayout.make(kd, n, leaf.k))
+            else:
+                entries[tokens[:-1] + (f"{name}_idx",)] = (
+                    leaf.indices().astype(jnp.uint8))
+            entries[tokens[:-1] + (f"{name}_cb",)] = cb
         for ks, arr in self.dense.items():
             entries[path_tokens(ks)] = jnp.asarray(arr)
         return unflatten_paths(entries)

@@ -60,18 +60,22 @@ class CompressionPlan:
     qspec: QSpecPolicy = QSpecPolicy()
     lc: LCConfig = LCConfig()
     bits_ref: int = 32          # b of eq. 14 — quote it with every ratio
+    # Run the C step shard-local via repro.dist.cstep.lc_c_step_sharded
+    # (requires a mesh at the trainer: LCTrainer.from_plan(..., mesh=m)).
+    sharded_c_step: bool = False
 
     # -- construction -------------------------------------------------------
 
     @classmethod
     def parse(cls, spec: str, *, lc: Optional[LCConfig] = None,
               qspec: Optional[QSpecPolicy] = None, bits_ref: int = 32,
+              sharded_c_step: bool = False,
               **scheme_kw: Any) -> "CompressionPlan":
         """Build a plan from a scheme spec string (``adaptive:4`` …) —
         the CLI/config entry point; validation happens in the registry."""
         return cls(scheme=make_scheme(spec, **scheme_kw),
                    lc=lc or LCConfig(), qspec=qspec or QSpecPolicy(),
-                   bits_ref=bits_ref)
+                   bits_ref=bits_ref, sharded_c_step=sharded_c_step)
 
     # -- pipeline stages ----------------------------------------------------
 

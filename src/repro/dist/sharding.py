@@ -62,7 +62,9 @@ def _model_dim(name: str, ndim: int) -> Optional[int]:
     """Which dim the model axis shards for this leaf (None: replicate)."""
     if name.endswith("_cb"):
         return None             # codebooks are tiny: replicate
-    if name.endswith("_idx"):
+    if name.endswith("_pidx"):
+        name = name[:-5]        # bit-packed indices shard like their weight
+    elif name.endswith("_idx"):
         name = name[:-4]        # quantized leaves shard like their weight
     if ndim < 2:
         return None

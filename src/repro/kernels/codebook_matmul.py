@@ -11,12 +11,20 @@ weight traffic per step drops from 2 bytes/weight (bf16) to 1 byte
 (uint8 idx; 4-bit packing halves it again — see ops.py), which directly
 scales the decode-shape memory term (§Roofline).
 
-Dequant strategy (DESIGN §4.2): one-hot contraction
-``W_tile = onehot(idx) @ codebook`` — an MXU-shaped [bk·bn, K]×[K] op —
-rather than a gather, which Mosaic lowers poorly for 2-D tiles.
+Dequant strategy: a K-entry LUT gather ``cb[idx]`` (``dequant="lut"``, the
+default) — O(bk·bn) independent of K, so a K=256 adaptive codebook costs
+the same per tile as K=4.  ``dequant="onehot"`` keeps the original
+MXU-shaped one-hot contraction ``W_tile = onehot(idx) @ codebook``
+(O(bk·bn·K)) as a fallback for Mosaic versions that lower small-table
+gathers poorly (flip globally via ``REPRO_DEQUANT=onehot`` — see
+dispatch.py).
 
 Grid: (M/bm, N/bn, Kd/bk), k innermost; f32 accumulation directly in the
 revisited output block (sequential TPU grid ⇒ safe).
+
+For the bit-packed index operand (the end-to-end serve path — bits/8
+bytes/weight instead of this kernel's 1 byte/weight uint8 indices) see
+``codebook_matmul_packed.py``.
 """
 from __future__ import annotations
 
@@ -26,9 +34,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.codebook_matmul_packed import _dequant_tile
+
 
 def _kernel(x_ref, idx_ref, cb_ref, o_ref, *, k_entries: int, bk: int,
-            bn: int):
+            bn: int, dequant: str):
     kk = pl.program_id(2)
 
     @pl.when(kk == 0)
@@ -36,12 +46,10 @@ def _kernel(x_ref, idx_ref, cb_ref, o_ref, *, k_entries: int, bk: int,
         o_ref[...] = jnp.zeros_like(o_ref)
 
     x = x_ref[...]                                    # [bm, bk]
-    idx = idx_ref[...]                                # [bk, bn] uint8/int32
+    idx = idx_ref[...].astype(jnp.int32)              # [bk, bn] uint8/int32
     cb = cb_ref[0, :]                                 # [K]
 
-    onehot = (idx.astype(jnp.int32)[:, :, None] ==
-              jax.lax.broadcasted_iota(jnp.int32, (bk, bn, k_entries), 2))
-    w = jnp.sum(onehot.astype(cb.dtype) * cb[None, None, :], axis=2)  # [bk,bn]
+    w = _dequant_tile(idx, cb, k_entries, dequant)    # [bk, bn]
     o_ref[...] += jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
                           preferred_element_type=jnp.float32)
 
@@ -52,6 +60,7 @@ def codebook_matmul_pallas(
     codebook: jax.Array,     # [K] float
     *,
     bm: int = 128, bn: int = 128, bk: int = 512,
+    dequant: str = "lut",
     interpret: bool = False,
 ) -> jax.Array:
     m, kd = x.shape
@@ -64,8 +73,11 @@ def codebook_matmul_pallas(
     ip = jnp.pad(idx, ((0, pk), (0, pn)))
     gm, gn, gk = xp.shape[0] // bm, ip.shape[1] // bn, xp.shape[1] // bk
 
+    if dequant not in ("lut", "onehot"):
+        raise ValueError(f"dequant={dequant!r}; choose lut|onehot")
     out = pl.pallas_call(
-        functools.partial(_kernel, k_entries=k_entries, bk=bk, bn=bn),
+        functools.partial(_kernel, k_entries=k_entries, bk=bk, bn=bn,
+                          dequant=dequant),
         grid=(gm, gn, gk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),

@@ -4,24 +4,39 @@ PackedModel artifact and the kernels.
 One call site (``models.layers.apply_mlp``, ``launch/serve.py --packed``)
 routes every codebook matmul here; this module picks the implementation:
 
-* ``pallas``            — the Mosaic ``codebook_matmul`` kernel
-  (dequant-in-VMEM one-hot contraction; TPU only);
-* ``pallas_interpret``  — same kernel body, Python interpreter (CPU
+* ``pallas``            — the Mosaic kernels (dequant-in-VMEM; TPU only):
+  ``codebook_matmul`` for uint8 indices, ``codebook_matmul_packed`` for
+  the bit-packed uint32 word operand;
+* ``pallas_interpret``  — same kernel bodies, Python interpreter (CPU
   correctness checks; slow);
 * ``ref``               — pure-jnp gather-dequant + dot
   (``kernels.ref``) — the CPU serving default, and the allclose oracle.
 
 Default: pallas on TPU, ref elsewhere; override with
 ``REPRO_KERNEL_BACKEND=pallas|pallas_interpret|ref`` or per call.
+
+Dequant strategy inside the Pallas kernels is a K-entry LUT gather by
+default; ``REPRO_DEQUANT=onehot`` falls back to the one-hot contraction
+(O(K) per weight — the pre-LUT behaviour) for Mosaic versions that lower
+small-table gathers poorly.
+
+Block-size autotune (``packed_block_sizes``): the packed route picks
+(bm, bn, bk) from a shape-keyed table — exact (M, Kd, N, bits) entries
+first, then a roofline heuristic that separates decode shapes (M small:
+one activation tile, stream the packed weights with wide bn·bk tiles)
+from prefill shapes (M large: MXU-balanced 128×128×512).  Override with
+``REPRO_PACKED_BLOCKS=bm,bn,bk``.
 """
 from __future__ import annotations
 
 import os
-from typing import Any, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.compression import (PackedLayout, bits_per_index,
+                                    unpack_indices_2d)
 from repro.kernels import ops, ref
 
 Array = jax.Array
@@ -39,18 +54,119 @@ def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
+def default_dequant() -> str:
+    env = os.environ.get("REPRO_DEQUANT", "lut")
+    if env not in ("lut", "onehot"):
+        raise ValueError(f"REPRO_DEQUANT={env!r}; choose lut|onehot")
+    return env
+
+
+# ---------------------------------------------------------------------------
+# Packed-route block-size autotune
+# ---------------------------------------------------------------------------
+
+# Exact-shape entries (M, Kd, N, bits) → (bm, bn, bk), seeded from the
+# roofline model for the bench/serve shapes; extend by measuring sweeps
+# with REPRO_PACKED_BLOCKS and recording winners here.
+_PACKED_BLOCK_TABLE: Dict[Tuple[int, int, int, int],
+                          Tuple[int, int, int]] = {
+    (256, 2048, 512, 4): (128, 128, 512),   # bench prefill shape
+    (64, 1024, 256, 4): (64, 256, 512),     # bench mid shape
+    (1, 2048, 512, 4): (8, 512, 1024),      # single-request decode
+}
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def packed_block_sizes(m: int, kd: int, n: int, bits: int
+                       ) -> Tuple[int, int, int]:
+    """(bm, bn, bk) for the packed kernel at this shape.
+
+    Priority: ``REPRO_PACKED_BLOCKS=bm,bn,bk`` env override → exact
+    (M, Kd, N, bits) table hit → roofline heuristic.  The result always
+    has bk a multiple of lanes (= 32 // bits) so word tiles never
+    straddle a k-block boundary.
+    """
+    env = os.environ.get("REPRO_PACKED_BLOCKS")
+    if env:
+        try:
+            bm, bn, bk = (int(v) for v in env.split(","))
+        except ValueError as e:
+            raise ValueError(
+                f"REPRO_PACKED_BLOCKS={env!r}; expected 'bm,bn,bk'") from e
+    else:
+        hit = _PACKED_BLOCK_TABLE.get((m, kd, n, bits))
+        if hit is not None:
+            bm, bn, bk = hit
+        elif m <= 32:
+            # Decode shape: activations fit one tile; widen the weight
+            # tiles so the DMA stream of packed words stays long.
+            bm, bn, bk = _round_up(min(m, 32), 8), 256, 1024
+        elif m <= 128:
+            bm, bn, bk = 64, 128, 512
+        else:
+            # Prefill shape: MXU-balanced tiles.
+            bm, bn, bk = 128, 128, 512
+        # Don't over-pad small layers past one tile.
+        bn = min(bn, _round_up(n, 128))
+        bk = min(bk, _round_up(kd, 128))
+    lanes = 32 // bits
+    bk = max(lanes, bk // lanes * lanes)
+    return bm, bn, bk
+
+
 def codebook_matmul(x: Array, idx: Array, codebook: Array, *,
                     backend: Optional[str] = None,
                     bm: int = 128, bn: int = 128, bk: int = 512) -> Array:
     """y[M, N] = x[M, Kd] · codebook[idx[Kd, N]] on the chosen backend."""
     b = backend or default_backend()
+    dq = default_dequant()
     if b == "pallas":
         return ops.codebook_matmul(x, idx, codebook, bm=bm, bn=bn, bk=bk,
-                                   interpret=False)
+                                   dequant=dq, interpret=False)
     if b == "pallas_interpret":
         return ops.codebook_matmul(x, idx, codebook, bm=bm, bn=bn, bk=bk,
-                                   interpret=True)
+                                   dequant=dq, interpret=True)
     return ref.codebook_matmul_ref(x, idx, codebook)
+
+
+def packed_codebook_matmul(x: Array, pidx: Array, codebook: Array, *,
+                           layout: Optional[PackedLayout] = None,
+                           backend: Optional[str] = None,
+                           blocks: Optional[Tuple[int, int, int]] = None,
+                           ) -> Array:
+    """y[M, N] = x[M, Kd] · codebook[unpack(pidx)] with the bit-packed
+    uint32 word operand (``pack_indices_2d`` layout) HBM-resident end to
+    end — bits_per_index(K)/8 bytes/weight of index traffic.
+
+    ``layout`` (the static lane metadata ``serving_params(packed=True)``
+    emits) is validated against the operands when given; block sizes come
+    from :func:`packed_block_sizes` unless ``blocks`` overrides.
+    """
+    k = int(codebook.shape[-1])
+    bits = bits_per_index(k)
+    m, kd = x.shape
+    wk, n = pidx.shape
+    if layout is not None:
+        if (layout.kd, layout.n, layout.k) != (kd, n, k):
+            raise ValueError(f"packed layout {layout} does not match "
+                             f"operands x[{m},{kd}] pidx[...,{n}] cb[{k}]")
+        bits = layout.bits
+    # Validate the word count on every backend — the ref route would
+    # otherwise silently truncate a mismatched (stale/wrong-leaf) operand.
+    lanes = 32 // bits
+    if wk != -(-kd // lanes):
+        raise ValueError(f"pidx rows {wk} != ceil({kd}/{lanes}) — operand "
+                         f"not in pack_indices_2d layout for K={k}")
+    b = backend or default_backend()
+    if b == "ref":
+        return ref.packed_codebook_matmul_ref(x, pidx, codebook)
+    bm, bn, bk = blocks or packed_block_sizes(m, kd, n, bits)
+    return ops.packed_codebook_matmul(
+        x, pidx, codebook, bm=bm, bn=bn, bk=bk, dequant=default_dequant(),
+        interpret=(b == "pallas_interpret"))
 
 
 def quantized_matmul(x: Array, idx: Array, codebook: Array, *,
@@ -66,6 +182,18 @@ def quantized_matmul(x: Array, idx: Array, codebook: Array, *,
     return y.reshape(lead + (idx.shape[-1],)).astype(x.dtype)
 
 
+def packed_quantized_matmul(x: Array, pidx: Array, codebook: Array, *,
+                            layout: Optional[PackedLayout] = None,
+                            backend: Optional[str] = None) -> Array:
+    """Batched-x wrapper over :func:`packed_codebook_matmul` — the serve-
+    path entry ``apply_mlp`` uses for the ``<name>_pidx`` layout."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = packed_codebook_matmul(x2, pidx, codebook, layout=layout,
+                               backend=backend)
+    return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
+
+
 def decode_leaf(idx: Array, codebook: Array, dtype=None) -> Array:
     """Materialize a dense weight from (indices, codebook) — the fallback
     for call sites without a fused kernel.  A 2-D codebook is per-group
@@ -78,18 +206,38 @@ def decode_leaf(idx: Array, codebook: Array, dtype=None) -> Array:
     return w.astype(dtype) if dtype is not None else w
 
 
+def decode_packed_leaf(pidx: Array, codebook: Array, layout: PackedLayout,
+                       dtype=None) -> Array:
+    """Materialize a dense weight from the bit-packed word operand
+    (``pack_indices_2d`` layout; grouped leaves carry a leading G axis)."""
+    if pidx.ndim == 3:
+        idx = jax.vmap(lambda w: unpack_indices_2d(w, layout.kd,
+                                                   layout.k))(pidx)
+    else:
+        idx = unpack_indices_2d(pidx, layout.kd, layout.k)
+    return decode_leaf(idx, codebook, dtype)
+
+
 def decode_params(tree: Any) -> Any:
     """In-jit dense reconstruction of a ``serving_params``-layout tree:
-    every ``<name>_idx``/``<name>_cb`` pair collapses to a dense ``<name>``
-    leaf.  Under jit only the packed arrays are HBM-resident inputs; the
-    dense weights are temporaries XLA schedules per use."""
+    every ``<name>_idx``/``<name>_cb`` (or ``<name>_pidx``/``<name>_cb``/
+    ``<name>_layout``) group collapses to a dense ``<name>`` leaf.  Under
+    jit only the packed arrays are HBM-resident inputs; the dense weights
+    are temporaries XLA schedules per use."""
     if isinstance(tree, dict):
         out = {}
         for key, val in tree.items():
-            if key.endswith("_idx"):
+            if key.endswith("_idx") and not key.endswith("_pidx"):
                 name = key[:-4]
                 out[name] = decode_leaf(val, tree[f"{name}_cb"])
-            elif key.endswith("_cb") and f"{key[:-3]}_idx" in tree:
+            elif key.endswith("_pidx"):
+                name = key[:-5]
+                out[name] = decode_packed_leaf(val, tree[f"{name}_cb"],
+                                               tree[f"{name}_layout"])
+            elif key.endswith("_cb") and (f"{key[:-3]}_idx" in tree
+                                          or f"{key[:-3]}_pidx" in tree):
+                continue
+            elif key.endswith("_layout") and f"{key[:-7]}_pidx" in tree:
                 continue
             else:
                 out[key] = decode_params(val)

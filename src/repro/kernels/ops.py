@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.codebook_matmul import codebook_matmul_pallas
+from repro.kernels.codebook_matmul_packed import codebook_matmul_packed_pallas
 from repro.kernels.fixed_quant import fixed_quant_pallas
 from repro.kernels.kmeans_assign import kmeans_assign_pallas
 
@@ -37,18 +38,40 @@ def kmeans_assign(w: jax.Array, codebook: jax.Array,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bm", "bn", "bk", "interpret"))
-def _codebook_matmul_jit(x, idx, codebook, bm, bn, bk, interpret):
+                   static_argnames=("bm", "bn", "bk", "dequant", "interpret"))
+def _codebook_matmul_jit(x, idx, codebook, bm, bn, bk, dequant, interpret):
     return codebook_matmul_pallas(x, idx, codebook, bm=bm, bn=bn, bk=bk,
-                                  interpret=interpret)
+                                  dequant=dequant, interpret=interpret)
 
 
 def codebook_matmul(x: jax.Array, idx: jax.Array, codebook: jax.Array,
                     *, bm: int = 128, bn: int = 128, bk: int = 512,
+                    dequant: str = "lut",
                     interpret: Optional[bool] = None) -> jax.Array:
     """y = x · codebook[idx] without materializing float weights in HBM."""
-    return _codebook_matmul_jit(x, idx, codebook, bm, bn, bk,
+    return _codebook_matmul_jit(x, idx, codebook, bm, bn, bk, dequant,
                                 _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "dequant", "interpret"))
+def _packed_codebook_matmul_jit(x, pidx, codebook, bm, bn, bk, dequant,
+                                interpret):
+    return codebook_matmul_packed_pallas(x, pidx, codebook, bm=bm, bn=bn,
+                                         bk=bk, dequant=dequant,
+                                         interpret=interpret)
+
+
+def packed_codebook_matmul(x: jax.Array, pidx: jax.Array,
+                           codebook: jax.Array, *, bm: int = 128,
+                           bn: int = 128, bk: int = 512,
+                           dequant: str = "lut",
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """y = x · codebook[unpack(pidx)] with the ``pack_indices_2d`` uint32
+    word operand HBM-resident: bits_per_index(K)/8 bytes/weight of index
+    traffic (see codebook_matmul_packed.py)."""
+    return _packed_codebook_matmul_jit(x, pidx, codebook, bm, bn, bk,
+                                       dequant, _auto_interpret(interpret))
 
 
 @functools.partial(jax.jit,

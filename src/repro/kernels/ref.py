@@ -28,6 +28,18 @@ def codebook_matmul_ref(x: jax.Array, idx: jax.Array, codebook: jax.Array):
     return (x.astype(jnp.float32) @ w).astype(x.dtype)
 
 
+def packed_codebook_matmul_ref(x: jax.Array, pidx: jax.Array,
+                               codebook: jax.Array):
+    """Reference for kernels.codebook_matmul_packed: unpack the uint32 word
+    operand (``compression.pack_indices_2d`` layout), then gather + dot.
+    Also the CPU serving path — the unpack is an in-jit temporary, so the
+    HBM-resident operand stays bit-packed here too."""
+    from repro.core.compression import unpack_indices_2d
+
+    idx = unpack_indices_2d(pidx, x.shape[-1], codebook.shape[0])
+    return codebook_matmul_ref(x, idx, codebook)
+
+
 def fixed_quant_ref(w: jax.Array, mode: str, pow2_c: int = 4,
                     scale: float = 1.0):
     """Reference for kernels.fixed_quant via repro.core.quant_ops."""

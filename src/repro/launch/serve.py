@@ -9,10 +9,13 @@ prefills a batch of prompts and runs a greedy decode loop — the same
 
 ``--packed <dir>`` serves straight from a PackedModel artifact (the
 output of ``launch.train --lc`` / ``CompressionPlan.pack``): MLP weights
-stay quantized in HBM (uint8 idx + codebook) and their matmuls route
-through ``repro.kernels.dispatch`` — Mosaic codebook-matmul on TPU, jnp
-reference on CPU.  The arch/config must match the one the artifact was
-packed from.
+stay quantized in HBM and their matmuls route through
+``repro.kernels.dispatch`` — Mosaic codebook-matmul on TPU, jnp reference
+on CPU.  ``--serve-layout packed`` (default) keeps the bit-packed uint32
+word operand HBM-resident (bits_per_index(K)/8 bytes/weight — the eq.-14
+footprint); ``--serve-layout uint8`` is the legacy 1 B/weight uint8-index
+layout kept as the fallback/oracle.  The arch/config must match the one
+the artifact was packed from.
 """
 import argparse
 import os
@@ -54,6 +57,11 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--packed", default=None,
                     help="PackedModel artifact dir: serve quantized")
+    ap.add_argument("--serve-layout", default="packed",
+                    choices=("packed", "uint8"),
+                    help="quantized HBM layout: bit-packed uint32 words "
+                         "(bits/8 B/weight) or legacy uint8 indices "
+                         "(1 B/weight oracle)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -70,10 +78,14 @@ def main():
     if args.packed:
         from repro.core import PackedModel
         packed = PackedModel.load(args.packed)
-        params = packed.serving_params()
+        params = packed.serving_params(packed=args.serve_layout == "packed")
         s = packed.summary()
+        idx_bytes = (s["bits_per_weight"] / 8
+                     if args.serve_layout == "packed" else 1.0)
         print(f"serving packed artifact: {s['scheme']} "
-              f"({s['bits_per_weight']} bit/weight, ×{s['ratio']:.1f})")
+              f"({s['bits_per_weight']} bit/weight, ×{s['ratio']:.1f}, "
+              f"{args.serve_layout} layout: {idx_bytes:g} B/weight HBM "
+              f"index traffic)")
     else:
         params = init_params(jax.random.PRNGKey(0), cfg)
         if args.ckpt_dir:

@@ -129,10 +129,18 @@ def init_train_state(params: PyTree, tc: TrainerConfig,
 # ---------------------------------------------------------------------------
 
 class LCTrainer:
-    """Paper figs. 2-4: alternate L steps (SGD epochs) with C steps."""
+    """Paper figs. 2-4: alternate L steps (SGD epochs) with C steps.
+
+    ``sharded_c=True`` + a ``mesh`` routes the C step through
+    ``repro.dist.cstep.lc_c_step_sharded`` (shard_map over ``shard_axis``)
+    so production LC solves Π(w) where the weight shards live — the plan
+    flag ``CompressionPlan(sharded_c_step=True)`` sets this through
+    :meth:`from_plan`.
+    """
 
     def __init__(self, loss_fn, scheme: Scheme, qspec, lc_cfg: lc_mod.LCConfig,
-                 tc: TrainerConfig, jit: bool = True):
+                 tc: TrainerConfig, jit: bool = True, mesh=None,
+                 shard_axis: str = "model", sharded_c: bool = False):
         scheme = as_scheme(scheme)                   # accept a plan too
         self.loss_fn = loss_fn
         self.scheme = scheme
@@ -140,8 +148,17 @@ class LCTrainer:
         self.lc_cfg = lc_cfg
         self.tc = tc
         self._train_step = make_train_step(loss_fn, tc, qspec)
-        self._c_step = functools.partial(
-            lc_mod.c_step, scheme=scheme, qspec=qspec, config=lc_cfg)
+        if sharded_c:
+            if mesh is None:
+                raise ValueError("sharded_c requires a mesh (pass mesh= "
+                                 "to LCTrainer / from_plan)")
+            from repro.dist.cstep import lc_c_step_sharded
+            self._c_step = functools.partial(
+                lc_c_step_sharded, scheme=scheme, qspec=qspec,
+                config=lc_cfg, mesh=mesh, axis=shard_axis)
+        else:
+            self._c_step = functools.partial(
+                lc_mod.c_step, scheme=scheme, qspec=qspec, config=lc_cfg)
         if jit:
             self._train_step = jax.jit(self._train_step)
             self._c_step = jax.jit(self._c_step,
@@ -149,12 +166,15 @@ class LCTrainer:
 
     @classmethod
     def from_plan(cls, loss_fn, plan, params, tc: TrainerConfig,
-                  jit: bool = True) -> "LCTrainer":
+                  jit: bool = True, mesh=None,
+                  shard_axis: str = "model") -> "LCTrainer":
         """Build a trainer straight from a CompressionPlan: the plan's
         qspec policy is applied to ``params``, its scheme and LC config
-        drive the L/C alternation."""
+        drive the L/C alternation; ``plan.sharded_c_step`` + ``mesh``
+        enable the shard-local C step."""
         return cls(loss_fn, plan.scheme, plan.build_qspec(params), plan.lc,
-                   tc, jit=jit)
+                   tc, jit=jit, mesh=mesh, shard_axis=shard_axis,
+                   sharded_c=getattr(plan, "sharded_c_step", False))
 
     def init(self, key, params) -> TrainState:
         lc_state = lc_mod.lc_init(key, params, self.scheme, self.qspec,

@@ -180,6 +180,94 @@ def test_debug_mesh_dryrun_tiny():
     assert res["ok"] and res["peak"] > 0
 
 
+def test_lc_c_step_sharded_equals_local_8dev():
+    """ROADMAP distributed item: the plan-driven shard-local C step
+    (repro.dist.cstep.lc_c_step_sharded) must walk the same (w_C, Θ)
+    trajectory as repro.core.lc.c_step — adaptive k-means statistics are
+    psum-exact, so grouped and flat leaves both match to fp tolerance."""
+    res = run_sub("""
+        from repro.core import lc as lc_mod
+        from repro.core.schemes import make_scheme
+        from repro.dist.cstep import lc_c_step_sharded
+        mesh = jax.make_mesh((8,), ("model",))
+        scheme = make_scheme("adaptive:4")
+        key = jax.random.PRNGKey(0)
+        params = {
+            "w": jax.random.normal(key, (64, 64)),            # flat leaf
+            "stack_w": jax.random.normal(key, (2, 32, 64)),   # grouped leaf
+            "tail": jax.random.normal(key, (3, 19)),          # 57 % 8 != 0
+        }
+        qspec = lc_mod.default_qspec(params)
+        cfg = lc_mod.LCConfig(mu0=1e-2, mu_growth=1.5)
+        state = lc_mod.lc_init(key, params, scheme, qspec, cfg)
+        loc = lc_mod.c_step(params, state, scheme, qspec, cfg)
+        sh = lc_c_step_sharded(params, state, scheme=scheme, qspec=qspec,
+                               config=cfg, mesh=mesh, axis="model")
+        flat_ok = all(
+            np.allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+            for a, b in zip(jax.tree_util.tree_leaves(loc.w_c),
+                            jax.tree_util.tree_leaves(sh.w_c)))
+        cb_ok = all(
+            np.allclose(np.asarray(loc.theta[p]["codebook"]),
+                        np.asarray(sh.theta[p]["codebook"]),
+                        rtol=1e-5, atol=1e-6)
+            for p in loc.theta)
+        print(json.dumps({"w_c": flat_ok, "cb": cb_ok,
+                          "mu": float(sh.mu) == float(loc.mu)}))
+    """)
+    assert res["w_c"] and res["cb"] and res["mu"]
+
+
+def test_lctrainer_sharded_c_step_plan_flag_1dev():
+    """Smoke-test the plan flag end to end on a 1-device mesh (in-process:
+    jax sees one CPU device here): CompressionPlan(sharded_c_step=True) →
+    LCTrainer.from_plan(..., mesh=...) runs, and its LC trajectory matches
+    the local-C-step trainer on the same data."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import CompressionPlan, LCConfig
+    from repro.train.trainer import LCTrainer, TrainerConfig
+
+    key = jax.random.PRNGKey(0)
+    w_true = jax.random.normal(key, (8, 8))
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (64, 8))
+    ys = xs @ w_true
+
+    def loss(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    def batches():
+        while True:
+            yield (xs, ys)
+
+    params = {"w": jax.random.normal(jax.random.fold_in(key, 2), (8, 8))}
+    tc = TrainerConfig(lr=0.05, steps_per_l=5)
+    lc = LCConfig(mu0=1e-2, mu_growth=1.5, num_lc_iters=3)
+    mesh = jax.make_mesh((1,), ("model",))
+
+    plan_sh = CompressionPlan.parse("adaptive:4", lc=lc,
+                                    sharded_c_step=True,
+                                    init_method="quantile")
+    plan_loc = CompressionPlan.parse("adaptive:4", lc=lc,
+                                     init_method="quantile")
+    tr_sh = LCTrainer.from_plan(loss, plan_sh, params, tc, mesh=mesh)
+    tr_loc = LCTrainer.from_plan(loss, plan_loc, params, tc)
+    st_sh = tr_sh.run(tr_sh.init(key, params), batches())
+    st_loc = tr_loc.run(tr_loc.init(key, params), batches())
+
+    q_sh = tr_sh.finalize(st_sh)
+    q_loc = tr_loc.finalize(st_loc)
+    np.testing.assert_allclose(np.asarray(q_sh["w"]), np.asarray(q_loc["w"]),
+                               rtol=1e-5, atol=1e-6)
+    cb_sh = st_sh.lc_state.theta["['w']"]["codebook"]
+    cb_loc = st_loc.lc_state.theta["['w']"]["codebook"]
+    np.testing.assert_allclose(np.asarray(cb_sh), np.asarray(cb_loc),
+                               rtol=1e-5, atol=1e-6)
+
+
 def test_moe_ep_shard_map_equals_vmap():
     """Rank-local EP dispatch (shard_map) == the local vmap path."""
     res = run_sub("""
