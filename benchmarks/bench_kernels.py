@@ -86,6 +86,52 @@ def run():
             f"{expect:.4f}{flag}; +{k * 4} B codebook; "
             f"blocks bm={bm} bn={bn} bk={bk})"))
 
+    # -- attention-projection packed route (full-model qleaf serving) --------
+    # q/k/v/o-ish shape: d_model → n_heads·head_dim at a prefill batch.
+    m3, kd3, n3 = 128, 512, 512
+    x3 = jax.random.normal(key, (m3, kd3), jnp.float32)
+    for k in (4, 16):
+        bits = compression.bits_per_index(k)
+        idx_np = rng.randint(0, k, size=(kd3, n3))
+        pidx = jnp.asarray(compression.pack_indices_2d(idx_np, k))
+        cb3 = jax.random.normal(jax.random.fold_in(key, 100 + k), (k,))
+        bm, bn, bk = dispatch.packed_block_sizes(m3, kd3, n3, bits)
+        us = time_call(lambda *a: ops.packed_codebook_matmul(
+            *a, bm=bm, bn=bn, bk=bk), x3, pidx, cb3, warmup=1, iters=2)
+        bpw = pidx.size * 4 / (kd3 * n3)
+        expect = bits / 8
+        flag = "" if abs(bpw - expect) < 1e-9 else " MISMATCH"
+        rows.append((
+            f"codebook_matmul_packed_attn_K{k}", us,
+            f"idx_bytes/weight={bpw:.4f} (== bits_per_index/8 = "
+            f"{expect:.4f}{flag}; +{k * 4} B codebook; qkv-proj shape "
+            f"{m3}x{kd3}x{n3}; blocks bm={bm} bn={bn} bk={bk})"))
+
+    # -- embedding dequant-on-gather (packed table, no dense [V, D]) ---------
+    v4, d4 = 4096, 256
+    toks = jnp.asarray(rng.randint(0, v4, size=(8, 32)), jnp.int32)
+    for k in (16, 256):
+        bits = compression.bits_per_index(k)
+        idx_np = rng.randint(0, k, size=(v4, d4))
+        pidx = jnp.asarray(compression.pack_indices_2d(idx_np, k))
+        cb4 = jax.random.normal(jax.random.fold_in(key, 200 + k), (k,))
+        layout = compression.PackedLayout.make(v4, d4, k)
+        gather = jax.jit(lambda t, w, c: dispatch.quantized_gather(
+            t, w, c, layout=layout))
+        us = time_call(gather, toks, pidx, cb4, warmup=2, iters=5)
+        dense_tbl = jnp.asarray(cb4)[jnp.asarray(idx_np)]
+        us_d = time_call(jax.jit(lambda t, w: w[t]), toks, dense_tbl,
+                         warmup=2, iters=5)
+        bpw = pidx.size * 4 / (v4 * d4)
+        expect = bits / 8
+        flag = "" if abs(bpw - expect) < 1e-9 else " MISMATCH"
+        rows.append((
+            f"quantized_gather_embed_K{k}", us,
+            f"idx_bytes/weight={bpw:.4f} (== bits_per_index/8 = "
+            f"{expect:.4f}{flag}; +{k * 4} B codebook; table {v4}x{d4}, "
+            f"256 tokens; dense f32 gather {us_d:.1f}us / "
+            f"{v4 * d4 * 4} B resident)"))
+
     # -- kmeans assign -------------------------------------------------------
     p = 1 << 20
     w = jax.random.normal(key, (p,))

@@ -11,9 +11,12 @@ Pipeline — each arrow is one API call:
       → packed.save(dir) / PackedModel.load(dir) # on-disk round trip
       → packed.serving_params(packed=True)       # bit-packed uint32 words
                                                  #   + codebooks + layout
-      → prefill/decode (MLP matmuls via repro.kernels.dispatch
-        packed_codebook_matmul: Mosaic on TPU, jnp reference on CPU —
-        bits_per_index(K)/8 bytes/weight of HBM index traffic)
+      → prefill/decode (every quantized leaf — attention q/k/v/o, the
+        embedding table / LM head, MLP — serves from the packed layout
+        through repro.models.qleaf → repro.kernels.dispatch: codebook
+        matmuls + embedding dequant-on-gather, Mosaic on TPU, jnp
+        reference on CPU — bits_per_index(K)/8 bytes/weight of HBM index
+        traffic for the whole model, not just the MLP sublayer)
 
 The script verifies the acceptance contract: ``load().decode()`` is
 bit-exact vs the LC ``finalize`` params, and serving from the bit-packed
@@ -79,12 +82,16 @@ def main():
           f"(×{s['ratio']:.1f}, eq. 14); save/load→decode bit-exact: {exact}")
     assert exact, "packed decode must be bit-exact vs lc.finalize"
 
-    # --- serve from the packed artifact ------------------------------------
-    sparams = packed.serving_params(packed=True)   # bit-packed MLP weights
+    # --- serve from the packed artifact (full-model leaf coverage) ---------
+    sparams = packed.serving_params(packed=True)   # bit-packed, all leaves
     uparams = packed.serving_params(packed=False)  # uint8 oracle layout
+    cov = packed.leaf_coverage()
+    n_q = sum(r["quantized"] for r in cov)
     print(f"serving {args.requests} batched requests from the packed "
-          f"artifact (kernel backend: {dispatch.default_backend()}, "
-          f"{s['bits_per_weight']/8:g} B/weight HBM index traffic)...")
+          f"artifact ({n_q}/{len(cov)} param paths quantized — attention "
+          f"q/k/v/o + embedding/LM-head + MLP; kernel backend: "
+          f"{dispatch.default_backend()}, {s['bits_per_weight']/8:g} "
+          f"B/weight HBM index traffic)...")
     prompts = pipe.next()["tokens"][:args.requests, :args.prompt_len]
 
     def serve(p):

@@ -1,0 +1,80 @@
+"""CI smoke: serve the FULL packed mixed-stack model (attention + MLP +
+MoE + SSM layers) end to end — prefill + greedy decode — from the
+bit-packed serving layout, and assert packed-vs-dense logits allclose
+(bit-exact on the CPU ref backend).  Run by scripts/verify.sh.
+
+    PYTHONPATH=src python scripts/smoke_serve_packed.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CompressionPlan
+from repro.models.transformer import (LayerKind, ModelConfig, MoESpec,
+                                      SSMSpec, StackSpec, decode_step,
+                                      init_params, prefill)
+
+K = 16
+PROMPT, GEN = 16, 4
+
+
+def main():
+    cfg = ModelConfig(
+        name="mixed-smoke", family="hybrid", d_model=48, n_heads=4, n_kv=2,
+        head_dim=12, d_ff=96, vocab=160,
+        stacks=(StackSpec(pattern=(LayerKind("gqa", "dense"),
+                                   LayerKind("ssm", "none")), groups=2),
+                StackSpec(pattern=(LayerKind("gqa", "moe"),), groups=1)),
+        tie_embeddings=True,
+        moe=MoESpec(n_experts=4, top_k=2, n_shared=1, d_ff_expert=24,
+                    capacity_factor=4.0),
+        ssm=SSMSpec(d_inner=96, head_p=16, state_n=12, conv_w=4, chunk=8),
+        q_chunk=8, kv_chunk=8, remat=False)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    plan = CompressionPlan.parse(f"adaptive:{K}")
+    qspec = plan.build_qspec(params)
+    state = plan.init(jax.random.PRNGKey(1), params, qspec)
+    packed = plan.pack(params, state, qspec)
+
+    sp = packed.serving_params(packed=True)      # full-model bit-packed
+    dense = packed.decode()
+    cov = packed.leaf_coverage()
+    s = packed.summary()
+    print(f"smoke-serving mixed stack (gqa+mlp / ssm / gqa+moe): "
+          f"{sum(r['quantized'] for r in cov)}/{len(cov)} param paths "
+          f"quantized, {s['bits_per_weight']} bit/weight, "
+          f"eq.-14 rho={s['ratio']:.1f}")
+
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, PROMPT), 0,
+                              cfg.vocab)
+
+    def serve(p):
+        logits0, caches = prefill(p, cfg, toks, last_logits_only=True)
+
+        def grow(leaf):
+            if leaf.ndim >= 3 and leaf.shape[2] == PROMPT:
+                pad = [(0, 0)] * leaf.ndim
+                pad[2] = (0, GEN)
+                return jnp.pad(leaf, pad)
+            return leaf
+
+        caches = jax.tree_util.tree_map(grow, caches)
+        tok = jnp.argmax(logits0[:, -1], -1)[:, None].astype(jnp.int32)
+        outs = [logits0]
+        for t in range(GEN - 1):
+            lg, caches = decode_step(p, cfg, caches, tok,
+                                     jnp.asarray(PROMPT + t, jnp.int32))
+            tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+            outs.append(lg)
+        return jnp.concatenate(outs, axis=1)
+
+    lp, ld = serve(sp), serve(dense)
+    err = float(jnp.max(jnp.abs(lp - ld)))
+    assert np.allclose(np.asarray(lp), np.asarray(ld), rtol=1e-5,
+                       atol=1e-5), f"packed vs dense logits differ: {err}"
+    print(f"packed vs dense (prefill + {GEN}-step decode): "
+          f"max |dlogits| = {err:.2e} — OK")
+
+
+if __name__ == "__main__":
+    main()

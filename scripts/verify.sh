@@ -19,6 +19,11 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
+# Full-model packed-serving smoke: the mixed attention+MLP+MoE+SSM stack
+# served end to end (prefill + decode) from the bit-packed layout, packed
+# vs dense logits allclose (bit-exact on the CPU ref backend).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/smoke_serve_packed.py
+
 # Kernel-bench smoke (serve-path byte accounting + perf trajectory): the
 # same CSV/JSON CI uploads as an artifact (BENCH_kernels.{csv,json}).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \

@@ -127,11 +127,24 @@ class PackedLayout:
     k: int         # index-space size (codebook entries)
     bits: int      # bits per index = bits_per_index(k)
     lanes: int     # indices per uint32 word = 32 // bits
+    # Original (per-group) dense shape when it is not the packed (kd, n)
+    # matrix view — e.g. MoE expert stacks [E, D, F] pack as (E·D, F).
+    # None means the leaf is the plain 2-D matrix (kd, n).
+    shape: Optional[Tuple[int, ...]] = None
+    # Original leaf dtype (string).  Codebooks are stored f32 for kernel
+    # precision; dequantized weights / gathered embedding rows cast back
+    # to this so a bf16 model's packed serve matches its dense layout
+    # (the embedding is the dtype anchor of the residual stream).
+    dtype: Optional[str] = None
 
     @classmethod
-    def make(cls, kd: int, n: int, k: int) -> "PackedLayout":
+    def make(cls, kd: int, n: int, k: int,
+             shape: Optional[Tuple[int, ...]] = None,
+             dtype: Optional[str] = None) -> "PackedLayout":
         bits = bits_per_index(k)
-        return cls(kd=kd, n=n, k=k, bits=bits, lanes=32 // bits)
+        return cls(kd=kd, n=n, k=k, bits=bits, lanes=32 // bits,
+                   shape=None if shape is None else tuple(shape),
+                   dtype=dtype)
 
     @property
     def words(self) -> int:
@@ -317,12 +330,44 @@ class PackedModel:
             entries[path_tokens(ks)] = jnp.asarray(arr)
         return unflatten_paths(entries)
 
+    def _serves_quantized(self, ks: str, leaf: "PackedLeaf"
+                          ) -> Tuple[bool, str]:
+        """Shared eligibility rule for :meth:`serving_params` (full
+        coverage) and :meth:`leaf_coverage` — (serves_quantized, reason).
+
+        Leaves whose path matches ``DEFAULT_EXCLUDE`` decode dense even
+        if an artifact packed them (e.g. pre-d_skip-fix artifacts, or a
+        custom qspec): model code reads policy-excluded leaves raw, not
+        through qleaf, so serving them renamed would crash."""
+        from repro.core.lc import DEFAULT_EXCLUDE
+        tokens = path_tokens(ks)
+        if not isinstance(tokens[-1], str):
+            return False, "non-string leaf key: dense-decoded"
+        mshape = leaf.shape[1:] if leaf.grouped else leaf.shape
+        if leaf.k > 256:
+            return False, f"K={leaf.k} > 256: dense-decoded"
+        if len(mshape) < 2:
+            return False, "per-group ndim < 2: dense-decoded"
+        m = DEFAULT_EXCLUDE.search(ks)
+        if m:
+            return False, (f"policy exclude /{m.group(0)}/: model reads "
+                           "this leaf raw — dense-decoded")
+        return True, ""
+
     def serving_params(
-        self, quant_names: Tuple[str, ...] = ("w_in", "w_gate", "w_out"),
+        self, quant_names: Optional[Tuple[str, ...]] = None,
         packed: bool = False,
     ) -> PyTree:
-        """Params pytree for quantized serving: leaves named in
-        ``quant_names`` stay quantized — everything else decodes dense.
+        """Params pytree for quantized serving.
+
+        ``quant_names=None`` (default, full-model coverage): **every**
+        packed leaf stays quantized — attention q/k/v/o, the embedding
+        table / LM head, MoE expert stacks, SSM/RG-LRU projections as well
+        as the MLP leaves.  (Which leaves were packed in the first place
+        is the qspec policy — ``DEFAULT_EXCLUDE`` keeps biases, norms,
+        routers, recurrence dynamics dense.)  Pass an explicit tuple —
+        e.g. the pre-qleaf MLP set ``("w_in", "w_gate", "w_out")`` — to
+        restrict coverage; everything else decodes dense.
 
         ``packed=False`` (legacy/oracle layout): ``<name>_idx`` uint8
         indices + ``<name>_cb`` codebook — 1 B/weight of HBM index traffic.
@@ -332,37 +377,80 @@ class PackedModel:
         leading G axis on grouped leaves), ``<name>_cb``, and
         ``<name>_layout`` (static :class:`PackedLayout` lane metadata) —
         exactly ``bits_per_index(k)/8`` bytes/weight of HBM index traffic,
-        consumed directly by ``kernels.dispatch.packed_codebook_matmul``.
+        consumed directly by ``kernels.dispatch.packed_codebook_matmul``
+        / ``quantized_gather``.  Leaves whose per-group shape is not a
+        2-D matrix (MoE expert stacks [E, D, F]) pack the flattened
+        (∏lead, last) view and record the dense shape on the layout.
         No uint8 (or wider) index array is ever materialized.
         """
         entries: Dict[Tuple[PathToken, ...], Any] = {}
         for ks, leaf in self.packed.items():
             tokens = path_tokens(ks)
             name = tokens[-1]
-            if not (isinstance(name, str) and name in quant_names
-                    and leaf.k <= 256):
+            eligible, _ = self._serves_quantized(ks, leaf)
+            if not (eligible
+                    and (quant_names is None or name in quant_names)):
                 entries[tokens] = leaf.decode()
                 continue
-            cb = jnp.asarray(leaf.codebook, jnp.float32)
+            mshape = leaf.shape[1:] if leaf.grouped else leaf.shape
             if packed:
+                # f32 codebook: the kernels dequant in f32 and cast the
+                # result; the layout carries the original leaf dtype.
+                cb = jnp.asarray(leaf.codebook, jnp.float32)
+                kd = int(np.prod(mshape[:-1]))
+                n = int(mshape[-1])
                 idx = np.asarray(leaf.indices())
                 if leaf.grouped:
-                    words = np.stack([pack_indices_2d(g, leaf.k)
-                                      for g in idx])
-                    kd, n = idx.shape[1], idx.shape[2]
+                    words = np.stack([pack_indices_2d(g.reshape(kd, n),
+                                                      leaf.k) for g in idx])
                 else:
-                    words = pack_indices_2d(idx, leaf.k)
-                    kd, n = idx.shape
+                    words = pack_indices_2d(idx.reshape(kd, n), leaf.k)
                 entries[tokens[:-1] + (f"{name}_pidx",)] = jnp.asarray(words)
                 entries[tokens[:-1] + (f"{name}_layout",)] = (
-                    PackedLayout.make(kd, n, leaf.k))
+                    PackedLayout.make(kd, n, leaf.k,
+                                      shape=mshape if len(mshape) != 2
+                                      else None,
+                                      dtype=leaf.dtype))
             else:
+                # uint8 oracle layout has no static layout node to carry
+                # the dtype: store the codebook in the leaf's original
+                # dtype instead, so cb[idx] == decode() bitwise (the
+                # oracle property) for bf16 models too.
+                cb = jnp.asarray(leaf.codebook, jnp.float32).astype(
+                    leaf.dtype)
                 entries[tokens[:-1] + (f"{name}_idx",)] = (
                     leaf.indices().astype(jnp.uint8))
             entries[tokens[:-1] + (f"{name}_cb",)] = cb
         for ks, arr in self.dense.items():
             entries[path_tokens(ks)] = jnp.asarray(arr)
         return unflatten_paths(entries)
+
+    def leaf_coverage(self) -> List[Dict[str, Any]]:
+        """Per-leaf coverage rows for the eq.-14 report: every param path
+        with its shape, whether it **serves** quantized (the same
+        eligibility rule as :meth:`serving_params` with full coverage —
+        packed leaves with K > 256 or a sub-matrix per-group shape decode
+        dense at serve time), and why dense leaves are dense."""
+        from repro.core.lc import DEFAULT_EXCLUDE
+        rows: List[Dict[str, Any]] = []
+        for ks, leaf in sorted(self.packed.items()):
+            served, reason = self._serves_quantized(ks, leaf)
+            rows.append({"path": ks, "shape": tuple(leaf.shape),
+                         "quantized": served, "k": leaf.k,
+                         "bits": leaf.bits if served else None,
+                         "reason": reason})
+        for ks, arr in sorted(self.dense.items()):
+            m = DEFAULT_EXCLUDE.search(ks)
+            if m:
+                reason = f"policy exclude: /{m.group(0)}/"
+            elif np.ndim(arr) < 2:
+                reason = f"ndim {np.ndim(arr)} < 2"
+            else:
+                reason = "excluded by qspec policy"
+            rows.append({"path": ks, "shape": tuple(np.shape(arr)),
+                         "quantized": False, "k": None, "bits": None,
+                         "reason": reason})
+        return rows
 
     # -- accounting (paper eq. 14) ------------------------------------------
 

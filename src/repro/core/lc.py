@@ -43,8 +43,12 @@ Array = jax.Array
 PyTree = Any
 
 # Param-name patterns never quantized (dynamics/precision-sensitive, tiny).
+# ``d_skip`` is the Mamba-2 per-head skip gain — listed as non-quantized in
+# models/ssm.py (dynamics-sensitive, tiny) but previously missed by this
+# pattern; stacked it is a 2-D [G, H] leaf, not a multiplicative matrix.
 DEFAULT_EXCLUDE = re.compile(
-    r"(bias|scale|norm|router|gate_logit|a_log|a_param|dt_|conv1d|embed_pos)",
+    r"(bias|scale|norm|router|gate_logit|a_log|a_param|dt_|conv1d|embed_pos"
+    r"|d_skip)",
     re.IGNORECASE,
 )
 

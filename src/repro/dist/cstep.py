@@ -146,19 +146,32 @@ def compressed_psum(x: Array, axis_name: AxisName) -> Array:
 # ---------------------------------------------------------------------------
 
 def sharded_c_step(plan_or_scheme, w: Array, axis_name: Optional[AxisName],
-                   codebook: Optional[Array] = None, iters: int = 5,
+                   codebook: Optional[Array] = None,
+                   iters: Optional[int] = None,
                    ) -> Tuple[Array, dict]:
     """Solve Π(w) for one sharded quantization group, *inside* shard_map.
 
     ``plan_or_scheme``: a CompressionPlan or bare Scheme — the same object
     that drives the single-device C step, so launch code is scheme- and
     mesh-agnostic.  Returns (quantized local shard, new Θ state).
+
+    Adaptive schemes with ``codebook=None`` take the **first-C-step path**:
+    the codebook warm-starts from :func:`histogram_quantiles` (the
+    distributed analogue of ``kmeans.quantile_init`` — a psum'd global
+    histogram CDF inverse; the weights never leave their chips) and
+    k-means runs ``scheme.iters_first`` iterations instead of
+    ``iters_warm``.  On a 1-device mesh this is exactly the local
+    quantile-init first C step (the histogram discretization is the only
+    approximation, and at 4k bins it vanishes under the k-means
+    refinement — pinned by ``tests/test_dist.py``).
     """
     scheme: Scheme = as_scheme(plan_or_scheme)
     if isinstance(scheme, AdaptiveScheme):
-        if codebook is None:
-            raise ValueError("adaptive sharded C step needs a warm codebook "
-                             "(histogram-quantile init it on the first step)")
+        first = codebook is None
+        if first:
+            codebook = histogram_quantiles(w, scheme.k, axis_name)
+        if iters is None:
+            iters = scheme.iters_first if first else scheme.iters_warm
         res = kmeans_fit(w, codebook, iters=iters, axis_name=axis_name)
         q = res.codebook[res.assignments]
         return q.astype(w.dtype), {"codebook": res.codebook,

@@ -1,8 +1,10 @@
 """Backend dispatch for quantized serving — the layer between the
 PackedModel artifact and the kernels.
 
-One call site (``models.layers.apply_mlp``, ``launch/serve.py --packed``)
-routes every codebook matmul here; this module picks the implementation:
+One call site (``models.qleaf`` — the model-wide quantized-leaf
+abstraction every MLP/attention/embedding/MoE/SSM weight fetch goes
+through; ``launch/serve.py --packed``) routes every codebook matmul and
+embedding gather here; this module picks the implementation:
 
 * ``pallas``            — the Mosaic kernels (dequant-in-VMEM; TPU only):
   ``codebook_matmul`` for uint8 indices, ``codebook_matmul_packed`` for
@@ -173,12 +175,20 @@ def quantized_matmul(x: Array, idx: Array, codebook: Array, *,
                      backend: Optional[str] = None) -> Array:
     """Batched-x wrapper: x[..., Kd] · codebook[idx[Kd, N]] → [..., N].
 
-    This is the serve-path entry ``apply_mlp`` uses when a param leaf is
-    stored quantized (``<name>_idx`` + ``<name>_cb``).
+    This is the serve-path entry ``models.qleaf.qmatmul`` uses when a
+    param leaf is stored quantized (``<name>_idx`` + ``<name>_cb``).
+
+    On the ``ref`` backend (the CPU serving default) the contraction is
+    literally ``x @ codebook[idx]`` — the identical graph as the dense
+    layout, so packed-vs-dense serving is bit-exact there.
     """
+    b = backend or default_backend()
+    if b == "ref" or idx.ndim != 2:
+        y = x @ decode_leaf(idx, codebook)
+        return y.astype(x.dtype)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    y = codebook_matmul(x2, idx, codebook, backend=backend)
+    y = codebook_matmul(x2, idx, codebook, backend=b)
     return y.reshape(lead + (idx.shape[-1],)).astype(x.dtype)
 
 
@@ -186,12 +196,50 @@ def packed_quantized_matmul(x: Array, pidx: Array, codebook: Array, *,
                             layout: Optional[PackedLayout] = None,
                             backend: Optional[str] = None) -> Array:
     """Batched-x wrapper over :func:`packed_codebook_matmul` — the serve-
-    path entry ``apply_mlp`` uses for the ``<name>_pidx`` layout."""
+    path entry ``models.qleaf.qmatmul`` uses for the ``<name>_pidx``
+    layout.  Same bit-exact dense-graph property on ``ref`` as
+    :func:`quantized_matmul`; non-matrix layouts (``layout.shape`` set)
+    always take the dequant-then-dot route."""
+    b = backend or default_backend()
+    nd = layout is not None and layout.shape is not None
+    if b == "ref" or pidx.ndim != 2 or nd:
+        if layout is None:
+            raise ValueError("packed_quantized_matmul needs the static "
+                             "PackedLayout on the dequant route")
+        y = x @ decode_packed_leaf(pidx, codebook, layout)
+        return y.astype(x.dtype)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     y = packed_codebook_matmul(x2, pidx, codebook, layout=layout,
-                               backend=backend)
+                               backend=b)
     return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
+
+
+def quantized_gather(tokens: Array, pidx: Array, codebook: Array, *,
+                     layout: PackedLayout,
+                     backend: Optional[str] = None) -> Array:
+    """Embedding dequant-on-gather: rows ``codebook[unpack(pidx)[tokens]]``
+    without ever materializing the dense [V, D] table.
+
+    The HBM-resident operand is the bit-packed word table
+    ([⌈V/lanes⌉, D] uint32, :func:`~repro.core.compression.pack_indices_2d`
+    layout over the vocab axis): a token's lookup gathers its word row,
+    shift+masks its lane in registers, and LUTs the ``layout.bits``-bit
+    index through the K-entry codebook.  jnp reference backend today (XLA
+    fuses the three steps); a Mosaic gather kernel can slot in behind
+    ``backend`` later.  A 2-D codebook is per-group ([G, K] against
+    grouped tokens) — not needed for the root embedding table.
+    """
+    del backend                      # single (jnp reference) backend today
+    tokens = tokens.astype(jnp.int32)
+    mask = jnp.uint32((1 << layout.bits) - 1)
+    words = pidx[tokens // layout.lanes]             # [..., D] uint32
+    lane = (tokens % layout.lanes).astype(jnp.uint32)
+    idx = (words >> (lane[..., None] * jnp.uint32(layout.bits))) & mask
+    rows = codebook[idx.astype(jnp.int32)]
+    # Cast f32 codebook values back to the table's original dtype so the
+    # embedding keeps anchoring the residual-stream dtype (bf16 models).
+    return rows if layout.dtype is None else rows.astype(layout.dtype)
 
 
 def decode_leaf(idx: Array, codebook: Array, dtype=None) -> Array:
@@ -209,13 +257,20 @@ def decode_leaf(idx: Array, codebook: Array, dtype=None) -> Array:
 def decode_packed_leaf(pidx: Array, codebook: Array, layout: PackedLayout,
                        dtype=None) -> Array:
     """Materialize a dense weight from the bit-packed word operand
-    (``pack_indices_2d`` layout; grouped leaves carry a leading G axis)."""
+    (``pack_indices_2d`` layout; grouped leaves carry a leading G axis).
+    Non-matrix leaves (``layout.shape`` set — e.g. MoE expert stacks
+    [E, D, F] packed as (E·D, F)) are reshaped back to the dense shape."""
     if pidx.ndim == 3:
         idx = jax.vmap(lambda w: unpack_indices_2d(w, layout.kd,
                                                    layout.k))(pidx)
     else:
         idx = unpack_indices_2d(pidx, layout.kd, layout.k)
-    return decode_leaf(idx, codebook, dtype)
+    if dtype is None:
+        dtype = layout.dtype      # original leaf dtype (None on old layouts)
+    w = decode_leaf(idx, codebook, dtype)
+    if layout.shape is not None:
+        w = w.reshape(w.shape[:-2] + tuple(layout.shape))
+    return w
 
 
 def decode_params(tree: Any) -> Any:

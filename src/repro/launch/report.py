@@ -2,7 +2,14 @@
 records in experiments/dryrun (and the §Perf deltas from experiments/perf).
 
     PYTHONPATH=src python -m repro.launch.report > experiments/tables.md
+
+``--packed <dir>`` instead prints the eq.-14 whole-model compression
+report for a PackedModel artifact: the compression rate ρ(K) over *all*
+params (the paper's headline number — valid now that serving executes the
+packed layout for every quantized leaf, not just MLP), plus the per-leaf
+coverage table (which param paths quantize, which stay dense and why).
 """
+import argparse
 import glob
 import json
 import os
@@ -67,7 +74,41 @@ def roofline_table(recs):
     return "\n".join(rows)
 
 
+def packed_report(directory: str) -> None:
+    """Eq.-14 whole-model compression rate + leaf-coverage table."""
+    from repro.core import PackedModel
+    pm = PackedModel.load(directory)
+    s = pm.summary()
+    print(f"## §Compression — eq. 14, whole model ({s['scheme']})\n")
+    print(f"ρ(K={s['k']}) = {s['ratio']:.2f}  "
+          f"[{s['bits_per_weight']} bit/weight indices; "
+          f"P1={s['p1']} quantized, P0={s['p0']} dense, "
+          f"{s['codebook_entries']} codebook floats; "
+          f"b={pm.bits_ref}-bit reference: "
+          f"{s['ref_bytes']} B → {s['packed_bytes']} B]\n")
+    rows = pm.leaf_coverage()
+    n_q = sum(r["quantized"] for r in rows)
+    print(f"### Leaf coverage — {n_q}/{len(rows)} param paths served "
+          f"quantized\n")
+    print("| path | shape | quantized | bits | why dense |")
+    print("|---|---|---|---|---|")
+    for r in rows:
+        shape = "×".join(map(str, r["shape"]))
+        print(f"| `{r['path']}` | {shape} "
+              f"| {'yes' if r['quantized'] else 'no'} "
+              f"| {r['bits'] if r['quantized'] else '-'} "
+              f"| {r['reason'] or '-'} |")
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--packed", default=None, metavar="DIR",
+                    help="print the eq.-14 report for this PackedModel "
+                         "artifact instead of the dry-run tables")
+    args = ap.parse_args()
+    if args.packed:
+        packed_report(args.packed)
+        return
     recs = load("experiments/dryrun")
     ok = sum(r["status"] == "ok" for r in recs)
     sk = sum(r["status"] == "skipped" for r in recs)

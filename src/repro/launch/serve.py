@@ -8,14 +8,17 @@ prefills a batch of prompts and runs a greedy decode loop — the same
 ``decode_step`` the dry-run lowers for the decode_32k/long_500k cells.
 
 ``--packed <dir>`` serves straight from a PackedModel artifact (the
-output of ``launch.train --lc`` / ``CompressionPlan.pack``): MLP weights
-stay quantized in HBM and their matmuls route through
-``repro.kernels.dispatch`` — Mosaic codebook-matmul on TPU, jnp reference
-on CPU.  ``--serve-layout packed`` (default) keeps the bit-packed uint32
-word operand HBM-resident (bits_per_index(K)/8 bytes/weight — the eq.-14
+output of ``launch.train --lc`` / ``CompressionPlan.pack``): **every**
+quantized leaf — attention q/k/v/o, embedding table / LM head, MoE
+experts, SSM/RG-LRU projections, MLP — stays quantized in HBM and routes
+through ``repro.models.qleaf`` → ``repro.kernels.dispatch`` (Mosaic
+codebook-matmul / dequant-on-gather on TPU, jnp reference on CPU).
+``--serve-layout packed`` (default) keeps the bit-packed uint32 word
+operand HBM-resident (bits_per_index(K)/8 bytes/weight — the eq.-14
 footprint); ``--serve-layout uint8`` is the legacy 1 B/weight uint8-index
-layout kept as the fallback/oracle.  The arch/config must match the one
-the artifact was packed from.
+layout kept as the fallback/oracle.  ``--serve-leaves mlp`` restricts
+coverage to the pre-qleaf MLP-only set (the PR-2 behaviour).  The
+arch/config must match the one the artifact was packed from.
 """
 import argparse
 import os
@@ -62,6 +65,10 @@ def main():
                     help="quantized HBM layout: bit-packed uint32 words "
                          "(bits/8 B/weight) or legacy uint8 indices "
                          "(1 B/weight oracle)")
+    ap.add_argument("--serve-leaves", default="all", choices=("all", "mlp"),
+                    help="which leaves serve quantized: the whole model "
+                         "(attention/embed/MoE/SSM/MLP) or the legacy "
+                         "MLP-only set")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -78,14 +85,20 @@ def main():
     if args.packed:
         from repro.core import PackedModel
         packed = PackedModel.load(args.packed)
-        params = packed.serving_params(packed=args.serve_layout == "packed")
+        quant_names = (None if args.serve_leaves == "all"
+                       else ("w_in", "w_gate", "w_out"))
+        params = packed.serving_params(
+            quant_names=quant_names, packed=args.serve_layout == "packed")
         s = packed.summary()
         idx_bytes = (s["bits_per_weight"] / 8
                      if args.serve_layout == "packed" else 1.0)
+        cov = packed.leaf_coverage()
+        n_q = sum(r["quantized"] for r in cov)
         print(f"serving packed artifact: {s['scheme']} "
               f"({s['bits_per_weight']} bit/weight, ×{s['ratio']:.1f}, "
               f"{args.serve_layout} layout: {idx_bytes:g} B/weight HBM "
-              f"index traffic)")
+              f"index traffic; {args.serve_leaves} leaves — "
+              f"{n_q}/{len(cov)} param paths quantized)")
     else:
         params = init_params(jax.random.PRNGKey(0), cfg)
         if args.ckpt_dir:

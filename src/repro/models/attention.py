@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import apply_rope, softcap
+from repro.models.qleaf import qmatmul, qweight
 from repro.models.sharding_ctx import constrain
 
 Array = jax.Array
@@ -197,10 +198,13 @@ def init_gqa(key, d_model, n_heads, n_kv, head_dim, qkv_bias=False,
 
 
 def _qkv(p, x, n_heads, n_kv, head_dim):
+    """q/k/v projections; each weight may be dense or a quantized leaf
+    (``serving_params`` layouts) — qleaf routes to the codebook-matmul
+    kernels in that case."""
     b, s, _ = x.shape
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    q = qmatmul(p, "wq", x)
+    k = qmatmul(p, "wk", x)
+    v = qmatmul(p, "wv", x)
     if "q_bias" in p:
         q, k, v = q + p["q_bias"], k + p["k_bias"], v + p["v_bias"]
     q = constrain(q.reshape(b, s, n_heads, head_dim),
@@ -225,7 +229,7 @@ def gqa_forward(p, x, positions, *, n_heads, n_kv, head_dim,
                           attn_softcap=attn_softcap, q_chunk=q_chunk,
                           kv_chunk=kv_chunk, scale=query_scale,
                           causal_unroll=causal_unroll)
-    return o.reshape(b, s, n_heads * head_dim) @ p["wo"], (k, v)
+    return qmatmul(p, "wo", o.reshape(b, s, n_heads * head_dim)), (k, v)
 
 
 class KVCache(NamedTuple):
@@ -277,7 +281,7 @@ def gqa_decode(p, x_t, cache: KVCache, pos, *, n_heads, n_kv, head_dim,
     attn = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bkrqs,bskd->bkrqd", attn.astype(cv.dtype), cv)
     o = o.transpose(0, 3, 1, 2, 4).reshape(b, 1, n_heads * head_dim)
-    return o @ p["wo"], KVCache(k=ck, v=cv)
+    return qmatmul(p, "wo", o), KVCache(k=ck, v=cv)
 
 
 # ---------------------------------------------------------------------------
@@ -304,7 +308,7 @@ def init_mla(key, d_model, n_heads, *, kv_lora, rope_dim, nope_dim, v_dim,
 
 def _mla_q(p, x, n_heads, nope_dim, rope_dim, positions, rope_theta):
     b, s, _ = x.shape
-    q = (x @ p["wq"]).reshape(b, s, n_heads, nope_dim + rope_dim)
+    q = qmatmul(p, "wq", x).reshape(b, s, n_heads, nope_dim + rope_dim)
     q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
     q_rope = apply_rope(q_rope, positions[None, :], rope_theta)
     return q_nope, q_rope
@@ -318,12 +322,13 @@ def mla_forward(p, x, positions, *, n_heads, kv_lora, rope_dim, nope_dim,
     q_nope, q_rope = _mla_q(p, x, n_heads, nope_dim, rope_dim, positions, rope_theta)
     q_nope = constrain(q_nope, "batch", None, "heads", None)
     q_rope = constrain(q_rope, "batch", None, "heads", None)
-    dkv = x @ p["w_dkv"]
+    dkv = qmatmul(p, "w_dkv", x)
     c_kv = rms_norm(dkv[..., :kv_lora], p["kv_norm_scale"])
     k_rope = apply_rope(dkv[..., None, kv_lora:], positions[None, :], rope_theta)
-    k_nope = constrain((c_kv @ p["w_uk"]).reshape(b, s, n_heads, nope_dim),
-                       "batch", None, "heads", None)
-    v = constrain((c_kv @ p["w_uv"]).reshape(b, s, n_heads, v_dim),
+    k_nope = constrain(
+        qmatmul(p, "w_uk", c_kv).reshape(b, s, n_heads, nope_dim),
+        "batch", None, "heads", None)
+    v = constrain(qmatmul(p, "w_uv", c_kv).reshape(b, s, n_heads, v_dim),
                   "batch", None, "heads", None)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, n_heads, rope_dim))],
@@ -332,7 +337,7 @@ def mla_forward(p, x, positions, *, n_heads, kv_lora, rope_dim, nope_dim,
     o = chunked_attention(q, k, v, positions, positions, q_chunk=q_chunk,
                           kv_chunk=kv_chunk, scale=scale)
     cache = {"c_kv": c_kv, "k_rope": k_rope[..., 0, :]}
-    return o.reshape(b, s, n_heads * v_dim) @ p["wo"], cache
+    return qmatmul(p, "wo", o.reshape(b, s, n_heads * v_dim)), cache
 
 
 class MLACache(NamedTuple):
@@ -357,7 +362,7 @@ def mla_decode(p, x_t, cache: MLACache, pos, *, n_heads, kv_lora, rope_dim,
     b = x_t.shape[0]
     pos_arr = jnp.asarray(pos)[None]
     q_nope, q_rope = _mla_q(p, x_t, n_heads, nope_dim, rope_dim, pos_arr, rope_theta)
-    dkv = x_t @ p["w_dkv"]
+    dkv = qmatmul(p, "w_dkv", x_t)
     c_kv_t = rms_norm(dkv[..., :kv_lora], p["kv_norm_scale"])
     k_rope_t = apply_rope(dkv[..., None, kv_lora:], pos_arr[None, :], rope_theta)[:, :, 0]
 
@@ -366,7 +371,9 @@ def mla_decode(p, x_t, cache: MLACache, pos, *, n_heads, kv_lora, rope_dim,
     krope = jax.lax.dynamic_update_slice_in_dim(
         cache.k_rope, k_rope_t.astype(cache.k_rope.dtype), pos, axis=1)
 
-    w_uk = p["w_uk"].reshape(kv_lora, n_heads, nope_dim)
+    # Absorbed factors are einsum operands: fetch dense via qweight (an
+    # in-jit dequant temporary when the leaf is quantized) and reshape.
+    w_uk = qweight(p, "w_uk").reshape(kv_lora, n_heads, nope_dim)
     q_eff = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_uk)        # [B,1,H,kv_lora]
     logits = (jnp.einsum("bqhl,bsl->bhqs", q_eff, ckv) +
               jnp.einsum("bqhd,bsd->bhqs", q_rope, krope))
@@ -376,6 +383,6 @@ def mla_decode(p, x_t, cache: MLACache, pos, *, n_heads, kv_lora, rope_dim,
     logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
     attn = jax.nn.softmax(logits, axis=-1)
     ctx = jnp.einsum("bhqs,bsl->bqhl", attn.astype(ckv.dtype), ckv)
-    w_uv = p["w_uv"].reshape(kv_lora, n_heads, v_dim)
+    w_uv = qweight(p, "w_uv").reshape(kv_lora, n_heads, v_dim)
     o = jnp.einsum("bqhl,lhd->bqhd", ctx, w_uv).reshape(b, 1, n_heads * v_dim)
-    return o @ p["wo"], MLACache(c_kv=ckv, k_rope=krope)
+    return qmatmul(p, "wo", o), MLACache(c_kv=ckv, k_rope=krope)

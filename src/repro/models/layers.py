@@ -87,55 +87,34 @@ def init_mlp(key: Array, d_model: int, d_ff: int, act: str, gated: bool,
 
 
 def mlp_weight(p, name: str, dtype) -> Array:
-    """Dense or LC-quantized weight fetch.
-
-    Quantized serving stores either ``<name>_idx`` (uint8 C-step
-    assignments; 1 B/weight of HBM traffic instead of 2 B bf16) or the
-    bit-packed ``<name>_pidx`` uint32 words + static ``<name>_layout``
-    (bits_per_index(K)/8 B/weight), each with a ``<name>_cb`` codebook.
-    The dequant here is jnp (gather); the matmul path below routes through
-    repro.kernels.dispatch for the fused dequant-in-VMEM kernel on TPU.
-    """
-    from repro.kernels import dispatch
-    if f"{name}_pidx" in p:
-        return dispatch.decode_packed_leaf(p[f"{name}_pidx"],
-                                           p[f"{name}_cb"],
-                                           p[f"{name}_layout"], dtype)
-    if f"{name}_idx" in p:
-        return dispatch.decode_leaf(p[f"{name}_idx"], p[f"{name}_cb"], dtype)
-    return p[name]
+    """Deprecated alias of :func:`repro.models.qleaf.qweight` (the PR-2
+    MLP-only name).  Kept so old checkpoints/scripts that imported the
+    MLP-leaf helpers keep working; new code uses ``qleaf`` directly."""
+    from repro.models import qleaf
+    return qleaf.qweight(p, name, dtype)
 
 
 def mlp_matmul(p, name: str, x: Array) -> Array:
-    """x @ <name>, where <name> may be stored dense or quantized.
-
-    Quantized leaves (the PackedModel serving layouts — bit-packed
-    ``<name>_pidx`` words, or uint8 ``<name>_idx``, + ``<name>_cb``)
-    dispatch to the codebook-matmul kernel path: Mosaic on TPU, jnp
-    reference on CPU (repro.kernels.dispatch picks).
-    """
-    if f"{name}_pidx" in p:
-        from repro.kernels import dispatch
-        return dispatch.packed_quantized_matmul(
-            x, p[f"{name}_pidx"], p[f"{name}_cb"],
-            layout=p[f"{name}_layout"])
-    if f"{name}_idx" in p:
-        from repro.kernels import dispatch
-        return dispatch.quantized_matmul(x, p[f"{name}_idx"], p[f"{name}_cb"])
-    return x @ p[name]
+    """Deprecated alias of :func:`repro.models.qleaf.qmatmul` — see
+    :func:`mlp_weight`."""
+    from repro.models import qleaf
+    return qleaf.qmatmul(p, name, x)
 
 
 def _has_mlp_leaf(p, name: str) -> bool:
-    return name in p or f"{name}_idx" in p or f"{name}_pidx" in p
+    """Deprecated alias of :func:`repro.models.qleaf.has_leaf`."""
+    from repro.models import qleaf
+    return qleaf.has_leaf(p, name)
 
 
 def apply_mlp(p, x: Array, act: str) -> Array:
+    from repro.models.qleaf import has_leaf, qmatmul
     from repro.models.sharding_ctx import constrain
     f = act_fn(act)
-    h = mlp_matmul(p, "w_in", x)
-    if _has_mlp_leaf(p, "w_gate"):
-        h = f(mlp_matmul(p, "w_gate", x)) * h
+    h = qmatmul(p, "w_in", x)
+    if has_leaf(p, "w_gate"):
+        h = f(qmatmul(p, "w_gate", x)) * h
     else:
         h = f(h)
     h = constrain(h, "batch", None, "ffn")
-    return mlp_matmul(p, "w_out", h)
+    return qmatmul(p, "w_out", h)

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import act_fn
+from repro.models.qleaf import has_leaf, qmatmul, qweight
 from repro.models.sharding_ctx import constrain
 
 Array = jax.Array
@@ -98,8 +99,15 @@ def apply_moe(p, x: Array, *, top_k: int, act: str = "silu",
     1.15 s of compute.  See EXPERIMENTS.md §Perf/moe-dispatch.)
     """
     b, s, d = x.shape
-    e = p["experts_w_in"].shape[0]
     f = act_fn(act)
+    # Expert stacks are einsum operands [E, D, F]: fetch dense via qleaf
+    # (an in-jit dequant temporary when the leaf serves quantized from the
+    # packed [E·D, F] word layout; a no-op on dense params).  The router
+    # stays un-quantized by policy and is always a raw leaf.
+    w_in = qweight(p, "experts_w_in")
+    w_gate = qweight(p, "experts_w_gate")
+    w_out = qweight(p, "experts_w_out")
+    e = w_in.shape[0]
 
     logits = (x.astype(jnp.float32) @ p["router_w"])          # [B,S,E]
     gates, eidx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), top_k)
@@ -110,31 +118,33 @@ def apply_moe(p, x: Array, *, top_k: int, act: str = "silu",
 
     pol = _active_policy()
     if pol is not None and pol.mode == "tp" and e % pol.model_size == 0:
-        out = _apply_moe_ep_shard_map(p, x, eidx, gates, e, c, top_k, act,
-                                      pol)
+        out = _apply_moe_ep_shard_map(w_in, w_gate, w_out, x, eidx, gates,
+                                      e, c, top_k, act, pol)
     else:
         ex_in, dst, keep, stok, sgate = jax.vmap(
             lambda xt, ei, ga: _dispatch_row(xt, ei, ga, e, c, top_k)
         )(x, eidx, gates)
         ex_in = constrain(ex_in, "batch", "experts", None, None)  # [B,E,C,D]
 
-        h = jnp.einsum("becd,edf->becf", ex_in, p["experts_w_in"])
-        g = jnp.einsum("becd,edf->becf", ex_in, p["experts_w_gate"])
+        h = jnp.einsum("becd,edf->becf", ex_in, w_in)
+        g = jnp.einsum("becd,edf->becf", ex_in, w_gate)
         h = constrain(f(g) * h, "batch", "experts", None, None)
-        ex_out = jnp.einsum("becf,efd->becd", h, p["experts_w_out"])
+        ex_out = jnp.einsum("becf,efd->becd", h, w_out)
         ex_out = constrain(ex_out, "batch", "experts", None, None)
 
         out = jax.vmap(lambda eo, ds, ke, st, sg: _combine_row(
             eo, ds, ke, st, sg, s))(ex_out, dst, keep, stok, sgate)
 
-    if "shared_w_in" in p:
-        hs = constrain(f(x @ p["shared_w_gate"]) * (x @ p["shared_w_in"]),
+    if has_leaf(p, "shared_w_in"):
+        hs = constrain(f(qmatmul(p, "shared_w_gate", x))
+                       * qmatmul(p, "shared_w_in", x),
                        "batch", None, "ffn")
-        out = out + hs @ p["shared_w_out"]
+        out = out + qmatmul(p, "shared_w_out", hs)
     return out.astype(x.dtype)
 
 
-def _apply_moe_ep_shard_map(p, x, eidx, gates, e, c, top_k, act, pol):
+def _apply_moe_ep_shard_map(w_in_all, w_gate_all, w_out_all, x, eidx, gates,
+                            e, c, top_k, act, pol):
     """Expert-parallel dispatch with rank-local routing (shard_map).
 
     GSPMD cannot prove that per-token scatter/gather indices stay within
@@ -183,5 +193,4 @@ def _apply_moe_ep_shard_map(p, x, eidx, gates, e, c, top_k, act, pol):
                   P("model", None, None), P("model", None, None)),
         out_specs=P(daxes, None, None),
         check_rep=False,
-    )(x, eidx, gates.astype(x.dtype),
-      p["experts_w_in"], p["experts_w_gate"], p["experts_w_out"])
+    )(x, eidx, gates.astype(x.dtype), w_in_all, w_gate_all, w_out_all)

@@ -35,11 +35,12 @@ def init_mlp_classifier(key: Array, sizes: Sequence[int]) -> dict:
 
 
 def mlp_logits(params: dict, x: Array) -> Array:
+    from repro.models.qleaf import qmatmul
     n = len(params)
     h = x
     for i in range(n):
         p = params[f"fc{i}"]
-        h = h @ p["w"] + p["b_bias"]
+        h = qmatmul(p, "w", h) + p["b_bias"]
         if i < n - 1:
             h = jnp.tanh(h)
     return h
@@ -71,9 +72,11 @@ def lenet5_init(key: Array, c1: int = 20, c2: int = 50, fc: int = 500,
 
 def lenet5_logits(params: dict, x: Array) -> Array:
     """x: [B, 28, 28, 1]."""
+    from repro.models.qleaf import qmatmul, qweight
+
     def conv(p, h):
         h = jax.lax.conv_general_dilated(
-            h, p["w"], window_strides=(1, 1), padding="VALID",
+            h, qweight(p, "w"), window_strides=(1, 1), padding="VALID",
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
         return jax.nn.relu(h + p["b_bias"])
 
@@ -84,8 +87,9 @@ def lenet5_logits(params: dict, x: Array) -> Array:
     h = pool(conv(params["conv0"], x))
     h = pool(conv(params["conv1"], h))
     h = h.reshape(h.shape[0], -1)
-    h = jax.nn.relu(h @ params["fc0"]["w"] + params["fc0"]["b_bias"])
-    return h @ params["fc1"]["w"] + params["fc1"]["b_bias"]
+    h = jax.nn.relu(qmatmul(params["fc0"], "w", h)
+                    + params["fc0"]["b_bias"])
+    return qmatmul(params["fc1"], "w", h) + params["fc1"]["b_bias"]
 
 
 def cross_entropy(logits: Array, labels: Array) -> Array:

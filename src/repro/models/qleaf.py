@@ -1,0 +1,102 @@
+"""Model-wide quantized-leaf ("qleaf") abstraction.
+
+Every multiplicative weight in the model forward — MLP leaves, attention
+q/k/v/o projections, the embedding table / LM head, MoE expert tensors,
+SSM and RG-LRU projections — is fetched through this module, which
+understands the three storage layouts a leaf may arrive in (the
+``PackedModel.serving_params`` layouts):
+
+* dense          — ``p[name]``: the training / dense-serve layout;
+* uint8 indices  — ``p[f"{name}_idx"]`` + ``p[f"{name}_cb"]``: the
+  1 B/weight fallback/oracle layout (``serving_params(packed=False)``);
+* bit-packed     — ``p[f"{name}_pidx"]`` uint32 words + ``p[f"{name}_cb"]``
+  + the static ``p[f"{name}_layout"]`` lane metadata:
+  ``bits_per_index(K)/8`` B/weight (``serving_params(packed=True)``).
+
+Call sites pick the entry point by access pattern, and
+``repro.kernels.dispatch`` picks the backend:
+
+* :func:`qmatmul`   — ``x @ W``: the fused codebook-matmul kernels
+  (Mosaic dequant-in-VMEM on TPU, jnp gather-dequant reference on CPU);
+* :func:`qmatmul_t` — ``x @ W.T``: the tied-embedding LM head (dequant is
+  an in-jit temporary; the HBM operand stays packed);
+* :func:`qembed`    — row gather: fused unpack + LUT dequant-on-gather
+  (``dispatch.quantized_gather``), no dense table is materialized;
+* :func:`qweight`   — the dense tensor, for einsum operands and reshaped
+  factors (MoE expert stacks, MLA ``w_uk``/``w_uv``) — again an in-jit
+  temporary scheduled per use.
+
+The pre-qleaf names (``layers.mlp_matmul`` / ``mlp_weight`` /
+``_has_mlp_leaf``) survive as thin deprecated aliases.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def has_leaf(p, name: str) -> bool:
+    """True if ``name`` is present in any of the three storage layouts."""
+    return name in p or f"{name}_idx" in p or f"{name}_pidx" in p
+
+
+def qweight(p, name: str, dtype=None) -> Array:
+    """Dense tensor fetch in the leaf's original shape (decode if
+    quantized).  Under jit the decode is a temporary XLA schedules per
+    use; only the packed arrays are HBM-resident inputs."""
+    from repro.kernels import dispatch
+    if f"{name}_pidx" in p:
+        return dispatch.decode_packed_leaf(p[f"{name}_pidx"],
+                                           p[f"{name}_cb"],
+                                           p[f"{name}_layout"], dtype)
+    if f"{name}_idx" in p:
+        return dispatch.decode_leaf(p[f"{name}_idx"], p[f"{name}_cb"], dtype)
+    w = p[name]
+    return w.astype(dtype) if dtype is not None else w
+
+
+def qmatmul(p, name: str, x: Array) -> Array:
+    """``x @ <name>`` where ``<name>`` may be stored dense or quantized.
+
+    Quantized leaves route through ``repro.kernels.dispatch`` — the packed
+    uint32-word operand (or the uint8 oracle) feeds the codebook-matmul
+    kernel path on TPU; the CPU reference is gather-dequant + the same
+    ``x @ w`` contraction as the dense layout (bit-identical logits).
+    """
+    if f"{name}_pidx" in p:
+        from repro.kernels import dispatch
+        return dispatch.packed_quantized_matmul(
+            x, p[f"{name}_pidx"], p[f"{name}_cb"],
+            layout=p[f"{name}_layout"])
+    if f"{name}_idx" in p:
+        from repro.kernels import dispatch
+        return dispatch.quantized_matmul(x, p[f"{name}_idx"],
+                                         p[f"{name}_cb"])
+    return x @ p[name]
+
+
+def qmatmul_t(p, name: str, x: Array) -> Array:
+    """``x @ <name>.T`` — the tied-embedding LM head.  The dequant (if
+    quantized) is an in-jit temporary; the packed table is the only
+    HBM-resident operand."""
+    return x @ qweight(p, name).T
+
+
+def qembed(p, name: str, tokens: Array) -> Array:
+    """Row gather ``<name>[tokens]`` — embedding lookup.
+
+    Packed layout: gather the token's uint32 word row, shift+mask the
+    lane, LUT through the codebook (``dispatch.quantized_gather``) — the
+    dense [V, D] table is never materialized.
+    """
+    if f"{name}_pidx" in p:
+        from repro.kernels import dispatch
+        return dispatch.quantized_gather(tokens, p[f"{name}_pidx"],
+                                         p[f"{name}_cb"],
+                                         layout=p[f"{name}_layout"])
+    if f"{name}_idx" in p:
+        idx = p[f"{name}_idx"][tokens].astype(jnp.int32)
+        return p[f"{name}_cb"][idx]
+    return p[name][tokens]

@@ -24,6 +24,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.models.qleaf import qmatmul
 from repro.models.sharding_ctx import constrain
 
 Array = jax.Array
@@ -50,8 +51,10 @@ def init_rglru_block(key, d_model, width, conv_w=4, dtype=jnp.float32):
 
 def _rglru_coeffs(p, x):
     """x: [B,S,W] → (a, b) of the recurrence h = a·h_prev + b."""
-    r = jax.nn.sigmoid(x @ p["w_a_gate"] + p["a_gate_bias"]).astype(jnp.float32)
-    i = jax.nn.sigmoid(x @ p["w_x_gate"] + p["x_gate_bias"]).astype(jnp.float32)
+    r = jax.nn.sigmoid(qmatmul(p, "w_a_gate", x)
+                       + p["a_gate_bias"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(qmatmul(p, "w_x_gate", x)
+                       + p["x_gate_bias"]).astype(jnp.float32)
     log_a = -_C * jax.nn.softplus(p["a_param"]) * r           # [B,S,W]
     a = jnp.exp(log_a)
     # √(1-a²) computed stably: 1-a² = -expm1(2 log a)
@@ -70,9 +73,10 @@ def _causal_conv(x: Array, w: Array) -> Array:
 
 def rglru_forward(p, x, *, width):
     """Training / prefill. x: [B,S,D] → [B,S,D]; returns (y, final_state)."""
-    gate = jax.nn.gelu(constrain(x @ p["w_gate_in"], "batch", None, "width"),
+    gate = jax.nn.gelu(constrain(qmatmul(p, "w_gate_in", x),
+                                 "batch", None, "width"),
                        approximate=True)
-    rec = constrain(x @ p["w_rec_in"], "batch", None, "width")
+    rec = constrain(qmatmul(p, "w_rec_in", x), "batch", None, "width")
     rec = _causal_conv(rec, p["conv1d_w"])
     a, b = _rglru_coeffs(p, rec)
 
@@ -84,7 +88,7 @@ def rglru_forward(p, x, *, width):
     a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
     y = (gate.astype(jnp.float32) * h).astype(x.dtype)
     final_state = h[:, -1]
-    return y @ p["w_out"], final_state
+    return qmatmul(p, "w_out", y), final_state
 
 
 class RGLRUCache(NamedTuple):
@@ -100,12 +104,12 @@ def init_rglru_cache(batch, width, conv_w, dtype):
 def rglru_decode(p, x_t, cache: RGLRUCache, *, width):
     """O(1) decode. x_t: [B,1,D]."""
     xt = x_t[:, 0]
-    gate = jax.nn.gelu(xt @ p["w_gate_in"], approximate=True)
-    rec = xt @ p["w_rec_in"]
+    gate = jax.nn.gelu(qmatmul(p, "w_gate_in", xt), approximate=True)
+    rec = qmatmul(p, "w_rec_in", xt)
     conv_in = jnp.concatenate([cache.conv, rec[:, None, :]], axis=1)
     rec = jnp.einsum("bwc,wc->bc", conv_in, p["conv1d_w"])
     a, b = _rglru_coeffs(p, rec[:, None, :])
     h = a[:, 0] * cache.state + b[:, 0]
     y = (gate.astype(jnp.float32) * h).astype(x_t.dtype)
-    out = (y @ p["w_out"])[:, None, :]
+    out = qmatmul(p, "w_out", y)[:, None, :]
     return out, RGLRUCache(state=h, conv=conv_in[:, 1:, :])

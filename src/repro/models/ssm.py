@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import rms_norm
+from repro.models.qleaf import qmatmul
 from repro.models.sharding_ctx import constrain
 
 Array = jax.Array
@@ -122,11 +123,13 @@ def ssm_forward(p, x, *, d_inner, head_p, state_n, chunk=256):
     """Training / prefill forward. x: [B,S,D] → [B,S,D] (+ final state)."""
     bsz, s, _ = x.shape
     h = d_inner // head_p
-    z = constrain(x @ p["in_z_w"], "batch", None, "width")
-    xin = constrain(x @ p["in_x_w"], "batch", None, "width")
+    z = constrain(qmatmul(p, "in_z_w", x), "batch", None, "width")
+    xin = constrain(qmatmul(p, "in_x_w", x), "batch", None, "width")
     xin = jax.nn.silu(_causal_conv(xin, p["conv1d_x_w"]))
-    b_mat = jax.nn.silu(_causal_conv(x @ p["in_b_w"], p["conv1d_b_w"]))
-    c_mat = jax.nn.silu(_causal_conv(x @ p["in_c_w"], p["conv1d_c_w"]))
+    b_mat = jax.nn.silu(_causal_conv(qmatmul(p, "in_b_w", x),
+                                     p["conv1d_b_w"]))
+    c_mat = jax.nn.silu(_causal_conv(qmatmul(p, "in_c_w", x),
+                                     p["conv1d_c_w"]))
     dt = jax.nn.softplus((x @ p["dt_w"]).astype(jnp.float32) + p["dt_bias"])
     a = -jnp.exp(p["a_log"])
     xh = constrain(xin.reshape(bsz, s, h, head_p),
@@ -136,7 +139,7 @@ def ssm_forward(p, x, *, d_inner, head_p, state_n, chunk=256):
          ).astype(x.dtype)
     y = y.reshape(bsz, s, d_inner)
     y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
-    return y @ p["out_proj_w"], state
+    return qmatmul(p, "out_proj_w", y), state
 
 
 class SSMCache(NamedTuple):
@@ -167,10 +170,10 @@ def ssm_decode(p, x_t, cache: SSMCache, *, d_inner, head_p, state_n):
     bsz = x_t.shape[0]
     h = d_inner // head_p
     xt = x_t[:, 0]
-    z = xt @ p["in_z_w"]
-    xin_raw = xt @ p["in_x_w"]
-    b_raw = xt @ p["in_b_w"]
-    c_raw = xt @ p["in_c_w"]
+    z = qmatmul(p, "in_z_w", xt)
+    xin_raw = qmatmul(p, "in_x_w", xt)
+    b_raw = qmatmul(p, "in_b_w", xt)
+    c_raw = qmatmul(p, "in_c_w", xt)
     xin, conv_x = _conv_step(cache.conv_x, xin_raw, p["conv1d_x_w"])
     b_mat, conv_b = _conv_step(cache.conv_b, b_raw, p["conv1d_b_w"])
     c_mat, conv_c = _conv_step(cache.conv_c, c_raw, p["conv1d_c_w"])
@@ -187,6 +190,6 @@ def ssm_decode(p, x_t, cache: SSMCache, *, d_inner, head_p, state_n):
     y = y.astype(x_t.dtype) + xh * p["d_skip"][None, :, None].astype(x_t.dtype)
     y = y.reshape(bsz, d_inner)
     y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
-    out = (y @ p["out_proj_w"])[:, None, :]
+    out = qmatmul(p, "out_proj_w", y)[:, None, :]
     return out, SSMCache(state=state, conv_x=conv_x, conv_b=conv_b,
                          conv_c=conv_c)

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.models import attention as attn
 from repro.models import layers as L
 from repro.models import moe as moe_mod
+from repro.models import qleaf as Q
 from repro.models import rglru as rglru_mod
 from repro.models import ssm as ssm_mod
 from repro.models.sharding_ctx import constrain
@@ -291,7 +292,9 @@ def _apply_stack_full(spec: StackSpec, stack_params, x, positions, cfg):
 # ---------------------------------------------------------------------------
 
 def _embed(params, cfg, tokens, patch_embeds=None):
-    x = params["embed_tok"][tokens]
+    # Dense gather, or dequant-on-gather when the table serves quantized
+    # (packed indices → shift+mask → LUT; dispatch.quantized_gather).
+    x = Q.qembed(params, "embed_tok", tokens)
     if cfg.emb_scale is not None:
         x = x * jnp.asarray(cfg.emb_scale, x.dtype)
     if cfg.pos_embed == "sinusoidal":
@@ -307,9 +310,9 @@ def _embed(params, cfg, tokens, patch_embeds=None):
 def _head(params, cfg, x):
     x = L.rms_norm(x, params["final_norm_scale"])
     if cfg.tie_embeddings:
-        logits = x @ params["embed_tok"].T
+        logits = Q.qmatmul_t(params, "embed_tok", x)
     else:
-        logits = x @ params["head_w"]
+        logits = Q.qmatmul(params, "head_w", x)
     logits = constrain(logits, "batch", None, "vocab")
     return L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
 
@@ -427,7 +430,7 @@ def decode_step(params, cfg: ModelConfig, caches, tokens_t: Array, pos):
     tokens_t: [B, 1] int32; pos: scalar int32 (current position).
     Returns (logits [B, 1, V], new caches).
     """
-    x = params["embed_tok"][tokens_t]
+    x = Q.qembed(params, "embed_tok", tokens_t)
     if cfg.emb_scale is not None:
         x = x * jnp.asarray(cfg.emb_scale, x.dtype)
     if cfg.pos_embed == "sinusoidal":

@@ -58,6 +58,53 @@ def test_sharded_kmeans_equals_single_device():
     assert res["cb_close"] and res["dist_close"]
 
 
+def test_histogram_warm_start_first_adaptive_cstep_1dev():
+    """sharded_c_step(codebook=None) — the first-C-step histogram-quantile
+    warm start (ROADMAP distributed item).  On a 1-device mesh it must
+    equal the identical local pipeline (histogram-quantile init + k-means,
+    psum over one shard is the identity) bit-for-bit, and land on the
+    same solution as the local k-means++-init first C step."""
+    res = run_sub("""
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.cstep import histogram_quantiles, sharded_c_step
+        from repro.core.kmeans import kmeans_fit, kmeans_plus_plus_init
+        from repro.core.schemes import make_scheme
+        scheme = make_scheme("adaptive:4")
+        mesh = jax.make_mesh((1,), ("model",))
+        w = jax.random.normal(jax.random.PRNGKey(0), (8192,))
+        @partial(shard_map, mesh=mesh, in_specs=(P("model"),),
+                 out_specs=(P("model"), P()), check_rep=False)
+        def first_c(ws):
+            q, th = sharded_c_step(scheme, ws, "model")   # no codebook
+            return q, th["codebook"]
+        q_d, cb_d = first_c(w)
+        # identical local pipeline (axis_name=None): exact equality
+        cb0 = histogram_quantiles(w, 4, None)
+        res_l = kmeans_fit(w, cb0, iters=scheme.iters_first)
+        q_l = res_l.codebook[res_l.assignments]
+        # local k-means++ init first C step: same converged solution
+        cbpp = kmeans_plus_plus_init(jax.random.PRNGKey(1), w, 4)
+        res_pp = kmeans_fit(w, cbpp, iters=scheme.iters_first)
+        print(json.dumps({
+            "q_equal": bool(np.array_equal(np.asarray(q_d),
+                                           np.asarray(q_l))),
+            "cb_equal": bool(np.array_equal(np.asarray(cb_d),
+                                            np.asarray(res_l.codebook))),
+            "cb_vs_pp": bool(np.allclose(np.asarray(cb_d),
+                                         np.asarray(res_pp.codebook),
+                                         atol=5e-2)),
+            "dist_vs_pp": abs(float(res_l.distortion)
+                              - float(res_pp.distortion))
+                          / float(res_pp.distortion),
+        }))
+    """)
+    assert res["q_equal"] and res["cb_equal"]
+    assert res["cb_vs_pp"]
+    assert res["dist_vs_pp"] < 2e-2
+
+
 def test_histogram_ternary_scale_matches_exact():
     res = run_sub("""
         from functools import partial
