@@ -6,6 +6,11 @@ Byte accounting uses ``compression.bits_per_index(k)`` — the eq.-14 index
 width — so the roofline row is correct for any K, and the packed-route
 rows report the *actual* HBM bytes of the uint32 word operand
 (``pidx.nbytes``), which must equal bits/8 per weight (+ codebook).
+Gather rows report the *gathered traffic* per weight (one packed word
+row per token on the ``pack_rows`` serving layout — bits/8; the pre-PR-4
+accounting quoted resident word bytes while the jnp column-layout route
+actually read 4 B/word per gathered column).  Every such row is enforced
+by tests/test_bench_accounting.py.
 """
 from __future__ import annotations
 
@@ -108,29 +113,72 @@ def run():
             f"{m3}x{kd3}x{n3}; blocks bm={bm} bn={bn} bk={bk})"))
 
     # -- embedding dequant-on-gather (packed table, no dense [V, D]) ---------
+    # The serving layout is row-packed (pack_rows): a token's lookup reads
+    # its contiguous word row — ⌈D/lanes⌉·4 B per token, i.e. exactly
+    # bits/8 *index bytes per gathered weight* (d4 is a multiple of 32 so
+    # every lane count divides).  The pre-row-pack jnp fallback gathered
+    # one full uint32 word per embedding column: 4 B/weight.
     v4, d4 = 4096, 256
     toks = jnp.asarray(rng.randint(0, v4, size=(8, 32)), jnp.int32)
-    for k in (16, 256):
+    toks_m = toks[:2]              # 64 tokens: interpret-mode grid is 1/row
+    for k in (2, 16, 256):
         bits = compression.bits_per_index(k)
         idx_np = rng.randint(0, k, size=(v4, d4))
-        pidx = jnp.asarray(compression.pack_indices_2d(idx_np, k))
+        pidx_r = jnp.asarray(compression.pack_rows(idx_np, k))
         cb4 = jax.random.normal(jax.random.fold_in(key, 200 + k), (k,))
-        layout = compression.PackedLayout.make(v4, d4, k)
+        layout = compression.PackedLayout.make(v4, d4, k, order="row")
+        # Gathered HBM index bytes per gathered weight (the serve-path
+        # traffic — NOT the resident word-array bytes per table weight),
+        # measured from the actual packed operand's row width so a
+        # pack_rows layout regression trips the MISMATCH flag.
+        bpw = pidx_r.shape[1] * 4 / d4
+        expect = bits / 8
+        flag = "" if abs(bpw - expect) < 1e-9 else " MISMATCH"
+        note = (f"idx_bytes/weight={bpw:.4f} (== bits_per_index/8 = "
+                f"{expect:.4f}{flag}; +{k * 4} B codebook; "
+                f"table {v4}x{d4})")
+
         gather = jax.jit(lambda t, w, c: dispatch.quantized_gather(
-            t, w, c, layout=layout))
-        us = time_call(gather, toks, pidx, cb4, warmup=2, iters=5)
+            t, w, c, layout=layout, backend="ref"))
+        us = time_call(gather, toks, pidx_r, cb4, warmup=2, iters=5)
         dense_tbl = jnp.asarray(cb4)[jnp.asarray(idx_np)]
         us_d = time_call(jax.jit(lambda t, w: w[t]), toks, dense_tbl,
                          warmup=2, iters=5)
-        bpw = pidx.size * 4 / (v4 * d4)
+        rows.append((
+            f"quantized_gather_embed_K{k}", us,
+            f"{note[:-1]}; 256 tokens, jnp row-gather reference; dense "
+            f"f32 gather {us_d:.1f}us / {v4 * d4 * 4} B resident)"))
+
+        us = time_call(lambda t, w, c: ops.quantized_gather(
+            t, w, c, d4), toks_m.reshape(-1), pidx_r, cb4,
+            warmup=1, iters=2)
+        rows.append((
+            f"quantized_gather_mosaic_K{k}", us,
+            f"{note[:-1]}; 64 tokens, scalar-prefetch row DMA, "
+            f"interpret-mode)"))
+
+    # -- fused transposed LM head (tied embedding; packed words stay HBM) ----
+    # y[M, V] = x[M, D]·W.T over the row-packed [V, ⌈D/lanes⌉] serving
+    # operand — the route that replaces dequant-then-dot for the tied head.
+    m5, d5, v5 = 8, 256, 1024
+    x5 = jax.random.normal(key, (m5, d5), jnp.float32)
+    for k in (2, 16, 256):
+        bits = compression.bits_per_index(k)
+        idx_np = rng.randint(0, k, size=(v5, d5))
+        pidx_r = jnp.asarray(compression.pack_rows(idx_np, k))
+        cb5 = jax.random.normal(jax.random.fold_in(key, 300 + k), (k,))
+        bm, bn, bk = dispatch.packed_block_sizes_t(m5, d5, v5, bits, "row")
+        us = time_call(lambda *a: ops.packed_codebook_matmul_t(
+            *a, v5, order="row", bm=bm, bn=bn, bk=bk), x5, pidx_r, cb5,
+            warmup=1, iters=2)
+        bpw = pidx_r.size * 4 / (v5 * d5)
         expect = bits / 8
         flag = "" if abs(bpw - expect) < 1e-9 else " MISMATCH"
         rows.append((
-            f"quantized_gather_embed_K{k}", us,
+            f"codebook_matmul_packed_t_K{k}", us,
             f"idx_bytes/weight={bpw:.4f} (== bits_per_index/8 = "
-            f"{expect:.4f}{flag}; +{k * 4} B codebook; table {v4}x{d4}, "
-            f"256 tokens; dense f32 gather {us_d:.1f}us / "
-            f"{v4 * d4 * 4} B resident)"))
+            f"{expect:.4f}{flag}; +{k * 4} B codebook; LM-head shape "
+            f"{m5}x{d5}x{v5}; blocks bm={bm} bn={bn} bk={bk})"))
 
     # -- kmeans assign -------------------------------------------------------
     p = 1 << 20

@@ -1,0 +1,60 @@
+"""Regenerate the committed golden artifacts under tests/fixtures/.
+
+    PYTHONPATH=src:tests python scripts/make_golden_fixtures.py
+
+Two tiny PackedModel artifacts pin the two prior serving generations so
+future layout changes can't silently break old saved models
+(tests/test_golden_fixtures.py):
+
+* ``pr2_mlp_only/``  — a tied GQA+MLP stack packed at K=4, served with
+  the PR-2-era MLP-only coverage (``quant_names=MLP_LEGACY``);
+* ``pr3_full/``      — the mixed gqa+moe+ssm stack packed at K=16,
+  served with full-model coverage (the PR-3 default).
+
+Each directory holds the artifact (``manifest.json`` + ``arrays.npz``)
+plus ``golden.npz`` (input tokens + dense-serve forward logits).  The
+test asserts load → decode → serve is (a) allclose to the stored golden
+logits (drift guard across refactors) and (b) **bit-exact** across the
+dense / uint8 / packed serving layouts (the differential invariant).
+
+Only rerun this script when an intentional format change invalidates the
+fixtures — and say so in the commit message.
+"""
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, os.path.join(REPO, "tests"))
+
+import jax                                    # noqa: E402
+import numpy as np                            # noqa: E402
+
+from helpers import mixed_cfg, pack_model, tiny_cfg        # noqa: E402
+from repro.models.transformer import forward, init_params  # noqa: E402
+
+FIXTURES = os.path.join(REPO, "tests", "fixtures")
+
+
+def build(name: str, cfg, k: int) -> None:
+    out = os.path.join(FIXTURES, name)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    packed = pack_model(params, k)
+    packed.save(out)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab)
+    logits = forward(packed.decode(), cfg, toks)
+    np.savez(os.path.join(out, "golden.npz"),
+             tokens=np.asarray(toks), logits=np.asarray(logits))
+    size = sum(os.path.getsize(os.path.join(out, f))
+               for f in os.listdir(out))
+    print(f"{name}: k={k} ratio={packed.ratio():.2f} "
+          f"({size / 1024:.0f} KiB)")
+
+
+def main() -> None:
+    build("pr2_mlp_only", tiny_cfg(tie=True), k=4)
+    build("pr3_full", mixed_cfg(tie=False), k=16)
+
+
+if __name__ == "__main__":
+    main()

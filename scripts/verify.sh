@@ -17,7 +17,22 @@ cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# Cross-route differential matrix first — the serving-layout invariant
+# ({dense, uint8, packed} × {forward, prefill, decode} × K × dtype must
+# stay bit-exact; tests/test_differential.py + golden artifacts) — then
+# the rest of tier-1.  With extra pytest args, fall back to one plain
+# invocation so -k/--lf/-m filters keep applying to everything.
+# Mosaic-only tests carry the `tpu` marker and auto-skip on CPU (run
+# them on hardware with: pytest -m tpu).
+if [ "$#" -gt 0 ]; then
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+else
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+        tests/test_differential.py tests/test_golden_fixtures.py
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+        --ignore=tests/test_differential.py \
+        --ignore=tests/test_golden_fixtures.py
+fi
 
 # Full-model packed-serving smoke: the mixed attention+MLP+MoE+SSM stack
 # served end to end (prefill + decode) from the bit-packed layout, packed

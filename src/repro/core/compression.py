@@ -112,6 +112,44 @@ def unpack_indices_2d(words: Array, kd: int, k: int) -> Array:
     return out.reshape(-1, words.shape[-1])[:kd].astype(jnp.int32)
 
 
+def pack_rows(idx: np.ndarray, k: int) -> np.ndarray:
+    """Row-major pack for *gather-accessed* operands (embedding tables).
+
+    ``idx`` [V, D] → uint32 words [V, ⌈D/lanes⌉]: word (v, w) holds the
+    ``lanes`` consecutive *feature-axis* indices idx[v, w·lanes+l] at bit
+    offset l·bits — each vocab row is a contiguous packed run, so a token
+    gather reads exactly ``⌈D/lanes⌉`` words = ``bits_per_index(k)/8``
+    bytes per gathered weight.  This is the layout
+    ``kernels.quantized_gather`` (fused row gather) and
+    ``kernels.codebook_matmul_packed_t`` with ``order="row"`` (fused tied
+    LM head — D is the contraction axis) both consume, so one stored
+    operand serves both access patterns of a tied embedding.
+    """
+    bits = bits_per_index(k)
+    lanes = 32 // bits
+    idx = np.asarray(idx, dtype=np.uint32)
+    v, d = idx.shape
+    pad = (-d) % lanes
+    idx = np.pad(idx, ((0, 0), (0, pad)))
+    idx = idx.reshape(v, -1, lanes)
+    words = np.zeros(idx.shape[:2], dtype=np.uint32)
+    for lane in range(lanes):
+        words |= idx[:, :, lane] << np.uint32(lane * bits)
+    return words
+
+
+def unpack_rows(words: Array, d: int, k: int) -> Array:
+    """Inverse of :func:`pack_rows` over the trailing axis (jnp; arbitrary
+    leading dims — usable on a gathered [..., ⌈D/lanes⌉] word batch)."""
+    bits = bits_per_index(k)
+    lanes = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    shifts = jnp.arange(lanes, dtype=jnp.uint32) * bits
+    out = (words[..., :, None] >> shifts) & mask
+    out = out.reshape(words.shape[:-1] + (-1,))
+    return out[..., :d].astype(jnp.int32)
+
+
 @jax.tree_util.register_static
 @dataclasses.dataclass(frozen=True)
 class PackedLayout:
@@ -136,20 +174,35 @@ class PackedLayout:
     # to this so a bf16 model's packed serve matches its dense layout
     # (the embedding is the dtype anchor of the residual stream).
     dtype: Optional[str] = None
+    # Word orientation: "kd" = pack_indices_2d (words run down the
+    # reduction axis: pidx [⌈kd/lanes⌉, n] — the matmul operand layout);
+    # "row" = pack_rows (words run along each row: pidx [kd, ⌈n/lanes⌉] —
+    # the gather / transposed-matmul layout for embedding tables).
+    order: str = "kd"
 
     @classmethod
     def make(cls, kd: int, n: int, k: int,
              shape: Optional[Tuple[int, ...]] = None,
-             dtype: Optional[str] = None) -> "PackedLayout":
+             dtype: Optional[str] = None,
+             order: str = "kd") -> "PackedLayout":
+        if order not in ("kd", "row"):
+            raise ValueError(f"order={order!r}; choose kd|row")
         bits = bits_per_index(k)
         return cls(kd=kd, n=n, k=k, bits=bits, lanes=32 // bits,
                    shape=None if shape is None else tuple(shape),
-                   dtype=dtype)
+                   dtype=dtype, order=order)
 
     @property
     def words(self) -> int:
-        """Rows of the packed word array: ⌈kd/lanes⌉."""
-        return -(-self.kd // self.lanes)
+        """Rows of the packed word array: ⌈kd/lanes⌉ ("kd") or kd ("row")."""
+        return -(-self.kd // self.lanes) if self.order == "kd" else self.kd
+
+    @property
+    def word_shape(self) -> Tuple[int, int]:
+        """Shape of the packed uint32 word array for this layout."""
+        if self.order == "kd":
+            return (-(-self.kd // self.lanes), self.n)
+        return (self.kd, -(-self.n // self.lanes))
 
 
 def quantized_bytes(p1: int, p0: int, k: int, codebook_entries: int,
@@ -354,9 +407,16 @@ class PackedModel:
                            "this leaf raw — dense-decoded")
         return True, ""
 
+    # Leaves accessed by *row gather* at serve time (embedding tables,
+    # which double as the tied LM head): packed per-row along the feature
+    # axis (``pack_rows``) so a token gather reads bits/8 B/weight and the
+    # fused transposed head contracts the packed axis directly.
+    GATHER_NAMES: Tuple[str, ...] = ("embed_tok",)
+
     def serving_params(
         self, quant_names: Optional[Tuple[str, ...]] = None,
         packed: bool = False,
+        gather_names: Optional[Tuple[str, ...]] = None,
     ) -> PyTree:
         """Params pytree for quantized serving.
 
@@ -381,8 +441,15 @@ class PackedModel:
         / ``quantized_gather``.  Leaves whose per-group shape is not a
         2-D matrix (MoE expert stacks [E, D, F]) pack the flattened
         (∏lead, last) view and record the dense shape on the layout.
+        Leaves named in ``gather_names`` (default :attr:`GATHER_NAMES` —
+        embedding tables, row-gathered at serve time and doubling as the
+        tied LM head) pack per-row instead (:func:`pack_rows`,
+        ``layout.order == "row"``) so both the fused gather and the fused
+        transposed-head kernel read bits/8 B/weight.
         No uint8 (or wider) index array is ever materialized.
         """
+        if gather_names is None:
+            gather_names = self.GATHER_NAMES
         entries: Dict[Tuple[PathToken, ...], Any] = {}
         for ks, leaf in self.packed.items():
             tokens = path_tokens(ks)
@@ -400,7 +467,11 @@ class PackedModel:
                 kd = int(np.prod(mshape[:-1]))
                 n = int(mshape[-1])
                 idx = np.asarray(leaf.indices())
-                if leaf.grouped:
+                row_packed = (name in gather_names and not leaf.grouped
+                              and len(mshape) == 2)
+                if row_packed:
+                    words = pack_rows(idx.reshape(kd, n), leaf.k)
+                elif leaf.grouped:
                     words = np.stack([pack_indices_2d(g.reshape(kd, n),
                                                       leaf.k) for g in idx])
                 else:
@@ -410,7 +481,8 @@ class PackedModel:
                     PackedLayout.make(kd, n, leaf.k,
                                       shape=mshape if len(mshape) != 2
                                       else None,
-                                      dtype=leaf.dtype))
+                                      dtype=leaf.dtype,
+                                      order="row" if row_packed else "kd"))
             else:
                 # uint8 oracle layout has no static layout node to carry
                 # the dtype: store the codebook in the leaf's original
@@ -425,19 +497,38 @@ class PackedModel:
             entries[path_tokens(ks)] = jnp.asarray(arr)
         return unflatten_paths(entries)
 
-    def leaf_coverage(self) -> List[Dict[str, Any]]:
+    def leaf_coverage(self, gather_names: Optional[Tuple[str, ...]] = None
+                      ) -> List[Dict[str, Any]]:
         """Per-leaf coverage rows for the eq.-14 report: every param path
         with its shape, whether it **serves** quantized (the same
         eligibility rule as :meth:`serving_params` with full coverage —
         packed leaves with K > 256 or a sub-matrix per-group shape decode
-        dense at serve time), and why dense leaves are dense."""
+        dense at serve time), the serve route (``gather_names`` must
+        match what was passed to :meth:`serving_params`; default
+        :attr:`GATHER_NAMES`), and why dense leaves are dense."""
         from repro.core.lc import DEFAULT_EXCLUDE
+        if gather_names is None:
+            gather_names = self.GATHER_NAMES
         rows: List[Dict[str, Any]] = []
         for ks, leaf in sorted(self.packed.items()):
             served, reason = self._serves_quantized(ks, leaf)
+            name = path_tokens(ks)[-1]
+            mshape = leaf.shape[1:] if leaf.grouped else leaf.shape
+            # mirror serving_params' row_packed condition exactly
+            row_packed = (name in gather_names and not leaf.grouped
+                          and len(mshape) == 2)
+            if not served:
+                route = None
+            elif row_packed:
+                route = "qembed+qmatmul_t (pack_rows)"
+            else:
+                route = "qmatmul (pack_indices_2d)"
             rows.append({"path": ks, "shape": tuple(leaf.shape),
                          "quantized": served, "k": leaf.k,
                          "bits": leaf.bits if served else None,
+                         "bytes_per_weight": leaf.bits / 8 if served
+                         else None,
+                         "route": route,
                          "reason": reason})
         for ks, arr in sorted(self.dense.items()):
             m = DEFAULT_EXCLUDE.search(ks)
@@ -449,6 +540,7 @@ class PackedModel:
                 reason = "excluded by qspec policy"
             rows.append({"path": ks, "shape": tuple(np.shape(arr)),
                          "quantized": False, "k": None, "bits": None,
+                         "bytes_per_weight": None, "route": None,
                          "reason": reason})
         return rows
 

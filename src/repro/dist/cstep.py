@@ -1,13 +1,17 @@
 """Sharded C-step primitives (paper §4 under a mesh decomposition).
 
 The C step ``min_Θ ||w - Δ(Θ)||²`` touches every weight, so at production
-scale it must run where the weight shards live.  Three primitives cover
+scale it must run where the weight shards live.  Four primitives cover
 every registered scheme:
 
 * :func:`sharded_kmeans` — the adaptive-codebook C step (§4.1): each shard
   computes local per-centroid (Σw, count) statistics and a ``psum`` merges
   them — the *exact* global k-means update with 2·K floats of traffic per
   iteration (the weights never leave their chips).
+* :func:`adaptive_zero_kmeans_psum` — the same statistics merge with one
+  centroid re-pinned at 0 each iteration (§4.2 footnote 2: quantization +
+  pruning jointly) — the ``adaptive_zero`` C step no longer falls back to
+  the local solver.
 * :func:`ternary_scale_histogram` — the ternary-with-scale C step
   (Theorem A.3).  The exact solution needs a global sort of |w|; the
   distributed reformulation bins |w| into a psum'd histogram and optimizes
@@ -107,6 +111,37 @@ def ternary_scale_histogram(w: Array, axis_name: Optional[AxisName],
     return s_desc[jstar] / jnp.maximum(n_desc[jstar], 1.0)
 
 
+def adaptive_zero_kmeans_psum(w: Array, codebook: Array, k: int,
+                              axis_name: Optional[AxisName],
+                              iters: int) -> Tuple[Array, Array]:
+    """Pinned-zero k-means (§4.2 footnote 2: quantization + pruning
+    jointly) under sharding — the sharded primitive for
+    ``AdaptiveZeroScheme``: per-centroid (Σw, count) statistics are
+    psum-merged before the centroid step (2·K floats of traffic per
+    iteration, the weights never leave their chips), then the zero
+    centroid is re-pinned exactly as the local
+    ``AdaptiveZeroScheme.c_step`` does — every shard walks the identical
+    codebook trajectory.  Returns (codebook, quantized local shard).
+    """
+    flat = w.ravel()
+
+    def body(c, _):
+        assign = quant_ops.fixed_codebook_assign(flat, c)
+        sums = jax.ops.segment_sum(flat, assign, num_segments=k)
+        counts = jax.ops.segment_sum(jnp.ones(flat.size), assign,
+                                     num_segments=k)
+        if axis_name is not None:
+            sums = jax.lax.psum(sums, axis_name)
+            counts = jax.lax.psum(counts, axis_name)
+        c_new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1), c)
+        zi = jnp.argmin(jnp.abs(c_new))
+        return jnp.sort(c_new.at[zi].set(0.0)), None
+
+    cb, _ = jax.lax.scan(body, codebook, None, length=iters)
+    assign = quant_ops.fixed_codebook_assign(flat, cb)
+    return cb, cb[assign].reshape(w.shape)
+
+
 def binary_scale_psum(w: Array, axis_name: Optional[AxisName]) -> Array:
     """Optimal binary scale a* = mean|w| (Theorem A.2) — *exact* under
     sharding: a single psum of (Σ|w|, count)."""
@@ -166,6 +201,20 @@ def sharded_c_step(plan_or_scheme, w: Array, axis_name: Optional[AxisName],
     refinement — pinned by ``tests/test_dist.py``).
     """
     scheme: Scheme = as_scheme(plan_or_scheme)
+    if isinstance(scheme, AdaptiveZeroScheme):
+        # Pinned-zero variant first (it subclasses AdaptiveScheme): the
+        # constrained centroid step runs via adaptive_zero_kmeans_psum.
+        first = codebook is None
+        if first:
+            codebook = histogram_quantiles(w, scheme.k, axis_name)
+            zi = jnp.argmin(jnp.abs(codebook))
+            codebook = jnp.sort(codebook.at[zi].set(0.0))
+        if iters is None:
+            iters = scheme.iters_first if first else scheme.iters_warm
+        cb, q = adaptive_zero_kmeans_psum(w, codebook, scheme.k, axis_name,
+                                          iters)
+        return q.astype(w.dtype), {
+            "codebook": cb, "kmeans_iters": jnp.asarray(iters, jnp.int32)}
     if isinstance(scheme, AdaptiveScheme):
         first = codebook is None
         if first:
@@ -201,10 +250,14 @@ def lc_c_step_sharded(params, state, *, scheme, qspec, config, mesh: Mesh,
     (scaled-fixed).
 
     Exactness: adaptive leaves walk the bit-identical k-means trajectory
-    (psum-exact statistics); ``ternary_scale`` is the histogram
-    reformulation (rel. error ~1e-4 at 4k bins).  A leaf whose per-shard
-    element count does not divide the mesh axis falls back to the local
-    solver (replicated math, still correct — just not shard-local).
+    (psum-exact statistics); ``adaptive_zero`` leaves use the pinned-zero
+    psum primitive (:func:`adaptive_zero_kmeans_psum` — same statistics
+    merge, the zero centroid re-pinned each iteration exactly like the
+    local solver); ``ternary_scale`` is the histogram reformulation
+    (rel. error ~1e-4 at 4k bins).  The remaining fallback boundary: a
+    leaf whose per-shard element count does not divide the mesh axis
+    falls back to the local solver (replicated math, still correct —
+    just not shard-local); pinned by tests/test_dist.py.
 
     Enabled from a plan via ``CompressionPlan(sharded_c_step=True)`` +
     ``LCTrainer.from_plan(..., mesh=...)``.
@@ -216,9 +269,6 @@ def lc_c_step_sharded(params, state, *, scheme, qspec, config, mesh: Mesh,
     mu = state.mu
     nshards = mesh.shape[axis]
     adaptive = isinstance(scheme, AdaptiveScheme)
-    # adaptive_zero's pinned-zero centroid step has no sharded primitive
-    # yet: its leaves take the local-fallback path below.
-    supported = not isinstance(scheme, AdaptiveZeroScheme)
     iters = getattr(scheme, "iters_warm", 5)
     new_theta = {}
 
@@ -234,10 +284,10 @@ def lc_c_step_sharded(params, state, *, scheme, qspec, config, mesh: Mesh,
         th = state.theta[path]
         if grouped[path]:
             flat = ws.reshape(ws.shape[0], -1)
-            shardable = supported and flat.shape[1] % nshards == 0
+            shardable = flat.shape[1] % nshards == 0
         else:
             flat = ws.ravel()
-            shardable = supported and flat.size % nshards == 0
+            shardable = flat.size % nshards == 0
         if not shardable:
             if grouped[path]:
                 q, nth = jax.vmap(

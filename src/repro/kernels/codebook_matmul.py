@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.codebook_matmul_packed import _dequant_tile
+from repro.kernels.unpack import dequant_tile
 
 
 def _kernel(x_ref, idx_ref, cb_ref, o_ref, *, k_entries: int, bk: int,
@@ -49,7 +49,7 @@ def _kernel(x_ref, idx_ref, cb_ref, o_ref, *, k_entries: int, bk: int,
     idx = idx_ref[...].astype(jnp.int32)              # [bk, bn] uint8/int32
     cb = cb_ref[0, :]                                 # [K]
 
-    w = _dequant_tile(idx, cb, k_entries, dequant)    # [bk, bn]
+    w = dequant_tile(idx, cb, k_entries, dequant)    # [bk, bn]
     o_ref[...] += jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
                           preferred_element_type=jnp.float32)
 

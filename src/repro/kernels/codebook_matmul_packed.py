@@ -32,39 +32,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.compression import bits_per_index
-
-
-def _dequant_tile(idx, cb, k_entries: int, dequant: str):
-    """[bk, bn] int32 indices + [K] codebook → [bk, bn] float weights."""
-    if dequant == "lut":
-        return jnp.take(cb, idx, axis=0)
-    bk, bn = idx.shape
-    onehot = (idx[:, :, None] ==
-              jax.lax.broadcasted_iota(jnp.int32, (bk, bn, k_entries), 2))
-    return jnp.sum(onehot.astype(cb.dtype) * cb[None, None, :], axis=2)
+from repro.kernels.unpack import dequant_tile, unpack_words_axis0
 
 
 def _kernel(x_ref, pidx_ref, cb_ref, o_ref, *, k_entries: int, bits: int,
-            bkw: int, bn: int, dequant: str):
+            dequant: str):
     kk = pl.program_id(2)
 
     @pl.when(kk == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    lanes = 32 // bits
     x = x_ref[...]                                    # [bm, bk]
     words = pidx_ref[...]                             # [bkw, bn] uint32
     cb = cb_ref[0, :]                                 # [K]
 
     # In-VMEM unpack: word (w, n) → lanes indices at rows w·lanes+l.
-    shifts = (jax.lax.broadcasted_iota(jnp.uint32, (bkw, lanes, bn), 1)
-              * jnp.uint32(bits))
-    mask = jnp.uint32((1 << bits) - 1)
-    idx = ((words[:, None, :] >> shifts) & mask).astype(jnp.int32)
-    idx = idx.reshape(bkw * lanes, bn)                # [bk, bn]
-
-    w = _dequant_tile(idx, cb, k_entries, dequant)
+    idx = unpack_words_axis0(words, bits)             # [bk, bn]
+    w = dequant_tile(idx, cb, k_entries, dequant)
     o_ref[...] += jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
                           preferred_element_type=jnp.float32)
 
@@ -101,8 +86,8 @@ def codebook_matmul_packed_pallas(
     gm, gn, gk = xp.shape[0] // bm, pp.shape[1] // bn, kdp // bk
 
     out = pl.pallas_call(
-        functools.partial(_kernel, k_entries=k_entries, bits=bits, bkw=bkw,
-                          bn=bn, dequant=dequant),
+        functools.partial(_kernel, k_entries=k_entries, bits=bits,
+                          dequant=dequant),
         grid=(gm, gn, gk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),

@@ -8,7 +8,9 @@ embedding gather here; this module picks the implementation:
 
 * ``pallas``            — the Mosaic kernels (dequant-in-VMEM; TPU only):
   ``codebook_matmul`` for uint8 indices, ``codebook_matmul_packed`` for
-  the bit-packed uint32 word operand;
+  the bit-packed uint32 word operand, ``codebook_matmul_packed_t`` for
+  the fused transposed LM head, ``quantized_gather`` for the row-packed
+  embedding table;
 * ``pallas_interpret``  — same kernel bodies, Python interpreter (CPU
   correctness checks; slow);
 * ``ref``               — pure-jnp gather-dequant + dot
@@ -38,7 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compression import (PackedLayout, bits_per_index,
-                                    unpack_indices_2d)
+                                    unpack_indices_2d, unpack_rows)
 from repro.kernels import ops, ref
 
 Array = jax.Array
@@ -75,6 +77,10 @@ _PACKED_BLOCK_TABLE: Dict[Tuple[int, int, int, int],
     (256, 2048, 512, 4): (128, 128, 512),   # bench prefill shape
     (64, 1024, 256, 4): (64, 256, 512),     # bench mid shape
     (1, 2048, 512, 4): (8, 512, 1024),      # single-request decode
+    # Transposed LM-head route (packed_block_sizes_t keys on (M, D, V)):
+    # decode micro-batch against a row-packed 1024-vocab head (bench
+    # shape codebook_matmul_packed_t_*).
+    (8, 256, 1024, 4): (8, 256, 256),
 }
 
 
@@ -116,6 +122,21 @@ def packed_block_sizes(m: int, kd: int, n: int, bits: int
         bk = min(bk, _round_up(kd, 128))
     lanes = 32 // bits
     bk = max(lanes, bk // lanes * lanes)
+    return bm, bn, bk
+
+
+def packed_block_sizes_t(m: int, d: int, n_out: int, bits: int, order: str
+                         ) -> Tuple[int, int, int]:
+    """(bm, bn, bk) for the *transposed* packed kernel (LM head: y[M, V] =
+    x[M, D]·W.T).  Reuses :func:`packed_block_sizes` keyed on the
+    contraction shape (M, D, V), then re-aligns the lane-packed axis:
+    ``order="kd"`` packs V (the output axis) → bn must be a lanes
+    multiple; ``order="row"`` packs D (the reduction axis) → bk already
+    is.  Same ``REPRO_PACKED_BLOCKS`` override."""
+    bm, bn, bk = packed_block_sizes(m, d, n_out, bits)
+    if order == "kd":
+        lanes = 32 // bits
+        bn = max(lanes, bn // lanes * lanes)
     return bm, bn, bk
 
 
@@ -201,7 +222,8 @@ def packed_quantized_matmul(x: Array, pidx: Array, codebook: Array, *,
     :func:`quantized_matmul`; non-matrix layouts (``layout.shape`` set)
     always take the dequant-then-dot route."""
     b = backend or default_backend()
-    nd = layout is not None and layout.shape is not None
+    nd = layout is not None and (layout.shape is not None
+                                 or layout.order != "kd")
     if b == "ref" or pidx.ndim != 2 or nd:
         if layout is None:
             raise ValueError("packed_quantized_matmul needs the static "
@@ -215,28 +237,84 @@ def packed_quantized_matmul(x: Array, pidx: Array, codebook: Array, *,
     return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
 
 
+def packed_quantized_matmul_t(x: Array, pidx: Array, codebook: Array, *,
+                              layout: PackedLayout,
+                              backend: Optional[str] = None,
+                              blocks: Optional[Tuple[int, int, int]] = None,
+                              ) -> Array:
+    """y[..., V] = x[..., D] · codebook[unpack(pidx)].T — the fused
+    transposed (tied/untied LM-head) route over a packed [V, D] leaf.
+
+    The packed word operand — ``pack_indices_2d`` (``layout.order="kd"``)
+    or ``pack_rows`` (``"row"``, the embedding serving layout shared with
+    the fused gather) — stays HBM-resident on the Pallas backends:
+    ``bits_per_index(K)/8`` bytes/weight, no dense [V, D] temporary.  On
+    the ``ref`` backend (CPU serving default) the contraction is literally
+    ``x @ decode.T`` — the identical graph as the dense layout, so
+    packed-vs-dense logits are bit-exact there.
+    """
+    b = backend or default_backend()
+    if b == "ref" or pidx.ndim != 2 or layout.shape is not None \
+            or codebook.ndim != 1:
+        w = decode_packed_leaf(pidx, codebook, layout)
+        y = x @ jnp.matrix_transpose(w)
+        return y.astype(x.dtype)
+    if pidx.shape != layout.word_shape:
+        raise ValueError(f"pidx {pidx.shape} != layout word shape "
+                         f"{layout.word_shape} ({layout})")
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    bm, bn, bk = blocks or packed_block_sizes_t(
+        x2.shape[0], layout.n, layout.kd, layout.bits, layout.order)
+    y = ops.packed_codebook_matmul_t(
+        x2, pidx, codebook, layout.kd, order=layout.order, bm=bm, bn=bn,
+        bk=bk, dequant=default_dequant(),
+        interpret=(b == "pallas_interpret"))
+    return y.reshape(lead + (layout.kd,)).astype(x.dtype)
+
+
 def quantized_gather(tokens: Array, pidx: Array, codebook: Array, *,
                      layout: PackedLayout,
                      backend: Optional[str] = None) -> Array:
     """Embedding dequant-on-gather: rows ``codebook[unpack(pidx)[tokens]]``
     without ever materializing the dense [V, D] table.
 
-    The HBM-resident operand is the bit-packed word table
-    ([⌈V/lanes⌉, D] uint32, :func:`~repro.core.compression.pack_indices_2d`
-    layout over the vocab axis): a token's lookup gathers its word row,
-    shift+masks its lane in registers, and LUTs the ``layout.bits``-bit
-    index through the K-entry codebook.  jnp reference backend today (XLA
-    fuses the three steps); a Mosaic gather kernel can slot in behind
-    ``backend`` later.  A 2-D codebook is per-group ([G, K] against
-    grouped tokens) — not needed for the root embedding table.
+    ``layout.order == "row"`` (the serving layout —
+    :func:`~repro.core.compression.pack_rows`, [V, ⌈D/lanes⌉] uint32): a
+    token's lookup reads its contiguous packed word row — exactly
+    ``bits_per_index(K)/8`` bytes per gathered weight.  On TPU this is the
+    Mosaic kernel (``kernels.quantized_gather``: scalar-prefetch row DMA →
+    shift+mask → K-entry LUT); the jnp route (word-row gather + unpack,
+    the same bytes) is the CPU reference — a pure gather, so it is
+    bit-exact vs the dense table on every backend.
+
+    ``layout.order == "kd"`` (the pre-row-pack column layout,
+    :func:`~repro.core.compression.pack_indices_2d` over the vocab axis):
+    retained jnp fallback — gathers one full uint32 word per embedding
+    *column* (4 B/weight), shift+masks the token's lane.  A 2-D codebook
+    is per-group ([G, K]) — not needed for the root embedding table.
     """
-    del backend                      # single (jnp reference) backend today
     tokens = tokens.astype(jnp.int32)
-    mask = jnp.uint32((1 << layout.bits) - 1)
-    words = pidx[tokens // layout.lanes]             # [..., D] uint32
-    lane = (tokens % layout.lanes).astype(jnp.uint32)
-    idx = (words >> (lane[..., None] * jnp.uint32(layout.bits))) & mask
-    rows = codebook[idx.astype(jnp.int32)]
+    if layout.order == "row":
+        b = backend or default_backend()
+        if b != "ref" and pidx.ndim == 2 and codebook.ndim == 1:
+            lead = tokens.shape
+            out = ops.quantized_gather(
+                tokens.reshape(-1), pidx, codebook, layout.n,
+                dequant=default_dequant(),
+                interpret=(b == "pallas_interpret"))
+            rows = out.reshape(lead + (layout.n,))
+        else:
+            words = pidx[tokens]                     # [..., ⌈D/lanes⌉]
+            idx = unpack_rows(words, layout.n, layout.k)
+            rows = codebook[idx]
+    else:
+        del backend              # single (jnp reference) backend for "kd"
+        mask = jnp.uint32((1 << layout.bits) - 1)
+        words = pidx[tokens // layout.lanes]         # [..., D] uint32
+        lane = (tokens % layout.lanes).astype(jnp.uint32)
+        idx = (words >> (lane[..., None] * jnp.uint32(layout.bits))) & mask
+        rows = codebook[idx.astype(jnp.int32)]
     # Cast f32 codebook values back to the table's original dtype so the
     # embedding keeps anchoring the residual-stream dtype (bf16 models).
     return rows if layout.dtype is None else rows.astype(layout.dtype)
@@ -257,10 +335,13 @@ def decode_leaf(idx: Array, codebook: Array, dtype=None) -> Array:
 def decode_packed_leaf(pidx: Array, codebook: Array, layout: PackedLayout,
                        dtype=None) -> Array:
     """Materialize a dense weight from the bit-packed word operand
-    (``pack_indices_2d`` layout; grouped leaves carry a leading G axis).
+    (``pack_indices_2d`` layout, or ``pack_rows`` when
+    ``layout.order == "row"``; grouped leaves carry a leading G axis).
     Non-matrix leaves (``layout.shape`` set — e.g. MoE expert stacks
     [E, D, F] packed as (E·D, F)) are reshaped back to the dense shape."""
-    if pidx.ndim == 3:
+    if layout.order == "row":
+        idx = unpack_rows(pidx, layout.n, layout.k)
+    elif pidx.ndim == 3:
         idx = jax.vmap(lambda w: unpack_indices_2d(w, layout.kd,
                                                    layout.k))(pidx)
     else:

@@ -14,8 +14,11 @@ import jax.numpy as jnp
 
 from repro.kernels.codebook_matmul import codebook_matmul_pallas
 from repro.kernels.codebook_matmul_packed import codebook_matmul_packed_pallas
+from repro.kernels.codebook_matmul_packed_t import (
+    codebook_matmul_packed_t_pallas)
 from repro.kernels.fixed_quant import fixed_quant_pallas
 from repro.kernels.kmeans_assign import kmeans_assign_pallas
+from repro.kernels.quantized_gather import quantized_gather_pallas
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -72,6 +75,49 @@ def packed_codebook_matmul(x: jax.Array, pidx: jax.Array,
     traffic (see codebook_matmul_packed.py)."""
     return _packed_codebook_matmul_jit(x, pidx, codebook, bm, bn, bk,
                                        dequant, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_out", "order", "bm", "bn", "bk",
+                                    "dequant", "interpret"))
+def _packed_codebook_matmul_t_jit(x, pidx, codebook, n_out, order, bm, bn,
+                                  bk, dequant, interpret):
+    return codebook_matmul_packed_t_pallas(x, pidx, codebook, n_out,
+                                           order=order, bm=bm, bn=bn, bk=bk,
+                                           dequant=dequant,
+                                           interpret=interpret)
+
+
+def packed_codebook_matmul_t(x: jax.Array, pidx: jax.Array,
+                             codebook: jax.Array, n_out: int, *,
+                             order: str = "kd", bm: int = 128,
+                             bn: int = 128, bk: int = 512,
+                             dequant: str = "lut",
+                             interpret: Optional[bool] = None) -> jax.Array:
+    """y = x · codebook[unpack(pidx)].T — the fused transposed (LM-head)
+    route; the packed word operand stays HBM-resident (see
+    codebook_matmul_packed_t.py)."""
+    return _packed_codebook_matmul_t_jit(x, pidx, codebook, n_out, order,
+                                         bm, bn, bk, dequant,
+                                         _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("d", "dequant", "interpret"))
+def _quantized_gather_jit(tokens, pidx, codebook, d, dequant, interpret):
+    return quantized_gather_pallas(tokens, pidx, codebook, d,
+                                   dequant=dequant, interpret=interpret)
+
+
+def quantized_gather(tokens: jax.Array, pidx: jax.Array,
+                     codebook: jax.Array, d: int, *,
+                     dequant: str = "lut",
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """rows = codebook[unpack(pidx[tokens])] — Mosaic dequant-on-gather
+    over the pack_rows embedding layout: ``bits_per_index(K)/8`` HBM bytes
+    per gathered weight (see quantized_gather.py)."""
+    return _quantized_gather_jit(tokens, pidx, codebook, d, dequant,
+                                 _auto_interpret(interpret))
 
 
 @functools.partial(jax.jit,

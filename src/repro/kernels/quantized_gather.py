@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: embedding dequant-on-gather over bit-packed rows.
+
+out[T, D] = codebook[unpack(pidx[tokens])] where the embedding table
+[V, D] is stored in the ``pack_rows`` layout — uint32 ``pidx[V, ⌈D/lanes⌉]``,
+each word holding ``lanes = 32 // bits`` consecutive *feature-axis*
+indices of one vocab row.  The token ids are a scalar-prefetch operand
+(``pltpu.PrefetchScalarGridSpec``), so each grid step DMAs exactly one
+packed word row — ``⌈D/lanes⌉ · 4`` bytes, i.e. ``bits_per_index(K)/8``
+bytes per gathered weight — then shift+mask-unpacks it and LUT-gathers
+the K-entry codebook in VMEM (``kernels.unpack``).
+
+This replaces the jnp fallback over the PR-3 column-packed layout, which
+gathered one full uint32 word per embedding *column* (4 B/weight): the
+packed-row layout + fused kernel close the last dense-inflation gap of
+the eq.-14 serving story.  The jnp route (``dispatch.quantized_gather``)
+is retained as the CPU reference.
+
+The dense [V, D] table is never materialized; the only f32 HBM write is
+the [T, D] result.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.compression import bits_per_index
+from repro.kernels.unpack import dequant_tile, unpack_words_axis1
+
+
+def _kernel(tokens_ref, pidx_ref, cb_ref, o_ref, *, k_entries: int,
+            bits: int, dequant: str):
+    del tokens_ref                 # consumed by the index maps
+    words = pidx_ref[...]                             # [1, Dw] uint32
+    idx = unpack_words_axis1(words, bits)             # [1, Dw·lanes]
+    o_ref[...] = dequant_tile(idx, cb_ref[0, :], k_entries, dequant)
+
+
+def quantized_gather_pallas(
+    tokens: jax.Array,       # [T] int32 row ids
+    pidx: jax.Array,         # [V, ⌈D/lanes⌉] uint32 pack_rows words
+    codebook: jax.Array,     # [K] float
+    d: int,                  # true feature dim D (≤ ⌈D/lanes⌉·lanes)
+    *,
+    dequant: str = "lut",
+    interpret: bool = False,
+) -> jax.Array:
+    if tokens.ndim != 1:
+        raise ValueError(f"tokens must be flat [T], got {tokens.shape}")
+    k_entries = codebook.shape[0]
+    bits = bits_per_index(k_entries)
+    lanes = 32 // bits
+    v, wd = pidx.shape
+    if wd != -(-d // lanes):
+        raise ValueError(f"pidx cols {wd} != ceil({d}/{lanes}) — operand "
+                         f"not in pack_rows layout for K={k_entries}")
+    if dequant not in ("lut", "onehot"):
+        raise ValueError(f"dequant={dequant!r}; choose lut|onehot")
+    dp = wd * lanes
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tokens.shape[0],),
+        in_specs=[
+            pl.BlockSpec((1, wd), lambda t, toks: (toks[t], 0)),
+            pl.BlockSpec((1, k_entries), lambda t, toks: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dp), lambda t, toks: (t, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, k_entries=k_entries, bits=bits,
+                          dequant=dequant),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((tokens.shape[0], dp), jnp.float32),
+        interpret=interpret,
+    )(tokens.astype(jnp.int32), pidx, codebook.reshape(1, -1))
+    return out[:, :d]

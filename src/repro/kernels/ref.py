@@ -40,6 +40,33 @@ def packed_codebook_matmul_ref(x: jax.Array, pidx: jax.Array,
     return codebook_matmul_ref(x, idx, codebook)
 
 
+def packed_codebook_matmul_t_ref(x: jax.Array, pidx: jax.Array,
+                                 codebook: jax.Array, n_out: int,
+                                 order: str = "kd"):
+    """Reference for kernels.codebook_matmul_packed_t: unpack the word
+    operand (either orientation), gather, then the transposed dot."""
+    from repro.core.compression import unpack_indices_2d, unpack_rows
+
+    if order == "row":
+        idx = unpack_rows(pidx, x.shape[-1], codebook.shape[0])   # [V, D]
+    else:
+        idx = unpack_indices_2d(pidx, n_out, codebook.shape[0])   # [V, D]
+    w = codebook.astype(jnp.float32)[idx]
+    return (x.astype(jnp.float32) @ w.T).astype(x.dtype)
+
+
+def quantized_gather_ref(tokens: jax.Array, pidx: jax.Array,
+                         codebook: jax.Array, d: int):
+    """Reference for kernels.quantized_gather: gather the packed word row,
+    unpack its lanes, LUT through the codebook — a pure gather, so it is
+    bit-exact vs the kernel and vs the dense-table row gather."""
+    from repro.core.compression import unpack_rows
+
+    words = pidx[tokens.astype(jnp.int32)]           # [..., ⌈d/lanes⌉]
+    idx = unpack_rows(words, d, codebook.shape[0])
+    return codebook[idx]
+
+
 def fixed_quant_ref(w: jax.Array, mode: str, pow2_c: int = 4,
                     scale: float = 1.0):
     """Reference for kernels.fixed_quant via repro.core.quant_ops."""

@@ -90,13 +90,20 @@ def packed_report(directory: str) -> None:
     n_q = sum(r["quantized"] for r in rows)
     print(f"### Leaf coverage — {n_q}/{len(rows)} param paths served "
           f"quantized\n")
-    print("| path | shape | quantized | bits | why dense |")
-    print("|---|---|---|---|---|")
+    print("(serve route: `qmatmul` = packed codebook matmul; "
+          "`qembed+qmatmul_t` = row-packed fused gather + transposed "
+          "LM head — every route reads bits_per_index(K)/8 B/weight of "
+          "HBM index traffic)\n")
+    print("| path | shape | quantized | bits | B/weight | route "
+          "| why dense |")
+    print("|---|---|---|---|---|---|---|")
     for r in rows:
         shape = "×".join(map(str, r["shape"]))
+        bpw = (f"{r['bytes_per_weight']:g}" if r["quantized"] else "-")
         print(f"| `{r['path']}` | {shape} "
               f"| {'yes' if r['quantized'] else 'no'} "
               f"| {r['bits'] if r['quantized'] else '-'} "
+              f"| {bpw} | {r['route'] or '-'} "
               f"| {r['reason'] or '-'} |")
 
 

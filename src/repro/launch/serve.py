@@ -15,7 +15,11 @@ through ``repro.models.qleaf`` → ``repro.kernels.dispatch`` (Mosaic
 codebook-matmul / dequant-on-gather on TPU, jnp reference on CPU).
 ``--serve-layout packed`` (default) keeps the bit-packed uint32 word
 operand HBM-resident (bits_per_index(K)/8 bytes/weight — the eq.-14
-footprint); ``--serve-layout uint8`` is the legacy 1 B/weight uint8-index
+footprint): matmul leaves in the ``pack_indices_2d`` layout (fused
+codebook matmul), the embedding table row-packed (``pack_rows``) so both
+the Mosaic dequant-on-gather and the fused transposed tied-LM-head
+kernel read bits/8 B/weight without ever inflating the dense [V, D]
+table.  ``--serve-layout uint8`` is the legacy 1 B/weight uint8-index
 layout kept as the fallback/oracle.  ``--serve-leaves mlp`` restricts
 coverage to the pre-qleaf MLP-only set (the PR-2 behaviour).  The
 arch/config must match the one the artifact was packed from.
@@ -94,11 +98,19 @@ def main():
                      if args.serve_layout == "packed" else 1.0)
         cov = packed.leaf_coverage()
         n_q = sum(r["quantized"] for r in cov)
+        # row-packed fused routes only exist on the bit-packed layout
+        # with full coverage (uint8/MLP-only serving never emits them)
+        n_row = (sum(r["quantized"] and "pack_rows" in (r["route"] or "")
+                     for r in cov)
+                 if args.serve_layout == "packed"
+                 and args.serve_leaves == "all" else 0)
+        row_note = (f", {n_row} row-packed for fused gather + transposed "
+                    f"head" if n_row else "")
         print(f"serving packed artifact: {s['scheme']} "
               f"({s['bits_per_weight']} bit/weight, ×{s['ratio']:.1f}, "
               f"{args.serve_layout} layout: {idx_bytes:g} B/weight HBM "
               f"index traffic; {args.serve_leaves} leaves — "
-              f"{n_q}/{len(cov)} param paths quantized)")
+              f"{n_q}/{len(cov)} param paths quantized{row_note})")
     else:
         params = init_params(jax.random.PRNGKey(0), cfg)
         if args.ckpt_dir:

@@ -18,10 +18,13 @@ Call sites pick the entry point by access pattern, and
 
 * :func:`qmatmul`   — ``x @ W``: the fused codebook-matmul kernels
   (Mosaic dequant-in-VMEM on TPU, jnp gather-dequant reference on CPU);
-* :func:`qmatmul_t` — ``x @ W.T``: the tied-embedding LM head (dequant is
-  an in-jit temporary; the HBM operand stays packed);
+* :func:`qmatmul_t` — ``x @ W.T``: the tied-embedding LM head — the
+  fused transposed packed kernel (``dispatch.packed_quantized_matmul_t``;
+  the HBM operand stays packed, the [V, D] table is never inflated; an
+  untied ``head_w`` is [D, V] and is already fused via :func:`qmatmul`);
 * :func:`qembed`    — row gather: fused unpack + LUT dequant-on-gather
-  (``dispatch.quantized_gather``), no dense table is materialized;
+  (``dispatch.quantized_gather``; Mosaic row-gather kernel on the packed
+  ``pack_rows`` layout), no dense table is materialized;
 * :func:`qweight`   — the dense tensor, for einsum operands and reshaped
   factors (MoE expert stacks, MLA ``w_uk``/``w_uv``) — again an in-jit
   temporary scheduled per use.
@@ -78,9 +81,22 @@ def qmatmul(p, name: str, x: Array) -> Array:
 
 
 def qmatmul_t(p, name: str, x: Array) -> Array:
-    """``x @ <name>.T`` — the tied-embedding LM head.  The dequant (if
-    quantized) is an in-jit temporary; the packed table is the only
-    HBM-resident operand."""
+    """``x @ <name>.T`` — the tied-embedding LM head over a [V, D] table
+    (an untied head ``head_w`` is stored [D, V] and goes through
+    :func:`qmatmul`, already fused).
+
+    Packed leaves route through ``dispatch.packed_quantized_matmul_t`` —
+    the fused transposed kernel on TPU reads the packed words directly
+    (``bits_per_index(K)/8`` B/weight; the dense [V, D] table is never
+    inflated); the CPU reference is the identical ``x @ decode.T`` graph
+    as the dense layout (bit-exact logits).  uint8-oracle and dense
+    leaves take the dequant-then-dot route (in-jit temporary).
+    """
+    if f"{name}_pidx" in p:
+        from repro.kernels import dispatch
+        return dispatch.packed_quantized_matmul_t(
+            x, p[f"{name}_pidx"], p[f"{name}_cb"],
+            layout=p[f"{name}_layout"])
     return x @ qweight(p, name).T
 
 

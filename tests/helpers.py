@@ -1,0 +1,147 @@
+"""Shared helpers for the cross-route differential test suites.
+
+The three serving storage layouts a quantized leaf may arrive in —
+
+* ``dense``  — the decoded dense params (``PackedModel.decode()``);
+* ``uint8``  — ``<name>_idx`` uint8 + ``<name>_cb``
+  (``serving_params(packed=False)``, the 1 B/weight oracle);
+* ``packed`` — ``<name>_pidx`` uint32 words + ``<name>_cb`` +
+  ``<name>_layout`` (``serving_params(packed=True)``,
+  ``bits_per_index(K)/8`` B/weight; embedding tables row-packed) —
+
+must produce **bit-identical** model outputs on the CPU ref backend
+across every execution mode (forward / prefill / decode).  These helpers
+build the layouts and run the comparison so the matrix in
+``tests/test_differential.py`` (and the ad-hoc checks consolidated from
+``test_qleaf.py``) all go through one code path:
+:func:`assert_routes_agree`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CompressionPlan, PackedModel
+from repro.models.transformer import (LayerKind, ModelConfig, MoESpec,
+                                      SSMSpec, StackSpec, decode_step,
+                                      forward, init_params, prefill)
+
+# the PR-2-era MLP-only coverage set (pre-qleaf serving)
+MLP_LEGACY = ("w_in", "w_gate", "w_out")
+
+LAYOUTS = ("dense", "uint8", "packed")
+MODES = ("forward", "prefill", "decode")
+
+
+def tiny_cfg(tie: bool = True) -> ModelConfig:
+    """Smallest stack that still exercises every new packed route: GQA +
+    dense MLP, tied embeddings (row-packed table → fused gather AND fused
+    transposed LM head)."""
+    return ModelConfig(
+        name="tiny-diff", family="dense", d_model=32, n_heads=4, n_kv=2,
+        head_dim=8, d_ff=64, vocab=96,
+        stacks=(StackSpec(pattern=(LayerKind("gqa", "dense"),), groups=2),),
+        tie_embeddings=tie, q_chunk=8, kv_chunk=8, remat=False)
+
+
+def mixed_cfg(tie: bool) -> ModelConfig:
+    """Tiny mixed stack: gqa+dense-MLP, ssm (no MLP), gqa+MoE — every
+    mixer/MLP kind the full-model qleaf layout must cover on CPU."""
+    return ModelConfig(
+        name="mixed-qleaf", family="hybrid", d_model=48, n_heads=4, n_kv=2,
+        head_dim=12, d_ff=96, vocab=160,
+        stacks=(StackSpec(pattern=(LayerKind("gqa", "dense"),
+                                   LayerKind("ssm", "none")), groups=2),
+                StackSpec(pattern=(LayerKind("gqa", "moe"),), groups=1)),
+        tie_embeddings=tie,
+        moe=MoESpec(n_experts=4, top_k=2, n_shared=1, d_ff_expert=24,
+                    capacity_factor=4.0),
+        ssm=SSMSpec(d_inner=96, head_p=16, state_n=12, conv_w=4, chunk=8),
+        q_chunk=8, kv_chunk=8, remat=False)
+
+
+def pack_model(params, k: int) -> PackedModel:
+    """Default-policy pack at codebook size K (adaptive scheme)."""
+    plan = CompressionPlan.parse(f"adaptive:{k}")
+    qspec = plan.build_qspec(params)
+    state = plan.init(jax.random.PRNGKey(1), params, qspec)
+    return plan.pack(params, state, qspec)
+
+
+def serving_layouts(packed: PackedModel,
+                    which: Iterable[str] = LAYOUTS) -> Dict[str, dict]:
+    """The three storage layouts of one artifact, keyed by name."""
+    build = {"dense": packed.decode,
+             "uint8": lambda: packed.serving_params(packed=False),
+             "packed": lambda: packed.serving_params(packed=True)}
+    return {name: build[name]() for name in which}
+
+
+@functools.lru_cache(maxsize=None)
+def packed_tiny(k: int, dtype_name: str, tie: bool = True):
+    """Cached (cfg, PackedModel) for the differential matrix — packing is
+    the expensive step, so each (K, dtype) cell is built once per run."""
+    cfg = tiny_cfg(tie)
+    params = init_params(jax.random.PRNGKey(0), cfg,
+                         dtype=jnp.dtype(dtype_name))
+    return cfg, pack_model(params, k)
+
+
+def assert_trees_equal(a, b, context: str = ""):
+    """Bitwise equality over two pytrees (leaf count, then every array)."""
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), (context, len(la), len(lb))
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=context)
+
+
+def run_mode(params, cfg: ModelConfig, tokens, mode: str,
+             decode_steps: int = 3):
+    """One serving execution mode → comparable pytree of outputs.
+
+    ``forward``: full-sequence logits.  ``prefill``: (last logits, emitted
+    caches).  ``decode``: prefill then ``decode_steps`` greedy steps —
+    returns every step's logits AND the final caches, so cache divergence
+    is caught even when logits happen to agree.
+    """
+    if mode == "forward":
+        return forward(params, cfg, tokens)
+    logits, caches = prefill(params, cfg, tokens, last_logits_only=True)
+    if mode == "prefill":
+        return logits, caches
+    assert mode == "decode", mode
+    outs = [logits]
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    for t in range(decode_steps):
+        pos = jnp.asarray(tokens.shape[1] + t, jnp.int32)
+        logits, caches = decode_step(params, cfg, caches, tok, pos)
+        outs.append(logits)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    return outs, caches
+
+
+def assert_routes_agree(cfg: ModelConfig, layouts: Dict[str, dict], tokens,
+                        modes: Tuple[str, ...] = MODES,
+                        reference: str = "dense",
+                        decode_steps: int = 3):
+    """Every layout serves bit-identically to ``reference`` in every mode.
+
+    This is THE differential invariant of the packed-serving family: on
+    the CPU ref backend the quantized routes are literally the dense
+    ``x @ cb[idx]`` graph, so logits *and* caches must match bitwise —
+    any mismatch means a storage layout decoded differently.
+    """
+    ref_out = {m: run_mode(layouts[reference], cfg, tokens, m,
+                           decode_steps=decode_steps) for m in modes}
+    for name, params in layouts.items():
+        if name == reference:
+            continue
+        for m in modes:
+            got = run_mode(params, cfg, tokens, m, decode_steps=decode_steps)
+            assert_trees_equal(ref_out[m], got,
+                               context=f"layout={name} mode={m}")

@@ -1,0 +1,78 @@
+"""Serve-path byte-accounting invariant over the kernel-bench output.
+
+Runs ``benchmarks.run --only kernels --json`` end to end (in
+``REPRO_BENCH_FAST=1`` mode — one timing iteration; the *derived*
+accounting strings are produced exactly as CI's BENCH_kernels.json) and
+asserts, for every packed-route row (``*_packed_*``, ``quantized_gather_*``,
+``codebook_matmul_packed_t_*``), that the reported HBM index bytes per
+weight equal ``bits_per_index(K)/8`` — the eq.-14 serving footprint.
+
+This pins the PR-4 fix: gather rows used to report the *resident word
+bytes per table weight* of the column-packed layout (and the jnp route's
+gathered traffic was 4 B/weight); the row-packed serving layout reads
+``bits/8`` per gathered weight and the bench must account for exactly
+that.
+"""
+import json
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_BPW_RE = re.compile(
+    r"idx_bytes/weight=([0-9.]+) \(== bits_per_index/8 = ([0-9.]+)")
+
+
+@pytest.fixture(scope="module")
+def bench_json(tmp_path_factory):
+    out = tmp_path_factory.mktemp("bench") / "BENCH_kernels.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["REPRO_BENCH_FAST"] = "1"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "kernels",
+         "--json", str(out)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=1800)
+    assert res.returncode == 0, res.stderr[-3000:]
+    with open(out) as f:
+        return json.load(f)
+
+
+def test_every_packed_row_reports_bits_over_8(bench_json):
+    packed_rows = {n: r for n, r in bench_json.items()
+                   if "_packed_" in n or n.startswith("quantized_gather")}
+    # the serve-path rows the bench must keep emitting
+    for expect in ("codebook_matmul_packed_interp_K2",
+                   "codebook_matmul_packed_interp_K16",
+                   "codebook_matmul_packed_interp_K256",
+                   "codebook_matmul_packed_t_K2",
+                   "codebook_matmul_packed_t_K16",
+                   "codebook_matmul_packed_t_K256",
+                   "quantized_gather_mosaic_K2",
+                   "quantized_gather_mosaic_K16",
+                   "quantized_gather_mosaic_K256",
+                   "quantized_gather_embed_K2",
+                   "quantized_gather_embed_K16",
+                   "quantized_gather_embed_K256"):
+        assert expect in packed_rows, f"bench row {expect} disappeared"
+    for name, row in packed_rows.items():
+        derived = row["derived"]
+        assert "MISMATCH" not in derived, f"{name}: {derived}"
+        m = _BPW_RE.search(derived)
+        assert m, f"{name}: no idx_bytes/weight accounting in {derived!r}"
+        actual, expect = float(m.group(1)), float(m.group(2))
+        assert actual == pytest.approx(expect, abs=1e-9), \
+            f"{name}: {actual} B/weight != bits/8 = {expect}"
+        # bits/8 for K ≤ 256 is one of the serve-path widths
+        assert expect in (0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0)
+
+
+def test_uint8_oracle_rows_report_one_byte(bench_json):
+    for name, row in bench_json.items():
+        if "uint8" in name:
+            assert "idx_bytes/weight=1.0" in row["derived"]

@@ -1,0 +1,195 @@
+"""Cross-route differential matrix: the three storage layouts can never
+silently diverge again.
+
+One parametrized suite asserts **bit-exactness** on the CPU ref backend
+over {dense, uint8 ``_idx``, bit-packed ``_pidx``} × {forward, prefill,
+decode} × K ∈ {2, 3, 16, 256} × dtype ∈ {f32, bf16} for a tiny
+tied-embedding GQA stack — which exercises every packed serve route
+including the two PR-4 kernels' layouts (row-packed embedding: fused
+gather + fused transposed LM head).  Logits AND caches are compared, so
+a cache-path divergence is caught even when logits agree.
+
+A second block checks the fused Pallas routes (interpret mode) against
+the ref backend at the dispatch level, and the hypothesis fuzz drives
+ragged shapes / non-pow2 K through all three layouts at once at the
+qleaf level (skips when hypothesis is not installed, like
+test_schemes_property.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # dev-only dep: fuzzing skips, matrix still runs
+    given = None
+
+from helpers import (assert_routes_agree, packed_tiny, serving_layouts,
+                     tiny_cfg)
+from repro.core import compression as C
+from repro.kernels import dispatch
+from repro.models import qleaf as Q
+
+K_MATRIX = [2, 3, 16, 256]          # bits ∈ {1, 2, 4, 8}, pow2 and non-pow2
+DTYPES = ["float32", "bfloat16"]
+MODES = ["forward", "prefill", "decode"]
+
+
+def _tokens(cfg, seed=2):
+    return jax.random.randint(jax.random.PRNGKey(seed), (2, 16), 0,
+                              cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# The matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("k", K_MATRIX)
+def test_layout_matrix_bit_exact(k, dtype, mode):
+    cfg, packed = packed_tiny(k, dtype)
+    layouts = serving_layouts(packed)
+    # the packed layout must actually be the packed layout (and the tied
+    # embedding row-packed for the fused gather/transposed-head kernels)
+    assert "embed_tok_pidx" in layouts["packed"]
+    assert layouts["packed"]["embed_tok_layout"].order == "row"
+    assert "embed_tok_idx" in layouts["uint8"]
+    assert_routes_agree(cfg, layouts, _tokens(cfg), modes=(mode,))
+
+
+@pytest.mark.parametrize("k", [3, 16])
+def test_matrix_catches_a_poisoned_layout(k):
+    """The harness itself must fail when a layout diverges: perturb the
+    packed embedding codebook and assert the matrix trips."""
+    cfg, packed = packed_tiny(k, "float32")
+    layouts = serving_layouts(packed)
+    bad = dict(layouts["packed"])
+    bad["embed_tok_cb"] = bad["embed_tok_cb"] + 1.0
+    layouts["packed"] = bad
+    with pytest.raises(AssertionError):
+        assert_routes_agree(cfg, layouts, _tokens(cfg), modes=("forward",))
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas routes (interpret mode) vs the ref backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [2, 16, 256])
+def test_fused_routes_match_ref_backend(k):
+    """dispatch-level: the interpret-mode Mosaic kernels agree with the
+    CPU ref route on the same packed operands — the gather bitwise (pure
+    gather), the transposed matmul to f32 tolerance (f32 accumulation)."""
+    rng = np.random.RandomState(k)
+    v, d, m = 52, 24, 5
+    idx = rng.randint(0, k, size=(v, d))
+    cb = jnp.asarray(rng.randn(k), jnp.float32)
+    pidx_r = jnp.asarray(C.pack_rows(idx, k))
+    layout = C.PackedLayout.make(v, d, k, order="row")
+    toks = jnp.asarray(rng.randint(0, v, size=(3, 7)), jnp.int32)
+    g_ref = dispatch.quantized_gather(toks, pidx_r, cb, layout=layout,
+                                      backend="ref")
+    g_pal = dispatch.quantized_gather(toks, pidx_r, cb, layout=layout,
+                                      backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(g_ref), np.asarray(g_pal))
+    np.testing.assert_array_equal(np.asarray(g_ref),
+                                  np.asarray(cb)[idx][np.asarray(toks)])
+
+    x = jnp.asarray(rng.randn(m, d), jnp.float32)
+    y_ref = dispatch.packed_quantized_matmul_t(x, pidx_r, cb, layout=layout,
+                                               backend="ref")
+    y_pal = dispatch.packed_quantized_matmul_t(x, pidx_r, cb, layout=layout,
+                                               backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pal),
+                               rtol=3e-5, atol=3e-4)
+    # the kd-order (pack_indices_2d) orientation also feeds the kernel
+    pidx_kd = jnp.asarray(C.pack_indices_2d(idx, k))
+    lay_kd = C.PackedLayout.make(v, d, k)
+    y_kd = dispatch.packed_quantized_matmul_t(x, pidx_kd, cb, layout=lay_kd,
+                                              backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_kd),
+                               rtol=3e-5, atol=3e-4)
+
+
+def test_qmatmul_t_ref_route_is_dense_graph_all_layouts():
+    """qleaf.qmatmul_t on the CPU ref backend is literally x @ W.T for
+    every storage layout — bitwise equal across dense / uint8 / packed
+    (both word orders)."""
+    rng = np.random.RandomState(5)
+    v, d, k = 40, 16, 16
+    idx = rng.randint(0, k, size=(v, d))
+    cb = jnp.asarray(rng.randn(k), jnp.float32)
+    dense = jnp.asarray(np.asarray(cb)[idx])
+    x = jnp.asarray(rng.randn(3, d), jnp.float32)
+    want = np.asarray(x @ dense.T)
+    trees = {
+        "dense": {"w": dense},
+        "uint8": {"w_idx": jnp.asarray(idx, jnp.uint8), "w_cb": cb},
+        "packed-kd": {"w_pidx": jnp.asarray(C.pack_indices_2d(idx, k)),
+                      "w_cb": cb, "w_layout": C.PackedLayout.make(v, d, k)},
+        "packed-row": {"w_pidx": jnp.asarray(C.pack_rows(idx, k)),
+                       "w_cb": cb,
+                       "w_layout": C.PackedLayout.make(v, d, k,
+                                                       order="row")},
+    }
+    for name, p in trees.items():
+        np.testing.assert_array_equal(
+            np.asarray(Q.qmatmul_t(p, "w", x)), want, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis fuzz: ragged shapes + non-pow2 K, all three layouts at once
+# ---------------------------------------------------------------------------
+
+def _qleaf_trees(idx, cb, k):
+    kd, n = idx.shape
+    dense = jnp.asarray(np.asarray(cb)[idx])
+    return dense, {
+        "dense": {"w": dense},
+        "uint8": {"w_idx": jnp.asarray(idx, jnp.uint8), "w_cb": cb},
+        "packed": {"w_pidx": jnp.asarray(C.pack_indices_2d(idx, k)),
+                   "w_cb": cb, "w_layout": C.PackedLayout.make(kd, n, k)},
+        "packed-row": {"w_pidx": jnp.asarray(C.pack_rows(idx, k)),
+                       "w_cb": cb,
+                       "w_layout": C.PackedLayout.make(kd, n, k,
+                                                       order="row")},
+    }
+
+
+if given is not None:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(2, 256), st.integers(1, 120), st.integers(1, 64),
+           st.integers(1, 5), st.integers(0, 10 ** 6))
+    def test_qleaf_layouts_fuzz(k, kd, n, m, seed):
+        """qmatmul / qmatmul_t / qembed agree bitwise across every storage
+        layout for ragged (kd, n) and arbitrary K ≤ 256 on the ref
+        backend (row-packed leaves take the dequant route for qmatmul)."""
+        rng = np.random.RandomState(seed)
+        idx = rng.randint(0, k, size=(kd, n))
+        cb = jnp.asarray(rng.randn(k), jnp.float32)
+        dense, trees = _qleaf_trees(idx, cb, k)
+
+        x = jnp.asarray(rng.randn(m, kd), jnp.float32)
+        want = np.asarray(x @ dense)
+        for name, p in trees.items():
+            np.testing.assert_array_equal(
+                np.asarray(Q.qmatmul(p, "w", x)), want, err_msg=name)
+
+        xt = jnp.asarray(rng.randn(m, n), jnp.float32)
+        want_t = np.asarray(xt @ dense.T)
+        for name, p in trees.items():
+            np.testing.assert_array_equal(
+                np.asarray(Q.qmatmul_t(p, "w", xt)), want_t, err_msg=name)
+
+        toks = jnp.asarray(rng.randint(0, kd, size=(2, 3)), jnp.int32)
+        want_e = np.asarray(dense)[np.asarray(toks)]
+        # "packed" (kd order) exercises the retained word-column fallback
+        for name in ("dense", "uint8", "packed", "packed-row"):
+            np.testing.assert_array_equal(
+                np.asarray(Q.qembed(trees[name], "w", toks)), want_e,
+                err_msg=name)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev.txt)")
+    def test_qleaf_layouts_fuzz():
+        pass

@@ -265,6 +265,71 @@ def test_lc_c_step_sharded_equals_local_8dev():
     assert res["w_c"] and res["cb"] and res["mu"]
 
 
+def test_adaptive_zero_sharded_c_step_8dev():
+    """PR-4 distributed item: adaptive_zero's pinned-zero centroid step
+    has a sharded primitive (adaptive_zero_kmeans_psum) — the plan-driven
+    shard-local C step walks the same (w_C, Θ) trajectory as the local
+    solver on an 8-device mesh, the zero centroid stays pinned exactly,
+    and the remaining fallback boundary is only divisibility (the 'tail'
+    leaf, 57 % 8 != 0, takes the local path and still matches)."""
+    res = run_sub("""
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.core import lc as lc_mod
+        from repro.core.schemes import make_scheme
+        from repro.dist.cstep import (histogram_quantiles, lc_c_step_sharded,
+                                      sharded_c_step)
+        mesh = jax.make_mesh((8,), ("model",))
+        scheme = make_scheme("adaptive_zero:4")
+        key = jax.random.PRNGKey(0)
+        params = {
+            "w": jax.random.normal(key, (64, 64)),            # divisible
+            "tail": jax.random.normal(key, (3, 19)),          # 57 % 8 != 0
+        }
+        qspec = lc_mod.default_qspec(params)
+        cfg = lc_mod.LCConfig(mu0=1e-2, mu_growth=1.5)
+        state = lc_mod.lc_init(key, params, scheme, qspec, cfg)
+        loc = lc_mod.c_step(params, state, scheme, qspec, cfg)
+        sh = lc_c_step_sharded(params, state, scheme=scheme, qspec=qspec,
+                               config=cfg, mesh=mesh, axis="model")
+        w_ok = all(
+            np.allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+            for a, b in zip(jax.tree_util.tree_leaves(loc.w_c),
+                            jax.tree_util.tree_leaves(sh.w_c)))
+        cb_ok = all(
+            np.allclose(np.asarray(loc.theta[p]["codebook"]),
+                        np.asarray(sh.theta[p]["codebook"]),
+                        rtol=1e-5, atol=1e-6)
+            for p in loc.theta)
+        pinned = all(0.0 in np.asarray(sh.theta[p]["codebook"])
+                     for p in sh.theta)
+        # first-C-step path (codebook=None): histogram warm start + pin,
+        # equal to the identical local pipeline on the same mesh
+        w8 = jax.random.normal(jax.random.fold_in(key, 9), (8192,))
+        @partial(shard_map, mesh=mesh, in_specs=(P("model"),),
+                 out_specs=(P("model"), P()), check_rep=False)
+        def first_c(ws):
+            q, th = sharded_c_step(scheme, ws, "model")
+            return q, th["codebook"]
+        q_d, cb_d = first_c(w8)
+        cb0 = histogram_quantiles(w8, 4, None)
+        cb0 = jnp.sort(cb0.at[jnp.argmin(jnp.abs(cb0))].set(0.0))
+        from repro.dist.cstep import adaptive_zero_kmeans_psum
+        cb_l, q_l = adaptive_zero_kmeans_psum(w8, cb0, 4, None,
+                                              scheme.iters_first)
+        first_ok = bool(np.allclose(np.asarray(cb_d), np.asarray(cb_l),
+                                    rtol=1e-5, atol=1e-6))
+        first_pinned = bool((np.asarray(cb_d) == 0.0).any())
+        print(json.dumps({"w_c": w_ok, "cb": cb_ok, "pinned": bool(pinned),
+                          "first": first_ok,
+                          "first_pinned": first_pinned}))
+    """)
+    assert res["w_c"] and res["cb"]
+    assert res["pinned"], "zero centroid must stay exactly pinned"
+    assert res["first"] and res["first_pinned"]
+
+
 def test_lctrainer_sharded_c_step_plan_flag_1dev():
     """Smoke-test the plan flag end to end on a 1-device mesh (in-process:
     jax sees one CPU device here): CompressionPlan(sharded_c_step=True) →

@@ -1,0 +1,90 @@
+"""Golden-artifact regression: the committed fixtures from both prior
+artifact generations (tests/fixtures/, scripts/make_golden_fixtures.py)
+must keep loading and serving bit-exactly.
+
+* ``pr2_mlp_only`` — PR-2-era serving: MLP-only coverage
+  (``quant_names=MLP_LEGACY``) over a tied GQA stack at K=4;
+* ``pr3_full``     — PR-3 full-model coverage over the mixed
+  gqa+moe+ssm stack at K=16.
+
+Two layers of protection: the stored golden logits are an *allclose*
+drift guard (a format change that corrupts decode shows up immediately),
+and the dense / uint8 / packed serving layouts of the loaded artifact
+must stay **bitwise** identical (the differential invariant — run
+through the same helpers as test_differential.py).
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import (MLP_LEGACY, assert_routes_agree, assert_trees_equal,
+                     mixed_cfg, serving_layouts, tiny_cfg)
+from repro.core import PackedModel
+from repro.models.transformer import forward
+
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "fixtures")
+
+
+def _load(name):
+    d = os.path.join(FIXTURES, name)
+    pm = PackedModel.load(d)
+    g = np.load(os.path.join(d, "golden.npz"))
+    return pm, jnp.asarray(g["tokens"]), g["logits"]
+
+
+def test_pr2_mlp_only_artifact_load_decode_serve():
+    pm, toks, golden = _load("pr2_mlp_only")
+    cfg = tiny_cfg(tie=True)
+    assert pm.k == 4
+    dense = pm.decode()
+    ld = forward(dense, cfg, toks)
+    np.testing.assert_allclose(np.asarray(ld), golden, rtol=1e-5,
+                               atol=1e-5)
+    # PR-2-era coverage: MLP leaves quantized, everything else dense —
+    # both quantized layouts serve bit-exactly vs the dense decode.
+    for packed_flag in (False, True):
+        sp = pm.serving_params(quant_names=MLP_LEGACY, packed=packed_flag)
+        assert "embed_tok" in sp            # non-MLP leaves decoded dense
+        assert_trees_equal(ld, forward(sp, cfg, toks),
+                           context=f"packed={packed_flag}")
+
+
+def test_pr3_full_coverage_artifact_load_decode_serve():
+    pm, toks, golden = _load("pr3_full")
+    cfg = mixed_cfg(tie=False)
+    assert pm.k == 16
+    dense = pm.decode()
+    ld = forward(dense, cfg, toks)
+    np.testing.assert_allclose(np.asarray(ld), golden, rtol=1e-5,
+                               atol=1e-5)
+    # full-model coverage across all three layouts, forward + prefill +
+    # decode — logits and caches bitwise
+    layouts = serving_layouts(pm)
+    assert "embed_tok_pidx" in layouts["packed"]
+    assert layouts["packed"]["embed_tok_layout"].order == "row"
+    assert_routes_agree(cfg, layouts, toks, decode_steps=2)
+
+
+def test_packed_report_runs_on_fixture(capsys):
+    """launch/report.py --packed must render the whole coverage table —
+    including dense (policy-excluded) leaves, which carry route=None
+    (regression: the B/weight+route columns once crashed on them)."""
+    from repro.launch.report import packed_report
+    packed_report(os.path.join(FIXTURES, "pr3_full"))
+    out = capsys.readouterr().out
+    assert "Leaf coverage" in out
+    assert "qembed+qmatmul_t (pack_rows)" in out
+    assert "policy exclude" in out              # dense rows rendered too
+
+
+def test_fixture_manifests_are_version_1():
+    """The on-disk format contract both generations share."""
+    import json
+    for name in ("pr2_mlp_only", "pr3_full"):
+        with open(os.path.join(FIXTURES, name, "manifest.json")) as f:
+            m = json.load(f)
+        assert m["version"] == 1
+        assert m["packed"] and "scheme" in m

@@ -1,9 +1,12 @@
-"""Bit-packed serve-path correctness: pack_indices_2d → in-kernel unpack
-is bit-exact, and packed_codebook_matmul (interpret mode) matches the
-dense-gather oracle for bits ∈ {1, 2, 4, 8}, non-pow2 K, and ragged
-M/Kd/N tails.  Deterministic sweeps always run; hypothesis fuzzing skips
-when hypothesis is not installed (``pip install -r requirements-dev.txt``),
-like test_schemes_property.py."""
+"""Bit-packed serve-path correctness: pack_indices_2d / pack_rows →
+in-kernel unpack is bit-exact, and the three packed kernels
+(packed_codebook_matmul, packed_codebook_matmul_t, quantized_gather —
+interpret mode) match the dense-gather oracle for bits ∈ {1, 2, 4, 8},
+non-pow2 K, and ragged M/Kd/N tails.  Deterministic sweeps always run;
+hypothesis fuzzing skips when hypothesis is not installed (``pip install
+-r requirements-dev.txt``), like test_schemes_property.py.  Tests marked
+``tpu`` compile the same kernels with Mosaic and only run on a real TPU
+backend."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -95,6 +98,80 @@ def test_uint8_kernel_lut_matches_onehot():
                                rtol=1e-6, atol=1e-5)
 
 
+@pytest.mark.parametrize("k", K_SWEEP)
+@pytest.mark.parametrize("kd,n", [(32, 16), (300, 77)])
+def test_pack_rows_unpack_rows_roundtrip(k, kd, n):
+    idx, _, _ = _rand_case(k, kd, n, seed=kd + k)
+    words = C.pack_rows(idx, k)
+    assert words.shape == (kd, -(-n // (32 // C.bits_per_index(k))))
+    out = np.asarray(C.unpack_rows(jnp.asarray(words), n, k))
+    np.testing.assert_array_equal(out, idx)
+
+
+@pytest.mark.parametrize("k", K_SWEEP)
+@pytest.mark.parametrize("order", ["kd", "row"])
+@pytest.mark.parametrize("m,v,d", [(8, 32, 16), (5, 77, 50), (1, 257, 33)])
+def test_packed_matmul_t_matches_ref(m, v, d, k, order):
+    """interpret-mode transposed kernel == dequant-then-dot oracle to fp32
+    tolerance, both word orders, including ragged M/V/D tails."""
+    idx, _, cb = _rand_case(k, v, d, seed=m + v + d + k)
+    x = jnp.asarray(np.random.RandomState(m + d).randn(m, d), jnp.float32)
+    lanes = 32 // C.bits_per_index(k)
+    if order == "kd":
+        pidx = jnp.asarray(C.pack_indices_2d(idx, k))
+        bn, bk = 2 * lanes, 16
+    else:
+        pidx = jnp.asarray(C.pack_rows(idx, k))
+        bn, bk = 16, 2 * lanes
+    y1 = ops.packed_codebook_matmul_t(x, pidx, cb, v, order=order, bm=8,
+                                      bn=bn, bk=bk)
+    want = np.asarray(x) @ np.asarray(cb)[idx].T
+    np.testing.assert_allclose(np.asarray(y1), want, rtol=3e-5, atol=3e-4)
+    y2 = ref.packed_codebook_matmul_t_ref(x, pidx, cb, v, order=order)
+    np.testing.assert_allclose(np.asarray(y2), want, rtol=3e-5, atol=3e-4)
+
+
+@pytest.mark.parametrize("k", K_SWEEP)
+def test_gather_kernel_matches_dense_rows_bitwise(k):
+    """interpret-mode gather kernel == dense-table row gather, bitwise
+    (a pure gather — no arithmetic), ragged D included; lut == onehot."""
+    v, d = 50, 13
+    idx, _, cb = _rand_case(k, v, d, seed=k)
+    pidx = jnp.asarray(C.pack_rows(idx, k))
+    toks = jnp.asarray(np.random.RandomState(k).randint(0, v, size=(9,)),
+                       jnp.int32)
+    dense = np.asarray(cb)[idx]
+    for dequant in ("lut", "onehot"):
+        g = ops.quantized_gather(toks, pidx, cb, d, dequant=dequant)
+        np.testing.assert_array_equal(np.asarray(g),
+                                      dense[np.asarray(toks)])
+
+
+@pytest.mark.tpu
+@pytest.mark.skipif(jax.default_backend() != "tpu",
+                    reason="Mosaic compile path needs a real TPU")
+def test_packed_kernels_compile_on_tpu():
+    """The Mosaic (non-interpret) lowering of all three packed kernels —
+    the compiled counterpart of the interpret-mode sweeps above."""
+    k, v, d, m = 16, 256, 512, 8
+    idx, _, cb = _rand_case(k, v, d, seed=1)
+    x = jnp.asarray(np.random.RandomState(0).randn(m, d), jnp.float32)
+    dense = np.asarray(cb)[idx]
+    pidx_kd = jnp.asarray(C.pack_indices_2d(idx, k))
+    y = ops.packed_codebook_matmul(
+        jnp.asarray(np.random.RandomState(2).randn(m, v), jnp.float32),
+        pidx_kd, cb, bm=8, bn=128, bk=128, interpret=False)
+    assert y.shape == (m, d)
+    pidx_r = jnp.asarray(C.pack_rows(idx, k))
+    y_t = ops.packed_codebook_matmul_t(x, pidx_r, cb, v, order="row", bm=8,
+                                       bn=128, bk=128, interpret=False)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(x) @ dense.T,
+                               rtol=3e-5, atol=3e-4)
+    toks = jnp.asarray([0, 3, 255, 17], jnp.int32)
+    g = ops.quantized_gather(toks, pidx_r, cb, d, interpret=False)
+    np.testing.assert_array_equal(np.asarray(g), dense[np.asarray(toks)])
+
+
 def test_dispatch_packed_route_and_layout_validation():
     idx, pidx, cb = _rand_case(16, 128, 64, seed=11)
     x = jnp.asarray(np.random.RandomState(1).randn(8, 128), jnp.float32)
@@ -119,6 +196,11 @@ def test_packed_block_sizes_lane_aligned(monkeypatch):
             bm, bn, bk = dispatch.packed_block_sizes(m, kd, n, bits)
             assert bk % (32 // bits) == 0, (m, kd, n, bits, bk)
             assert bm > 0 and bn > 0
+            # transposed route: the lane-packed axis depends on the order
+            bm, bn, bk = dispatch.packed_block_sizes_t(m, kd, n, bits, "kd")
+            assert bn % (32 // bits) == 0, (m, kd, n, bits, bn)
+            bm, bn, bk = dispatch.packed_block_sizes_t(m, kd, n, bits, "row")
+            assert bk % (32 // bits) == 0, (m, kd, n, bits, bk)
     monkeypatch.setenv("REPRO_PACKED_BLOCKS", "16,64,128")
     assert dispatch.packed_block_sizes(7, 99, 13, 4) == (16, 64, 128)
 

@@ -11,50 +11,21 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from helpers import (MLP_LEGACY, assert_routes_agree, mixed_cfg as
+                     _mixed_cfg, pack_model as _pack, serving_layouts)
+from helpers import assert_trees_equal as _tree_equal
 from repro.core import CompressionPlan, PackedModel
 from repro.core import compression as C
 from repro.kernels import dispatch
 from repro.models import layers as L
 from repro.models import qleaf as Q
-from repro.models.transformer import (LayerKind, ModelConfig, MoESpec,
-                                      SSMSpec, StackSpec, decode_step,
-                                      forward, init_params, prefill)
-
-MLP_LEGACY = ("w_in", "w_gate", "w_out")
-
-
-def _mixed_cfg(tie: bool) -> ModelConfig:
-    """Tiny mixed stack: gqa+dense-MLP, ssm (no MLP), gqa+MoE — every
-    mixer/MLP kind the full-model qleaf layout must cover on CPU."""
-    return ModelConfig(
-        name="mixed-qleaf", family="hybrid", d_model=48, n_heads=4, n_kv=2,
-        head_dim=12, d_ff=96, vocab=160,
-        stacks=(StackSpec(pattern=(LayerKind("gqa", "dense"),
-                                   LayerKind("ssm", "none")), groups=2),
-                StackSpec(pattern=(LayerKind("gqa", "moe"),), groups=1)),
-        tie_embeddings=tie,
-        moe=MoESpec(n_experts=4, top_k=2, n_shared=1, d_ff_expert=24,
-                    capacity_factor=4.0),
-        ssm=SSMSpec(d_inner=96, head_p=16, state_n=12, conv_w=4, chunk=8),
-        q_chunk=8, kv_chunk=8, remat=False)
-
-
-def _pack(params, k):
-    plan = CompressionPlan.parse(f"adaptive:{k}")
-    qspec = plan.build_qspec(params)
-    state = plan.init(jax.random.PRNGKey(1), params, qspec)
-    return plan.pack(params, state, qspec)
-
-
-def _tree_equal(a, b):
-    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
-    assert len(la) == len(lb)
-    for x, y in zip(la, lb):
-        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+from repro.models.transformer import (decode_step, forward, init_params,
+                                      prefill)
 
 
 # ---------------------------------------------------------------------------
-# End-to-end mixed-stack bit-exactness
+# End-to-end mixed-stack bit-exactness (via the differential harness —
+# tests/helpers.py; the K×dtype×mode matrix lives in test_differential.py)
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("k,tie", [(2, True), (16, False)])
@@ -62,35 +33,15 @@ def test_mixed_stack_packed_serving_bit_exact(k, tie):
     cfg = _mixed_cfg(tie)
     params = init_params(jax.random.PRNGKey(0), cfg)
     packed = _pack(params, k)
-    sp = packed.serving_params(packed=True)    # bit-packed, full coverage
-    up = packed.serving_params(packed=False)   # uint8 oracle
-    dense = packed.decode()
-
+    layouts = serving_layouts(packed)
     toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab)
 
-    # forward
-    ld = forward(dense, cfg, toks)
-    _tree_equal(ld, forward(sp, cfg, toks))
-    _tree_equal(ld, forward(up, cfg, toks))
-
-    # prefill: logits AND emitted caches bit-exact
-    l0d, cd = prefill(dense, cfg, toks, last_logits_only=True)
-    l0p, cp = prefill(sp, cfg, toks, last_logits_only=True)
-    _tree_equal(l0d, l0p)
-    _tree_equal(cd, cp)
-
-    # decode_step: three greedy steps, logits + caches stay bit-exact
-    tok = jnp.argmax(l0d[:, -1], -1)[:, None].astype(jnp.int32)
-    for t in range(3):
-        pos = jnp.asarray(16 + t, jnp.int32)
-        ldd, cd = decode_step(dense, cfg, cd, tok, pos)
-        lpp, cp = decode_step(sp, cfg, cp, tok, pos)
-        _tree_equal(ldd, lpp)
-        _tree_equal(cd, cp)
-        tok = jnp.argmax(ldd[:, -1], -1)[:, None].astype(jnp.int32)
+    # forward / prefill / decode: logits AND caches bit-exact across the
+    # dense, uint8-oracle and bit-packed layouts
+    assert_routes_agree(cfg, layouts, toks)
 
     # decode_params collapses the full packed tree back to the dense one
-    _tree_equal(dispatch.decode_params(sp), dense)
+    _tree_equal(dispatch.decode_params(layouts["packed"]), layouts["dense"])
 
 
 @pytest.mark.parametrize("k", [2, 16])
@@ -123,6 +74,12 @@ def test_full_model_leaf_coverage_and_byte_accounting(k):
     lay = moe_p["experts_w_in_layout"]
     assert lay.shape == (4, 48, 24) and lay.kd == 4 * 48 and lay.n == 24
 
+    # the gather-accessed embedding table is row-packed (pack_rows) so the
+    # fused gather + transposed-head kernels read bits/8 B/weight; every
+    # matmul operand keeps the pack_indices_2d ("kd") orientation.
+    assert sp["embed_tok_layout"].order == "row"
+    assert sp["head_w_layout"].order == "kd"
+
     bits = C.bits_per_index(k)
     flat = jax.tree_util.tree_flatten_with_path(sp)[0]
     n_pidx = 0
@@ -132,13 +89,13 @@ def test_full_model_leaf_coverage_and_byte_accounting(k):
             continue
         n_pidx += 1
         layout = _sibling(sp, path, "_layout")
-        words = -(-layout.kd // layout.lanes)
         assert leaf.dtype == jnp.uint32
-        assert leaf.shape[-2:] == (words, layout.n)
+        assert leaf.shape[-2:] == layout.word_shape
         # measured HBM index bytes/weight == bits_per_index(K)/8 exactly
-        # when lanes divide kd (all leaves here); ceil-padded otherwise.
-        per_group = words * layout.n * 4
-        if layout.kd % layout.lanes == 0:
+        # when lanes divide the packed axis; ceil-padded otherwise.
+        per_group = int(np.prod(layout.word_shape)) * 4
+        packed_axis = layout.kd if layout.order == "kd" else layout.n
+        if packed_axis % layout.lanes == 0:
             assert per_group * 8 == bits * layout.kd * layout.n
     assert n_pidx >= 15
 
@@ -161,20 +118,10 @@ def test_mla_and_rglru_packed_serving_bit_exact(arch):
     cfg = reduce_config(get_config(arch))
     params = init_params(jax.random.PRNGKey(0), cfg)
     packed = _pack(params, 16)
-    sp = packed.serving_params(packed=True)
-    dense = packed.decode()
-
+    layouts = serving_layouts(packed, which=("dense", "packed"))
     toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab)
-    l0d, cd = prefill(dense, cfg, toks, last_logits_only=True)
-    l0p, cp = prefill(sp, cfg, toks, last_logits_only=True)
-    _tree_equal(l0d, l0p)
-    tok = jnp.argmax(l0d[:, -1], -1)[:, None].astype(jnp.int32)
-    for t in range(2):
-        pos = jnp.asarray(16 + t, jnp.int32)
-        ldd, cd = decode_step(dense, cfg, cd, tok, pos)
-        lpp, cp = decode_step(sp, cfg, cp, tok, pos)
-        _tree_equal(ldd, lpp)
-        tok = jnp.argmax(ldd[:, -1], -1)[:, None].astype(jnp.int32)
+    assert_routes_agree(cfg, layouts, toks, modes=("prefill", "decode"),
+                        decode_steps=2)
 
 
 # ---------------------------------------------------------------------------
