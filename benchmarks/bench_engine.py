@@ -1,0 +1,149 @@
+"""Continuous-batching engine throughput vs the one-shot lockstep loop
+at **equal HBM budget** (same slot count, same KV capacity).
+
+Workload: R requests, equal prompts, *skewed* generation lengths — the
+regime continuous batching exists for.  The one-shot loop must serve the
+requests in fixed batches of ``n_slots`` and run each batch until its
+longest member finishes (early-finished rows keep burning decode steps);
+the engine refills a slot the step after it frees.
+
+Rows (``engine_throughput_*`` / ``one_shot_throughput_*``, consumed by
+tests/test_bench_accounting.py):
+
+* ``us_per_call``: wall time of serving the whole workload;
+* derived: useful tokens/s for engine and one-shot, the ratio, mean slot
+  occupancy, mean/peak page-pool utilization, and the HBM-budget line
+  (slots × pages × page_size KV tokens; weight layout + B/weight).
+
+CPU caveat (recorded in the row): the jnp reference decode gathers KV
+through the page table per layer, so the *per-step* engine cost exceeds
+the one-shot contiguous-cache step; the engine wins on workload wall
+time by keeping slots occupied.  ``REPRO_BENCH_FAST=1`` shrinks the
+workload (accounting strings unchanged in form).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CompressionPlan, compression
+from repro.engine import Engine, Request, greedy_generate
+from repro.models.transformer import (LayerKind, ModelConfig, MoESpec,
+                                      SSMSpec, StackSpec, init_params)
+
+FAST = bool(os.environ.get("REPRO_BENCH_FAST"))
+
+
+def _cfg() -> ModelConfig:
+    return ModelConfig(
+        name="bench-engine", family="hybrid", d_model=48, n_heads=4,
+        n_kv=2, head_dim=12, d_ff=96, vocab=160,
+        stacks=(StackSpec(pattern=(LayerKind("gqa", "dense"),
+                                   LayerKind("ssm", "none")), groups=2),
+                StackSpec(pattern=(LayerKind("gqa", "moe"),), groups=1)),
+        tie_embeddings=True,
+        moe=MoESpec(n_experts=4, top_k=2, n_shared=1, d_ff_expert=24,
+                    capacity_factor=4.0),
+        ssm=SSMSpec(d_inner=96, head_p=16, state_n=12, conv_w=4, chunk=8),
+        q_chunk=8, kv_chunk=8, remat=False)
+
+
+def _pack(params, k):
+    plan = CompressionPlan.parse(f"adaptive:{k}")
+    qspec = plan.build_qspec(params)
+    state = plan.init(jax.random.PRNGKey(1), params, qspec)
+    return plan.pack(params, state, qspec)
+
+
+def _workload(cfg, n_req, prompt_len, gen_max):
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(7), (n_req, prompt_len), 0, cfg.vocab))
+    # skewed gen lengths: a few long requests among many short ones
+    gens = [gen_max if r % 4 == 0 else max(gen_max // 4, 1)
+            for r in range(n_req)]
+    reqs = [Request(rid=r, prompt=prompts[r], max_new_tokens=gens[r])
+            for r in range(n_req)]
+    return prompts, gens, reqs
+
+
+def _one_shot_serve(params, cfg, prompts, gens, n_slots):
+    """Fixed batches of n_slots in arrival order; each batch decodes in
+    lockstep until its longest request finishes."""
+    useful = 0
+    for lo in range(0, len(gens), n_slots):
+        hi = min(lo + n_slots, len(gens))
+        batch_gen = max(gens[lo:hi])
+        toks, _ = greedy_generate(params, cfg,
+                                  jnp.asarray(prompts[lo:hi]), batch_gen)
+        jax.block_until_ready(toks)
+        useful += sum(gens[lo:hi])
+    return useful
+
+
+def _bench_cell(name, params, cfg, weight_note):
+    n_req = 6 if FAST else 16
+    prompt_len, gen_max = 16, (8 if FAST else 24)
+    n_slots, page_size = 4, 8
+    prompts, gens, reqs = _workload(cfg, n_req, prompt_len, gen_max)
+    max_seq = prompt_len + gen_max
+    pages_per_slot = -(-max_seq // page_size)
+    n_pages = n_slots * pages_per_slot          # == one-shot KV capacity
+
+    def engine_run():
+        eng = Engine(params, cfg, n_slots=n_slots, page_size=page_size,
+                     max_seq=max_seq, n_pages=n_pages,
+                     token_budget=n_slots + prompt_len)
+        outs = eng.run([Request(rid=r.rid, prompt=r.prompt,
+                                max_new_tokens=r.max_new_tokens)
+                        for r in reqs])
+        return eng, sum(len(v) for v in outs.values())
+
+    # warm the compile caches outside the timed region with the FULL
+    # workload on both paths (a ragged final one-shot batch would
+    # otherwise compile its [R mod slots]-row prefill inside the timer)
+    engine_run()
+    _one_shot_serve(params, cfg, prompts, gens, n_slots)
+
+    t0 = time.perf_counter()
+    eng, useful_e = engine_run()
+    dt_e = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    useful_o = _one_shot_serve(params, cfg, prompts, gens, n_slots)
+    dt_o = time.perf_counter() - t0
+
+    s = eng.stats.summary()
+    tps_e, tps_o = useful_e / dt_e, useful_o / dt_o
+    kv_tokens = n_pages * page_size
+    derived = (f"tok/s={tps_e:.1f} one_shot={tps_o:.1f} "
+               f"(x{tps_e / tps_o:.2f}); occupancy={s['slot_occupancy']:.2f} "
+               f"page_util={s['page_utilization']:.2f} "
+               f"peak={s['page_utilization_max']:.2f}; "
+               f"equal-HBM: slots={n_slots} pages={n_pages}x{page_size} "
+               f"({kv_tokens} KV tokens, == one-shot {n_slots}x{max_seq}); "
+               f"{weight_note}; R={n_req} gen {max(gens)}/{min(gens)} skew")
+    return (name, dt_e * 1e6, derived)
+
+
+def run():
+    rows = []
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rows.append(_bench_cell("engine_throughput_dense", params, cfg,
+                            "weights dense f32 (4 B/weight)"))
+    for k in (2, 16):
+        packed = _pack(params, k)
+        sp = packed.serving_params(packed=True)
+        bits = compression.bits_per_index(k)
+        rows.append(_bench_cell(
+            f"engine_throughput_K{k}_packed", sp, cfg,
+            f"weights bit-packed K={k} ({bits / 8:g} B/weight idx)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(map(str, row)))

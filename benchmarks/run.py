@@ -21,13 +21,15 @@ MODULES = [
     "benchmarks.bench_al_vs_qp",    # §5 AL-vs-QP + §4.2 fn.2 prune+quant
     "benchmarks.bench_cstep",       # systems: C-step throughput, fig. 10
     "benchmarks.bench_kernels",     # systems: kernel micro
+    "benchmarks.bench_engine",      # systems: continuous-batching serving
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="run modules whose name contains this substring")
+                    help="run modules whose name contains one of these "
+                         "comma-separated substrings")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON "
                          "(name → us_per_call + derived)")
@@ -36,8 +38,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     results = {}
     failures = 0
+    only = args.only.split(",") if args.only else None
     for modname in MODULES:
-        if args.only and args.only not in modname:
+        if only and not any(tok and tok in modname for tok in only):
             continue
         try:
             mod = importlib.import_module(modname)

@@ -1,0 +1,62 @@
+"""CI smoke: the continuous-batching engine serves the FULL packed
+mixed stack (attention + MLP + MoE + SSM) with staggered admission and
+out-of-order completion, and every request's greedy token stream equals
+the one-shot lockstep loop's.  Run by scripts/verify.sh.
+
+    PYTHONPATH=src python scripts/smoke_engine.py
+"""
+import jax
+import numpy as np
+
+from repro.core import CompressionPlan
+from repro.engine import Engine, Request, greedy_generate
+from repro.models.transformer import (LayerKind, ModelConfig, MoESpec,
+                                      SSMSpec, StackSpec, init_params)
+
+K = 16
+PROMPT, GEN = 16, 6
+N_REQ, SLOTS = 5, 2
+
+
+def main():
+    cfg = ModelConfig(
+        name="engine-smoke", family="hybrid", d_model=48, n_heads=4,
+        n_kv=2, head_dim=12, d_ff=96, vocab=160,
+        stacks=(StackSpec(pattern=(LayerKind("gqa", "dense"),
+                                   LayerKind("ssm", "none")), groups=2),
+                StackSpec(pattern=(LayerKind("gqa", "moe"),), groups=1)),
+        tie_embeddings=True,
+        moe=MoESpec(n_experts=4, top_k=2, n_shared=1, d_ff_expert=24,
+                    capacity_factor=4.0),
+        ssm=SSMSpec(d_inner=96, head_p=16, state_n=12, conv_w=4, chunk=8),
+        q_chunk=8, kv_chunk=8, remat=False)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    plan = CompressionPlan.parse(f"adaptive:{K}")
+    qspec = plan.build_qspec(params)
+    state = plan.init(jax.random.PRNGKey(1), params, qspec)
+    sp = plan.pack(params, state, qspec).serving_params(packed=True)
+
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (N_REQ, PROMPT), 0,
+                                 cfg.vocab)
+    oracle = np.asarray(greedy_generate(sp, cfg, prompts, GEN)[0])
+
+    gens = [GEN, 2, GEN - 1, 3, GEN]          # out-of-order completion
+    reqs = [Request(rid=r, prompt=np.asarray(prompts[r]),
+                    max_new_tokens=gens[r]) for r in range(N_REQ)]
+    eng = Engine(sp, cfg, n_slots=SLOTS, page_size=8,
+                 max_seq=PROMPT + GEN, token_budget=SLOTS + PROMPT)
+    outs = eng.run(reqs)
+    for r in range(N_REQ):
+        np.testing.assert_array_equal(
+            outs[r], oracle[r][:gens[r]],
+            err_msg=f"request {r}: engine stream != one-shot stream")
+    s = eng.stats.summary()
+    print(f"engine smoke: {N_REQ} staggered requests over {SLOTS} slots, "
+          f"packed K={K} — all greedy streams == one-shot "
+          f"({s['generated_tokens']} tokens, {s['steps']} steps, "
+          f"occupancy {s['slot_occupancy']:.2f}, page util peak "
+          f"{s['page_utilization_max']:.2f}) — OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,9 +10,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CompressionPlan
+from repro.engine import greedy_generate
 from repro.models.transformer import (LayerKind, ModelConfig, MoESpec,
-                                      SSMSpec, StackSpec, decode_step,
-                                      init_params, prefill)
+                                      SSMSpec, StackSpec, init_params)
 
 K = 16
 PROMPT, GEN = 16, 4
@@ -48,32 +48,16 @@ def main():
     toks = jax.random.randint(jax.random.PRNGKey(2), (2, PROMPT), 0,
                               cfg.vocab)
 
-    def serve(p):
-        logits0, caches = prefill(p, cfg, toks, last_logits_only=True)
-
-        def grow(leaf):
-            if leaf.ndim >= 3 and leaf.shape[2] == PROMPT:
-                pad = [(0, 0)] * leaf.ndim
-                pad[2] = (0, GEN)
-                return jnp.pad(leaf, pad)
-            return leaf
-
-        caches = jax.tree_util.tree_map(grow, caches)
-        tok = jnp.argmax(logits0[:, -1], -1)[:, None].astype(jnp.int32)
-        outs = [logits0]
-        for t in range(GEN - 1):
-            lg, caches = decode_step(p, cfg, caches, tok,
-                                     jnp.asarray(PROMPT + t, jnp.int32))
-            tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
-            outs.append(lg)
-        return jnp.concatenate(outs, axis=1)
-
-    lp, ld = serve(sp), serve(dense)
+    # the shared one-shot greedy loop (repro.engine.oneshot) — also the
+    # continuous-batching engine's differential oracle
+    tp, lp = greedy_generate(sp, cfg, toks, GEN, collect_logits=True)
+    td, ld = greedy_generate(dense, cfg, toks, GEN, collect_logits=True)
     err = float(jnp.max(jnp.abs(lp - ld)))
     assert np.allclose(np.asarray(lp), np.asarray(ld), rtol=1e-5,
                        atol=1e-5), f"packed vs dense logits differ: {err}"
+    np.testing.assert_array_equal(np.asarray(tp), np.asarray(td))
     print(f"packed vs dense (prefill + {GEN}-step decode): "
-          f"max |dlogits| = {err:.2e} — OK")
+          f"max |dlogits| = {err:.2e}, identical greedy tokens — OK")
 
 
 if __name__ == "__main__":

@@ -39,7 +39,13 @@ fi
 # vs dense logits allclose (bit-exact on the CPU ref backend).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/smoke_serve_packed.py
 
-# Kernel-bench smoke (serve-path byte accounting + perf trajectory): the
-# same CSV/JSON CI uploads as an artifact (BENCH_kernels.{csv,json}).
+# Continuous-batching engine smoke: staggered admission + out-of-order
+# completion over the packed mixed stack, every greedy stream equal to
+# the one-shot loop's (the full matrix lives in tests/test_engine.py).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/smoke_engine.py
+
+# Kernel + engine bench smoke (serve-path byte accounting, engine
+# throughput rows, perf trajectory): the same CSV/JSON CI uploads as an
+# artifact (BENCH_kernels.{csv,json}).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
-    --only kernels --json BENCH_kernels.json | tee BENCH_kernels.csv
+    --only kernels,engine --json BENCH_kernels.json | tee BENCH_kernels.csv

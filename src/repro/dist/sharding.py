@@ -120,6 +120,47 @@ def batch_shardings(batch: PyTree, mesh: Mesh) -> PyTree:
     return jax.tree_util.tree_map(rule, batch)
 
 
+def engine_cache_shardings(caches: PyTree, mesh: Mesh, *, n_slots: int,
+                           n_pages: Optional[int] = None) -> PyTree:
+    """Shardings for the engine's paged/slot caches (``init_paged_cache``).
+
+    Two leaf families, told apart by the second axis:
+
+    * page pools (``[G, n_pages + 1, page, ...]``) — the page axis
+      **replicates** over the data axes: any slot's page-table entry may
+      point at any physical page, so pages cannot be partitioned by
+      batch.  The kv-head axis of 5-D pools shards over ``model`` (the
+      head's pages live with its projection shard); MLA latent pools
+      (4-D) replicate;
+    * per-slot state (``shape[1] == n_slots``: SSM/RG-LRU state, conv
+      tails, sliding-window ring buffers) — the slot axis shards over
+      the data axes exactly like a decode batch, and 5-D KV-style leaves
+      keep their kv-head axis on ``model``.
+
+    Pass ``n_pages`` so the pool check wins when ``n_pages + 1 ==
+    n_slots`` (an oversubscribed pool could otherwise be mistaken for
+    slot state and have its pages data-sharded; replication is the
+    always-correct fallback).
+    """
+    daxes = batch_axes(mesh)
+    dsize = _axis_size(mesh, daxes)
+    model = mesh.shape.get("model", 1) if "model" in mesh.axis_names else 1
+
+    def rule(leaf):
+        parts: list = [None] * leaf.ndim
+        is_pool = (n_pages is not None and leaf.ndim >= 3
+                   and leaf.shape[1] == n_pages + 1)
+        is_slot = (not is_pool and leaf.ndim >= 2
+                   and leaf.shape[1] == n_slots)
+        if is_slot and dsize > 1 and n_slots % dsize == 0:
+            parts[1] = daxes
+        if leaf.ndim >= 5 and model > 1 and leaf.shape[3] % model == 0:
+            parts[3] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map(rule, caches)
+
+
 def cache_shardings(caches: PyTree, mesh: Mesh) -> PyTree:
     """Decode/prefill cache shardings.  Stacked cache leaves are
     [G, B, ...]: batch over the data axes; for KV-style leaves

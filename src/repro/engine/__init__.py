@@ -1,0 +1,26 @@
+"""Continuous-batching serving engine over the packed qleaf model.
+
+The freed HBM of the eq.-14 packed layout is cashed in as serving
+capacity: a fixed set of batch slots decodes in lockstep from a paged KV
+cache while a scheduler admits queued requests into slots as they free —
+no recompile on admission, short requests' pages immediately reusable by
+queued ones.
+
+* :mod:`repro.engine.scheduler` — request queue + slot scheduler;
+* :mod:`repro.engine.kvcache`   — fixed-size page pool + per-slot tables;
+* :mod:`repro.engine.sampling`  — per-slot greedy / temperature / top-k;
+* :mod:`repro.engine.engine`    — the step loop (chunked prefill +
+  decode under a per-step token budget);
+* :mod:`repro.engine.oneshot`   — the lockstep one-shot greedy loop, the
+  engine's reference oracle (formerly duplicated in launch/serve.py and
+  scripts/smoke_serve_packed.py).
+"""
+from repro.engine.engine import Engine, EngineStats
+from repro.engine.kvcache import PagePool
+from repro.engine.oneshot import greedy_generate, truncate_at_eos
+from repro.engine.sampling import sample_tokens, slot_key
+from repro.engine.scheduler import Request, SlotScheduler
+
+__all__ = ["Engine", "EngineStats", "PagePool", "Request", "SlotScheduler",
+           "greedy_generate", "truncate_at_eos", "sample_tokens",
+           "slot_key"]

@@ -1,0 +1,360 @@
+"""The continuous-batching step loop.
+
+Each :meth:`Engine.step` mixes, under a per-step token budget:
+
+1. **decode** — one token for every running slot, fused into a single
+   ``decode_step_slots`` call (fixed shapes: dead slots are masked, so
+   admission/eviction never recompiles);
+2. **admission** — queued requests move into free slots once their
+   prompt's pages can be reserved from the pool;
+3. **chunked prefill** — admitted prompts consume leftover budget in
+   chunks across steps; when a prompt is fully scheduled, one batch-1
+   ``prefill`` call runs and its KV is scattered into the slot's pages.
+   (The compute is a single full-prompt call — the same call the
+   one-shot oracle makes — so engine token streams are exactly the
+   one-shot streams; the budget governs *scheduling*, i.e. how much
+   prompt work each step admits next to ongoing decodes.)
+
+A finished slot's pages return to the pool immediately (a queued short
+request reuses a long one's pages without waiting for the batch).  If
+every running slot is page-starved and nothing else can progress, the
+youngest stalled request is preempted back to the queue head and
+restarts from scratch — deterministic sampling keys make the replayed
+stream identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import sampling
+from repro.engine.kvcache import PagePool
+from repro.engine.oneshot import jit_prefill
+from repro.engine.scheduler import Request, SlotScheduler
+from repro.models.transformer import (ModelConfig, decode_step_slots,
+                                      init_paged_cache,
+                                      write_prefill_to_slot)
+
+
+def _decode_and_sample(params, cfg, caches, page_table, tokens_t, pos,
+                       alive, temps, top_ks, keys):
+    """One fused device call per engine step: decode + per-slot sample."""
+    logits, caches = decode_step_slots(params, cfg, caches, page_table,
+                                       tokens_t, pos, alive)
+    nxt = sampling.sample_tokens(logits[:, 0], temps, top_ks, keys)
+    return nxt, caches
+
+
+# module-level jits shared by every Engine instance: constructing an
+# engine (or several, as the bench does) never recompiles a step that a
+# previous instance with the same config/shapes already compiled.
+# Prefill is oneshot.jit_prefill — one cache for the oracle AND the
+# engine (their prefill calls must be the same computation anyway for
+# stream parity).
+_DECODE = jax.jit(_decode_and_sample, static_argnums=1)
+_SAMPLE = jax.jit(sampling.sample_tokens)
+# slot stays traced (it is only an index), so admitting into slot 63
+# reuses slot 0's compiled scatter
+_COMMIT = jax.jit(write_prefill_to_slot, static_argnums=(0, 5))
+
+
+def _activation_dtype(params):
+    """The model's residual-stream dtype, read off the embedding leaf in
+    any serving layout (dense table, or the codebook / layout metadata
+    of the quantized layouts — both carry the original leaf dtype)."""
+    if "embed_tok" in params:
+        return params["embed_tok"].dtype
+    if "embed_tok_layout" in params:
+        return jnp.dtype(params["embed_tok_layout"].dtype)
+    if "embed_tok_cb" in params:
+        return params["embed_tok_cb"].dtype
+    return jnp.float32
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    decode_tokens: int = 0
+    prefill_tokens: int = 0        # prompt tokens scheduled (chunked)
+    prefill_calls: int = 0
+    admitted: int = 0
+    finished: int = 0
+    delivered_tokens: int = 0      # tokens in finished outputs (excludes
+    #                                work discarded by preemption)
+    stall_events: int = 0
+    preemptions: int = 0
+    occupancy_sum: float = 0.0
+    page_util_sum: float = 0.0
+    page_util_max: float = 0.0
+    wall_s: float = 0.0
+
+    @property
+    def generated_tokens(self) -> int:
+        """Tokens *computed* (every prefill call emits the request's
+        first token) — exceeds delivered_tokens when preemptions
+        discarded work."""
+        return self.decode_tokens + self.prefill_calls
+
+    def summary(self) -> dict:
+        steps = max(self.steps, 1)
+        wall = max(self.wall_s, 1e-9)
+        return {
+            "steps": self.steps,
+            "generated_tokens": self.generated_tokens,
+            "delivered_tokens": self.delivered_tokens,
+            "prefill_tokens": self.prefill_tokens,
+            "tokens_per_s": self.delivered_tokens / wall,
+            "slot_occupancy": self.occupancy_sum / steps,
+            "page_utilization": self.page_util_sum / steps,
+            "page_utilization_max": self.page_util_max,
+            "finished": self.finished,
+            "preemptions": self.preemptions,
+            "stall_events": self.stall_events,
+            "wall_s": self.wall_s,
+        }
+
+
+class Engine:
+    """Continuous-batching serving engine over (possibly packed) params.
+
+    ``params`` may be any serving layout — dense, uint8-oracle, or the
+    bit-packed ``serving_params(packed=True)`` tree: every weight fetch
+    inside the step goes through ``repro.models.qleaf``.
+
+    HBM sizing: the page pool holds ``n_pages`` pages of ``page_size``
+    tokens for every global-attention layer; ``max_seq`` bounds one
+    request's prompt + generation.  Defaults give every slot its full
+    ``max_seq`` worth of pages (no contention); pass a smaller
+    ``n_pages`` to oversubscribe (short/long request mixes reuse pages).
+
+    ``dtype`` is the KV-pool element type and must match the model's
+    activation dtype (bf16 for bf16 models): the one-shot oracle's
+    caches inherit the prefill dtype, so a mismatched pool would round
+    differently and break stream parity.  The default infers it from
+    the params' embedding leaf (any serving layout).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
+                 page_size: int = 16, max_seq: int = 256,
+                 n_pages: Optional[int] = None,
+                 token_budget: Optional[int] = None,
+                 prefill_chunk: int = 64, dtype=None, mesh=None):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.page_size = page_size
+        max_pages_per_slot = -(-max_seq // page_size)
+        self.max_seq = max_pages_per_slot * page_size
+        if n_pages is None:
+            n_pages = n_slots * max_pages_per_slot
+        self.pool = PagePool(n_pages, page_size, n_slots, max_pages_per_slot)
+        self.sched = SlotScheduler(n_slots)
+        self.prefill_chunk = max(int(prefill_chunk), 1)
+        self.token_budget = (int(token_budget) if token_budget is not None
+                             else n_slots + self.prefill_chunk)
+        if self.token_budget < 1:
+            raise ValueError("token_budget must be >= 1")
+        if dtype is None:
+            dtype = _activation_dtype(params)
+        self.caches = init_paged_cache(cfg, n_slots, n_pages, page_size,
+                                       dtype)
+        if mesh is not None:
+            from repro.dist import sharding as shard_rules
+            sh = shard_rules.engine_cache_shardings(self.caches, mesh,
+                                                    n_slots=n_slots,
+                                                    n_pages=n_pages)
+            self.caches = jax.tree_util.tree_map(jax.device_put,
+                                                 self.caches, sh)
+        self._decode = _DECODE
+        self._prefill = jit_prefill
+        self._sample = _SAMPLE
+        self._zero_key = np.zeros((2,), np.uint32)
+        self._table_cache = (-1, None)     # (pool.version, device table)
+        self.outputs: Dict[int, np.ndarray] = {}
+        self.stats = EngineStats()
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        total = req.prompt_len + req.max_new_tokens
+        if total > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + max_new "
+                f"{req.max_new_tokens} exceeds max_seq {self.max_seq}")
+        if self.pool.pages_for_len(total) > self.pool.n_pages:
+            # would stall at the same position on every replay — reject
+            # up front instead of preempt-cycling until max_steps
+            raise ValueError(
+                f"request {req.rid}: needs {self.pool.pages_for_len(total)}"
+                f" pages to finish, pool has {self.pool.n_pages}")
+        self.sched.submit(req)
+
+    def decode_compile_count(self) -> int:
+        """Number of compiled decode-step variants in the shared jit
+        cache (one per distinct config/shape — admission/eviction within
+        one engine must never add another)."""
+        return int(self._decode._cache_size())
+
+    def run(self, requests: Optional[List[Request]] = None,
+            max_steps: int = 100_000) -> Dict[int, np.ndarray]:
+        """Drive steps until queue and slots drain; returns rid → tokens."""
+        for r in requests or ():
+            self.submit(r)
+        t0 = time.perf_counter()
+        while self.sched.has_work():
+            self.step()
+            if self.stats.steps > max_steps:
+                raise RuntimeError("engine exceeded max_steps")
+        self.stats.wall_s += time.perf_counter() - t0
+        return dict(self.outputs)
+
+    # -- one step -----------------------------------------------------------
+
+    def step(self) -> dict:
+        st = self.stats
+        st.steps += 1
+        st.occupancy_sum += self.sched.occupancy()
+        info = {"decoded": 0, "prefill_tokens": 0, "admitted": 0,
+                "finished": 0, "stalled": 0, "preempted": 0}
+        budget = self.token_budget
+
+        # 1) decode every running slot whose next page is available
+        running = self.sched.running_ids()
+        ready, stalled = [], []
+        for i in running:
+            s = self.sched.slots[i]
+            (ready if self.pool.ensure(i, s.write_pos)
+             else stalled).append(i)
+        if stalled:
+            st.stall_events += len(stalled)
+            info["stalled"] = len(stalled)
+        if ready:
+            self._decode_ready(ready, info)
+            budget -= len(ready)
+            st.decode_tokens += len(ready)
+
+        # 2) admit queued requests into free slots (reserve prompt pages)
+        for i in self.sched.free_ids():
+            if not self.sched.queue:
+                break
+            req = self.sched.queue[0]
+            if not self.pool.alloc(i, self.pool.pages_for_len(
+                    req.prompt_len)):
+                break
+            self.sched.queue.popleft()
+            self.sched.admit(i, req)
+            st.admitted += 1
+            info["admitted"] += 1
+
+        # 3) chunked prefill under the leftover budget
+        for i in self.sched.prefilling_ids():
+            if budget <= 0:
+                break
+            s = self.sched.slots[i]
+            chunk = min(budget, self.prefill_chunk,
+                        s.req.prompt_len - s.prefill_progress)
+            s.prefill_progress += chunk
+            budget -= chunk
+            st.prefill_tokens += chunk
+            info["prefill_tokens"] += chunk
+            if s.prefill_progress >= s.req.prompt_len:
+                self._commit_prefill(i, s)
+                if s.finished():
+                    self._finish(i, info)
+
+        util = self.pool.utilization()
+        st.page_util_sum += util
+        st.page_util_max = max(st.page_util_max, util)
+
+        if not (info["decoded"] or info["prefill_tokens"]
+                or info["admitted"]):
+            self._resolve_no_progress(stalled, info)
+        return info
+
+    # -- internals ----------------------------------------------------------
+
+    def _page_table(self):
+        if self._table_cache[0] != self.pool.version:
+            self._table_cache = (self.pool.version,
+                                 jnp.asarray(self.pool.table))
+        return self._table_cache[1]
+
+    def _decode_ready(self, ready, info):
+        b = self.n_slots
+        tokens = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        alive = np.zeros((b,), bool)
+        temps = np.zeros((b,), np.float32)
+        top_ks = np.zeros((b,), np.int32)
+        keys = np.zeros((b, 2), np.uint32)
+        for i in ready:
+            s = self.sched.slots[i]
+            tokens[i, 0] = s.out[-1]
+            pos[i] = s.write_pos
+            alive[i] = True
+            temps[i] = s.req.temperature
+            top_ks[i] = s.req.top_k
+            keys[i] = (np.asarray(sampling.slot_key(s.req.seed,
+                                                    s.n_generated))
+                       if s.req.temperature > 0 else self._zero_key)
+        nxt, self.caches = self._decode(
+            self.params, self.cfg, self.caches, self._page_table(),
+            jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(alive),
+            jnp.asarray(temps), jnp.asarray(top_ks), jnp.asarray(keys))
+        nxt = np.asarray(nxt)
+        for i in ready:
+            s = self.sched.slots[i]
+            s.out.append(int(nxt[i]))
+            info["decoded"] += 1
+            if s.finished():
+                self._finish(i, info)
+
+    def _commit_prefill(self, i, s):
+        """The bit-exact full-prompt prefill call + page scatter."""
+        prompt = jnp.asarray(s.req.prompt[None, :], jnp.int32)
+        logits, pcaches = self._prefill(self.params, self.cfg, prompt,
+                                        last_logits_only=True)
+        pages = jnp.asarray(self.pool.pages_of(i), jnp.int32)
+        self.caches = _COMMIT(self.cfg, self.caches, pcaches, i, pages,
+                              self.page_size)
+        key = (np.asarray(sampling.slot_key(s.req.seed, 0))
+               if s.req.temperature > 0 else self._zero_key)
+        tok = np.asarray(self._sample(
+            logits[:, -1], jnp.asarray([s.req.temperature], jnp.float32),
+            jnp.asarray([s.req.top_k], jnp.int32),
+            jnp.asarray(key[None, :])))
+        s.out.append(int(tok[0]))
+        s.prefilled = True
+        self.stats.prefill_calls += 1
+
+    def _finish(self, i, info):
+        s = self.sched.evict(i)
+        self.pool.free_slot(i)
+        self.outputs[s.req.rid] = np.asarray(s.out, np.int32)
+        self.stats.finished += 1
+        self.stats.delivered_tokens += len(s.out)
+        info["finished"] += 1
+
+    def _resolve_no_progress(self, stalled, info):
+        if stalled:
+            # every runnable slot is page-starved and no admission or
+            # prefill could proceed: preempt the youngest, replay later
+            j = max(stalled, key=lambda i: self.sched.slots[i].admit_seq)
+            s = self.sched.evict(j)
+            self.pool.free_slot(j)
+            # Request is immutable (progress lives on SlotState): the
+            # replay reuses it as-is and regenerates the same stream
+            self.sched.requeue_front(s.req)
+            self.stats.preemptions += 1
+            info["preempted"] = 1
+        elif self.sched.queue:
+            req = self.sched.queue[0]
+            raise RuntimeError(
+                f"page pool too small for request {req.rid}: prompt needs "
+                f"{self.pool.pages_for_len(req.prompt_len)} pages, pool has "
+                f"{self.pool.n_pages}")

@@ -1,0 +1,95 @@
+"""Paged KV-cache bookkeeping: a fixed pool of fixed-size pages with a
+per-slot page table.
+
+The device-side pools live in the model cache tree
+(``transformer.init_paged_cache``); this module owns the *host-side*
+allocation state: the free list, per-slot ownership, and the int32 page
+table the fused decode step consumes.  Physical page 0 is reserved as
+the **trash page** — dead slots' writes and unallocated table entries
+point at it, so the decode step's shapes never depend on which slots are
+live.  Freeing a finished slot returns its pages to the free list
+immediately (LIFO, so a queued request reuses the hottest pages first).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class PagePool:
+    """Host-side page allocator for ``n_slots`` batch slots.
+
+    Usable physical pages are 1..n_pages (0 is the trash page); each
+    slot may own at most ``max_pages_per_slot`` (== ceil(max_seq /
+    page_size)).
+    """
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 max_pages_per_slot: int):
+        if n_pages < 1:
+            raise ValueError("need at least one usable page")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.n_slots = n_slots
+        self.max_pages_per_slot = max_pages_per_slot
+        self._free = list(range(n_pages, 0, -1))     # LIFO reuse
+        self._owned = [[] for _ in range(n_slots)]
+        self.table = np.zeros((n_slots, max_pages_per_slot), np.int32)
+        self.version = 0          # bumped on any table change (host cache
+        #                           of the device-side table keys on it)
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def utilization(self) -> float:
+        return self.used_pages / max(self.n_pages, 1)
+
+    def pages_of(self, slot: int):
+        return list(self._owned[slot])
+
+    def pages_for_len(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    # -- alloc / free -------------------------------------------------------
+
+    def alloc(self, slot: int, n: int = 1) -> bool:
+        """Append ``n`` pages to ``slot``; all-or-nothing."""
+        if (len(self._free) < n
+                or len(self._owned[slot]) + n > self.max_pages_per_slot):
+            return False
+        for _ in range(n):
+            pg = self._free.pop()
+            self.table[slot, len(self._owned[slot])] = pg
+            self._owned[slot].append(pg)
+        self.version += 1
+        return True
+
+    def ensure(self, slot: int, pos: int) -> bool:
+        """Slot's pages cover logical position ``pos`` (alloc on demand).
+
+        Returns False when the pool is exhausted (the engine then masks
+        the slot for this step — a *stall*, resolved when another slot
+        frees pages or by preemption)."""
+        need = pos // self.page_size + 1
+        if need > self.max_pages_per_slot:
+            return False
+        while len(self._owned[slot]) < need:
+            if not self.alloc(slot, 1):
+                return False
+        return True
+
+    def free_slot(self, slot: int) -> int:
+        """Release every page of ``slot`` back to the pool."""
+        n = len(self._owned[slot])
+        while self._owned[slot]:
+            self._free.append(self._owned[slot].pop())
+        self.table[slot, :] = 0
+        if n:
+            self.version += 1
+        return n

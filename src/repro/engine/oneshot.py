@@ -1,0 +1,79 @@
+"""The one-shot lockstep greedy loop — the engine's reference oracle.
+
+This is the pre-engine serving path (a fixed batch, lockstep prefill,
+greedy decode until the longest request finishes) that used to be
+duplicated in ``launch/serve.py`` and ``scripts/smoke_serve_packed.py``.
+The continuous-batching engine must reproduce each request's greedy
+token stream from this loop exactly (``tests/test_engine.py``), so it
+lives here as the single shared implementation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import ModelConfig, decode_step, prefill
+
+Array = jax.Array
+
+# module-level jits: every greedy_generate call (and bench iteration)
+# shares one trace/compile cache per (config, shape) instead of
+# recompiling per invocation.  jit_prefill is also the engine's prefill
+# entry point — one cache for oracle and engine.
+jit_prefill = jax.jit(prefill, static_argnums=1,
+                      static_argnames=("last_logits_only",))
+_STEP = jax.jit(decode_step, static_argnums=1)
+
+
+def grow_caches(caches, prompt_len: int, gen_len: int):
+    """Pad prefill caches (capacity = prompt_len on the sequence axis) to
+    capacity prompt_len + gen_len for the decode loop."""
+    def grow(leaf):
+        if leaf.ndim >= 3 and leaf.shape[2] == prompt_len:
+            pad = [(0, 0)] * leaf.ndim
+            pad[2] = (0, gen_len)
+            return jnp.pad(leaf, pad)
+        return leaf
+
+    return jax.tree_util.tree_map(grow, caches)
+
+
+def greedy_generate(params, cfg: ModelConfig, prompts: Array, gen_len: int,
+                    collect_logits: bool = False
+                    ) -> Tuple[Array, Optional[Array]]:
+    """Lockstep greedy generation for a same-length prompt batch.
+
+    prompts [B, S] int32 → (tokens [B, gen_len] int32, and — when
+    ``collect_logits`` — the per-step last-position logits
+    [B, gen_len, V] f32).  Token 0 comes from the prefill logits; each
+    decode step feeds the previous token at position S + t.
+    """
+    b, prompt_len = prompts.shape
+    logits0, caches = jit_prefill(params, cfg, prompts,
+                                  last_logits_only=True)
+    caches = grow_caches(caches, prompt_len, gen_len)
+    tok = jnp.argmax(logits0[:, -1], -1)[:, None].astype(jnp.int32)
+    toks = [tok]
+    logs = [logits0[:, -1:]] if collect_logits else None
+    for t in range(gen_len - 1):
+        logits, caches = _STEP(params, cfg, caches, tok,
+                               jnp.asarray(prompt_len + t, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        toks.append(tok)
+        if collect_logits:
+            logs.append(logits[:, -1:])
+    tokens = jnp.concatenate(toks, axis=1)
+    return tokens, (jnp.concatenate(logs, axis=1) if collect_logits
+                    else None)
+
+
+def truncate_at_eos(tokens, eos_id: Optional[int]) -> np.ndarray:
+    """Cut one request's stream after the first EOS (inclusive)."""
+    tokens = np.asarray(tokens).reshape(-1)
+    if eos_id is None:
+        return tokens
+    hits = np.nonzero(tokens == eos_id)[0]
+    return tokens[:hits[0] + 1] if hits.size else tokens

@@ -1,0 +1,39 @@
+"""Per-slot sampling: greedy + temperature / top-k with per-request keys.
+
+A slot's next token depends only on (its logits row, its request's seed,
+its step index) — never on batch mates — so streams are reproducible
+across admission orders, slot assignments, and engine restarts.
+``temperature == 0`` rows take the exact ``argmax`` the one-shot oracle
+uses, keeping the engine-vs-one-shot differential bit-for-bit on greedy
+requests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def slot_key(seed: int, n_generated: int) -> Array:
+    """The sampling key for a request's ``n_generated``-th token."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), n_generated)
+
+
+def _sample_one(logits: Array, temp: Array, top_k: Array, key: Array):
+    v = logits.shape[-1]
+    t = jnp.maximum(temp, 1e-6)
+    k = jnp.where(top_k <= 0, v, jnp.clip(top_k, 1, v))
+    cutoff = jnp.take(jnp.sort(logits)[::-1], k - 1)
+    masked = jnp.where(logits >= cutoff, logits, -jnp.inf)
+    return jax.random.categorical(key, masked / t).astype(jnp.int32)
+
+
+def sample_tokens(logits: Array, temps: Array, top_ks: Array,
+                  keys: Array) -> Array:
+    """logits [B, V] f32; temps [B] (0 → greedy); top_ks [B] int32
+    (<= 0 → full vocab); keys [B, 2] uint32 (``slot_key`` data).
+    Returns [B] int32."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    sampled = jax.vmap(_sample_one)(logits, temps, top_ks, keys)
+    return jnp.where(temps <= 0.0, greedy, sampled)

@@ -1,11 +1,17 @@
-"""Serving launcher: batched prefill + decode on a mesh.
+"""Serving launcher: a thin client of the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --reduced --host-devices 4 --mesh 2x2 --batch 4
+        --reduced --host-devices 4 --mesh 2x2 --requests 8 --slots 4
 
-Loads (or initializes) params, shards them with the production rules,
-prefills a batch of prompts and runs a greedy decode loop — the same
-``decode_step`` the dry-run lowers for the decode_32k/long_500k cells.
+By default requests flow through ``repro.engine.Engine``: a request
+queue feeding a fixed set of batch slots, a paged KV cache (fixed-size
+pages + per-slot page table, finished requests' pages immediately
+reusable), chunked prefill mixed with decode under a per-step token
+budget, and per-slot sampling (greedy, or ``--temperature``/``--top-k``
+with per-request seeds).  ``--no-engine`` restores the pre-engine
+one-shot path — one fixed batch, lockstep prefill, greedy decode until
+the longest request finishes (``repro.engine.oneshot``, the engine's
+differential oracle).
 
 ``--packed <dir>`` serves straight from a PackedModel artifact (the
 output of ``launch.train --lc`` / ``CompressionPlan.pack``): **every**
@@ -15,14 +21,11 @@ through ``repro.models.qleaf`` → ``repro.kernels.dispatch`` (Mosaic
 codebook-matmul / dequant-on-gather on TPU, jnp reference on CPU).
 ``--serve-layout packed`` (default) keeps the bit-packed uint32 word
 operand HBM-resident (bits_per_index(K)/8 bytes/weight — the eq.-14
-footprint): matmul leaves in the ``pack_indices_2d`` layout (fused
-codebook matmul), the embedding table row-packed (``pack_rows``) so both
-the Mosaic dequant-on-gather and the fused transposed tied-LM-head
-kernel read bits/8 B/weight without ever inflating the dense [V, D]
-table.  ``--serve-layout uint8`` is the legacy 1 B/weight uint8-index
-layout kept as the fallback/oracle.  ``--serve-leaves mlp`` restricts
-coverage to the pre-qleaf MLP-only set (the PR-2 behaviour).  The
-arch/config must match the one the artifact was packed from.
+footprint); ``--serve-layout uint8`` is the legacy 1 B/weight oracle;
+``--serve-leaves mlp`` restricts coverage to the pre-qleaf MLP-only
+set.  The freed weight HBM is what the engine turns into serving
+capacity: more slots × longer pages on the same device (see README
+"Serving engine" for the sizing math).
 """
 import argparse
 import os
@@ -45,47 +48,14 @@ import numpy as np                            # noqa: E402
 
 from repro.configs import get_config, list_archs, reduce_config  # noqa: E402
 from repro.dist import sharding as shard_rules                   # noqa: E402
+from repro.engine import Engine, Request, greedy_generate        # noqa: E402
 from repro.launch.mesh import make_production_mesh               # noqa: E402
 from repro.models import sharding_ctx                            # noqa: E402
-from repro.models.transformer import (decode_step, init_params,  # noqa: E402
-                                      prefill)
+from repro.models.transformer import init_params                 # noqa: E402
 from repro.train import checkpoint as ckpt                       # noqa: E402
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list_archs())
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--mesh", default=None)
-    ap.add_argument("--host-devices", type=int, default=None)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen-len", type=int, default=16)
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--packed", default=None,
-                    help="PackedModel artifact dir: serve quantized")
-    ap.add_argument("--serve-layout", default="packed",
-                    choices=("packed", "uint8"),
-                    help="quantized HBM layout: bit-packed uint32 words "
-                         "(bits/8 B/weight) or legacy uint8 indices "
-                         "(1 B/weight oracle)")
-    ap.add_argument("--serve-leaves", default="all", choices=("all", "mlp"),
-                    help="which leaves serve quantized: the whole model "
-                         "(attention/embed/MoE/SSM/MLP) or the legacy "
-                         "MLP-only set")
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduce_config(cfg)
-    if args.mesh:
-        dims = tuple(int(x) for x in args.mesh.split("x"))
-        names = ("pod", "data", "model")[-len(dims):]
-        mesh = jax.make_mesh(dims, names)
-    else:
-        mesh = make_production_mesh()
-    sharding_ctx.set_policy(sharding_ctx.Policy(mesh, mode="tp"))
-
+def _load_params(args, cfg):
     if args.packed:
         from repro.core import PackedModel
         packed = PackedModel.load(args.packed)
@@ -111,41 +81,111 @@ def main():
               f"{args.serve_layout} layout: {idx_bytes:g} B/weight HBM "
               f"index traffic; {args.serve_leaves} leaves — "
               f"{n_q}/{len(cov)} param paths quantized{row_note})")
+        return params
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.ckpt_dir:
+        params, _, _ = ckpt.restore_checkpoint(args.ckpt_dir, like=params)
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--host-devices", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="one-shot batch size / engine slot count alias")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--packed", default=None,
+                    help="PackedModel artifact dir: serve quantized")
+    ap.add_argument("--serve-layout", default="packed",
+                    choices=("packed", "uint8"),
+                    help="quantized HBM layout: bit-packed uint32 words "
+                         "(bits/8 B/weight) or legacy uint8 indices "
+                         "(1 B/weight oracle)")
+    ap.add_argument("--serve-leaves", default="all", choices=("all", "mlp"),
+                    help="which leaves serve quantized: the whole model "
+                         "(attention/embed/MoE/SSM/MLP) or the legacy "
+                         "MLP-only set")
+    # engine knobs
+    ap.add_argument("--no-engine", action="store_true",
+                    help="one-shot lockstep loop (the engine's oracle)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="number of requests (default: --batch)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="engine batch slots (default: --batch)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size in tokens")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="page-pool size (default: slots × max pages)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-step token budget (decode + chunked prefill)")
+    ap.add_argument("--vary-gen", action="store_true",
+                    help="stagger request gen lengths (engine mode)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        names = ("pod", "data", "model")[-len(dims):]
+        mesh = jax.make_mesh(dims, names)
     else:
-        params = init_params(jax.random.PRNGKey(0), cfg)
-        if args.ckpt_dir:
-            params, _, _ = ckpt.restore_checkpoint(args.ckpt_dir, like=params)
+        mesh = make_production_mesh()
+    sharding_ctx.set_policy(sharding_ctx.Policy(mesh, mode="tp"))
+
+    params = _load_params(args, cfg)
     p_shard = shard_rules.param_shardings(params, mesh)
     params = jax.tree_util.tree_map(jax.device_put, params, p_shard)
 
     key = jax.random.PRNGKey(7)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+    n_req = args.requests if args.requests is not None else args.batch
+    prompts = jax.random.randint(key, (n_req, args.prompt_len), 0,
                                  cfg.vocab)
-    capacity = args.prompt_len + args.gen_len
 
+    if args.no_engine:
+        n_b = min(args.batch, n_req)
+        with mesh:
+            gen, _ = greedy_generate(params, cfg, prompts[:n_b],
+                                     args.gen_len)
+        for r in range(n_b):
+            print(f"req{r}: {np.asarray(gen)[r]}")
+        return
+
+    n_slots = args.slots if args.slots is not None else args.batch
+    rng = np.random.RandomState(args.seed)
+    reqs = []
+    for r in range(n_req):
+        gen_len = (int(rng.randint(max(args.gen_len // 4, 1),
+                                   args.gen_len + 1))
+                   if args.vary_gen else args.gen_len)
+        reqs.append(Request(rid=r, prompt=np.asarray(prompts[r]),
+                            max_new_tokens=gen_len,
+                            temperature=args.temperature,
+                            top_k=args.top_k, seed=args.seed + r))
     with mesh:
-        logits, caches = prefill(params, cfg, prompts,
-                                 last_logits_only=True)
-
-        def grow(leaf):
-            if leaf.ndim >= 3 and leaf.shape[2] == args.prompt_len:
-                pad = [(0, 0)] * leaf.ndim
-                pad[2] = (0, args.gen_len)
-                return jnp.pad(leaf, pad)
-            return leaf
-
-        caches = jax.tree_util.tree_map(grow, caches)
-        step = jax.jit(lambda c, t, p: decode_step(params, cfg, c, t, p))
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        out = [tok]
-        for t in range(args.gen_len - 1):
-            logits, caches = step(caches, tok,
-                                  jnp.asarray(args.prompt_len + t, jnp.int32))
-            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-            out.append(tok)
-        gen = np.asarray(jnp.concatenate(out, axis=1))
-    for r in range(args.batch):
-        print(f"req{r}: {gen[r]}")
+        eng = Engine(params, cfg, n_slots=n_slots,
+                     page_size=args.page_size,
+                     max_seq=args.prompt_len + args.gen_len,
+                     n_pages=args.pages, token_budget=args.token_budget,
+                     mesh=mesh)
+        outs = eng.run(reqs)
+    for r in sorted(outs):
+        print(f"req{r}: {outs[r]}")
+    s = eng.stats.summary()
+    print(f"engine: {s['delivered_tokens']} tokens in {s['steps']} steps "
+          f"({s['tokens_per_s']:.1f} tok/s, occupancy "
+          f"{s['slot_occupancy']:.2f}, page util {s['page_utilization']:.2f}"
+          f" peak {s['page_utilization_max']:.2f}, "
+          f"{s['preemptions']} preemptions, decode compiled "
+          f"{eng.decode_compile_count()}x)")
 
 
 if __name__ == "__main__":

@@ -307,10 +307,12 @@ def init_mla(key, d_model, n_heads, *, kv_lora, rope_dim, nope_dim, v_dim,
 
 
 def _mla_q(p, x, n_heads, nope_dim, rope_dim, positions, rope_theta):
+    """positions: broadcastable against [B, S] (e.g. [1, S] for the full
+    forward, [B, 1] for a per-slot decode step)."""
     b, s, _ = x.shape
     q = qmatmul(p, "wq", x).reshape(b, s, n_heads, nope_dim + rope_dim)
     q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
-    q_rope = apply_rope(q_rope, positions[None, :], rope_theta)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
     return q_nope, q_rope
 
 
@@ -319,7 +321,8 @@ def mla_forward(p, x, positions, *, n_heads, kv_lora, rope_dim, nope_dim,
     """Training/prefill: expand the latent KV and run standard attention."""
     from repro.models.layers import rms_norm
     b, s, _ = x.shape
-    q_nope, q_rope = _mla_q(p, x, n_heads, nope_dim, rope_dim, positions, rope_theta)
+    q_nope, q_rope = _mla_q(p, x, n_heads, nope_dim, rope_dim,
+                            positions[None, :], rope_theta)
     q_nope = constrain(q_nope, "batch", None, "heads", None)
     q_rope = constrain(q_rope, "batch", None, "heads", None)
     dkv = qmatmul(p, "w_dkv", x)
@@ -361,7 +364,8 @@ def mla_decode(p, x_t, cache: MLACache, pos, *, n_heads, kv_lora, rope_dim,
     from repro.models.layers import rms_norm
     b = x_t.shape[0]
     pos_arr = jnp.asarray(pos)[None]
-    q_nope, q_rope = _mla_q(p, x_t, n_heads, nope_dim, rope_dim, pos_arr, rope_theta)
+    q_nope, q_rope = _mla_q(p, x_t, n_heads, nope_dim, rope_dim,
+                            pos_arr[None, :], rope_theta)
     dkv = qmatmul(p, "w_dkv", x_t)
     c_kv_t = rms_norm(dkv[..., :kv_lora], p["kv_norm_scale"])
     k_rope_t = apply_rope(dkv[..., None, kv_lora:], pos_arr[None, :], rope_theta)[:, :, 0]
@@ -386,3 +390,172 @@ def mla_decode(p, x_t, cache: MLACache, pos, *, n_heads, kv_lora, rope_dim,
     w_uv = qweight(p, "w_uv").reshape(kv_lora, n_heads, v_dim)
     o = jnp.einsum("bqhl,lhd->bqhd", ctx, w_uv).reshape(b, 1, n_heads * v_dim)
     return qmatmul(p, "wo", o), MLACache(c_kv=ckv, k_rope=krope)
+
+
+# ---------------------------------------------------------------------------
+# Paged / slot-aware decode (continuous-batching engine)
+#
+# Global-attention layers store KV in a pool of fixed-size pages shared by
+# all batch slots; a per-slot page table maps logical position t to
+# physical cell (table[slot, t // page] , t % page).  Physical page 0 is
+# reserved as the trash page: dead slots (and unallocated logical pages)
+# point at it, so one fused decode step serves any admission/eviction
+# state without shape changes or recompiles.  Sliding-window layers keep
+# their constant-size per-slot ring buffer instead (capacity == window).
+# ---------------------------------------------------------------------------
+
+
+class PagedKVCache(NamedTuple):
+    k: Array          # [n_pages + 1, page, KV, hd]  (page 0 = trash)
+    v: Array
+
+
+class PagedMLACache(NamedTuple):
+    c_kv: Array       # [n_pages + 1, page, kv_lora]
+    k_rope: Array     # [n_pages + 1, page, rope_dim]
+
+
+def init_paged_kv_cache(n_pages, page_size, n_kv, head_dim, dtype):
+    z = jnp.zeros((n_pages + 1, page_size, n_kv, head_dim), dtype)
+    return PagedKVCache(k=z, v=z)
+
+
+def init_paged_mla_cache(n_pages, page_size, kv_lora, rope_dim, dtype):
+    return PagedMLACache(
+        c_kv=jnp.zeros((n_pages + 1, page_size, kv_lora), dtype),
+        k_rope=jnp.zeros((n_pages + 1, page_size, rope_dim), dtype))
+
+
+def _write_slot(pool: Array, page_table: Array, pos: Array, alive: Array,
+                new: Array, page_size: int) -> Array:
+    """Scatter one new entry per slot into its current page.
+
+    pool [P+1, page, ...]; page_table [B, max_pages]; pos/alive [B];
+    new [B, ...].  Dead (or page-starved) slots write the trash page.
+    """
+    b = new.shape[0]
+    npg = page_table.shape[1]
+    pg = jnp.clip(pos // page_size, 0, npg - 1)
+    phys = page_table[jnp.arange(b), pg]
+    phys = jnp.where(alive, phys, 0)
+    return pool.at[phys, pos % page_size].set(new.astype(pool.dtype),
+                                              mode="drop")
+
+
+def _gather_slots(pool: Array, page_table: Array) -> Array:
+    """Logical KV view per slot: [B, max_pages·page, ...]."""
+    b, npg = page_table.shape
+    g = pool[page_table]                       # [B, max_pages, page, ...]
+    return g.reshape((b, npg * pool.shape[1]) + pool.shape[2:])
+
+
+def _slot_attention(q, ck, cv, valid, *, n_heads, n_kv, head_dim,
+                    attn_softcap, scale):
+    """Masked decode attention over per-slot gathered KV.
+
+    q [B,1,H,hd]; ck/cv [B,cap,KV,hd]; valid [B,cap] bool."""
+    b = q.shape[0]
+    rep = n_heads // n_kv
+    qg = q.reshape(b, 1, n_kv, rep, head_dim)
+    logits = jnp.einsum("bqkrd,bskd->bkrqs", qg, ck,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, attn_softcap)
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    attn = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkrqs,bskd->bkrqd", attn.astype(cv.dtype), cv)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, 1, n_heads * head_dim)
+
+
+def gqa_decode_paged(p, x_t, cache: PagedKVCache, page_table, pos, alive, *,
+                     n_heads, n_kv, head_dim, page_size,
+                     attn_softcap=None, rope_theta=10000.0,
+                     query_scale=None):
+    """One-token GQA decode for a batch of engine slots.
+
+    x_t [B,1,D]; page_table [B, max_pages] int32; pos [B] int32 per-slot
+    write positions; alive [B] bool (dead slots: reads fully masked,
+    writes land on the trash page).
+    """
+    q, k, v = _qkv(p, x_t, n_heads, n_kv, head_dim)
+    posb = pos[:, None]
+    q = apply_rope(q, posb, rope_theta)
+    k = apply_rope(k, posb, rope_theta)
+
+    ck = _write_slot(cache.k, page_table, pos, alive, k[:, 0], page_size)
+    cv = _write_slot(cache.v, page_table, pos, alive, v[:, 0], page_size)
+    gk = _gather_slots(ck, page_table)
+    gv = _gather_slots(cv, page_table)
+    cap = gk.shape[1]
+    valid = (jnp.arange(cap)[None, :] <= posb) & alive[:, None]
+    scale = query_scale if query_scale is not None else head_dim ** -0.5
+    o = _slot_attention(q, gk, gv, valid, n_heads=n_heads, n_kv=n_kv,
+                        head_dim=head_dim, attn_softcap=attn_softcap,
+                        scale=scale)
+    return qmatmul(p, "wo", o), PagedKVCache(k=ck, v=cv)
+
+
+def gqa_decode_ring_slots(p, x_t, cache: KVCache, pos, alive, *, n_heads,
+                          n_kv, head_dim, window, attn_softcap=None,
+                          rope_theta=10000.0, query_scale=None):
+    """Sliding-window decode with a per-slot position vector.
+
+    The ring buffer is per-slot constant size (capacity == cache cap);
+    the engine never pages it — it just resets on admission.
+    """
+    b = x_t.shape[0]
+    q, k, v = _qkv(p, x_t, n_heads, n_kv, head_dim)
+    posb = pos[:, None]
+    q = apply_rope(q, posb, rope_theta)
+    k = apply_rope(k, posb, rope_theta)
+
+    cap = cache.k.shape[1]
+    slot = pos % cap
+    rows = jnp.arange(b)
+    ck = cache.k.at[rows, slot].set(k[:, 0].astype(cache.k.dtype))
+    cv = cache.v.at[rows, slot].set(v[:, 0].astype(cache.v.dtype))
+
+    idx = jnp.arange(cap)[None, :]
+    # ring slot i holds position p_i = pos - ((pos - i) mod cap)
+    slot_pos = posb - jnp.mod(posb - idx, cap)
+    valid = ((slot_pos >= 0) & (slot_pos > posb - (window or cap))
+             & alive[:, None])
+    scale = query_scale if query_scale is not None else head_dim ** -0.5
+    o = _slot_attention(q, ck, cv, valid, n_heads=n_heads, n_kv=n_kv,
+                        head_dim=head_dim, attn_softcap=attn_softcap,
+                        scale=scale)
+    return qmatmul(p, "wo", o), KVCache(k=ck, v=cv)
+
+
+def mla_decode_paged(p, x_t, cache: PagedMLACache, page_table, pos, alive, *,
+                     n_heads, kv_lora, rope_dim, nope_dim, v_dim, page_size,
+                     rope_theta=10000.0):
+    """Absorbed MLA decode over the paged latent cache (per-slot pos)."""
+    from repro.models.layers import rms_norm
+    b = x_t.shape[0]
+    posb = pos[:, None]
+    q_nope, q_rope = _mla_q(p, x_t, n_heads, nope_dim, rope_dim, posb,
+                            rope_theta)
+    dkv = qmatmul(p, "w_dkv", x_t)
+    c_kv_t = rms_norm(dkv[..., :kv_lora], p["kv_norm_scale"])
+    k_rope_t = apply_rope(dkv[..., None, kv_lora:], posb, rope_theta)[:, :, 0]
+
+    ckv = _write_slot(cache.c_kv, page_table, pos, alive, c_kv_t[:, 0],
+                      page_size)
+    krope = _write_slot(cache.k_rope, page_table, pos, alive, k_rope_t[:, 0],
+                        page_size)
+    gkv = _gather_slots(ckv, page_table)       # [B, cap, kv_lora]
+    grope = _gather_slots(krope, page_table)   # [B, cap, rope_dim]
+
+    w_uk = qweight(p, "w_uk").reshape(kv_lora, n_heads, nope_dim)
+    q_eff = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_uk)
+    logits = (jnp.einsum("bqhl,bsl->bhqs", q_eff, gkv) +
+              jnp.einsum("bqhd,bsd->bhqs", q_rope, grope))
+    logits = logits.astype(jnp.float32) * (nope_dim + rope_dim) ** -0.5
+    cap = gkv.shape[1]
+    valid = (jnp.arange(cap)[None, :] <= posb) & alive[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    attn = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", attn.astype(gkv.dtype), gkv)
+    w_uv = qweight(p, "w_uv").reshape(kv_lora, n_heads, v_dim)
+    o = jnp.einsum("bqhl,lhd->bqhd", ctx, w_uv).reshape(b, 1, n_heads * v_dim)
+    return qmatmul(p, "wo", o), PagedMLACache(c_kv=ckv, k_rope=krope)

@@ -86,27 +86,6 @@ def init_mlp(key: Array, d_model: int, d_ff: int, act: str, gated: bool,
     return p
 
 
-def mlp_weight(p, name: str, dtype) -> Array:
-    """Deprecated alias of :func:`repro.models.qleaf.qweight` (the PR-2
-    MLP-only name).  Kept so old checkpoints/scripts that imported the
-    MLP-leaf helpers keep working; new code uses ``qleaf`` directly."""
-    from repro.models import qleaf
-    return qleaf.qweight(p, name, dtype)
-
-
-def mlp_matmul(p, name: str, x: Array) -> Array:
-    """Deprecated alias of :func:`repro.models.qleaf.qmatmul` — see
-    :func:`mlp_weight`."""
-    from repro.models import qleaf
-    return qleaf.qmatmul(p, name, x)
-
-
-def _has_mlp_leaf(p, name: str) -> bool:
-    """Deprecated alias of :func:`repro.models.qleaf.has_leaf`."""
-    from repro.models import qleaf
-    return qleaf.has_leaf(p, name)
-
-
 def apply_mlp(p, x: Array, act: str) -> Array:
     from repro.models.qleaf import has_leaf, qmatmul
     from repro.models.sharding_ctx import constrain

@@ -29,8 +29,9 @@ Call sites pick the entry point by access pattern, and
   factors (MoE expert stacks, MLA ``w_uk``/``w_uv``) — again an in-jit
   temporary scheduled per use.
 
-The pre-qleaf names (``layers.mlp_matmul`` / ``mlp_weight`` /
-``_has_mlp_leaf``) survive as thin deprecated aliases.
+(The pre-qleaf MLP-only aliases ``layers.mlp_matmul`` / ``mlp_weight`` /
+``_has_mlp_leaf`` were removed after a deprecation PR; this module is
+the only weight-fetch API.)
 """
 from __future__ import annotations
 

@@ -454,6 +454,210 @@ def decode_step(params, cfg: ModelConfig, caches, tokens_t: Array, pos):
     return _head(params, cfg, x), tuple(new_caches)
 
 
+# --- paged caches (continuous-batching engine) ------------------------------
+#
+# Global-attention layers share one physical page pool per layer position
+# ([G, n_pages + 1, page, ...]; page 0 is the reserved trash page) indexed
+# by ONE per-slot page table — every layer caches the same logical
+# positions, so the table is model-wide, not per-layer.  SSM / RG-LRU /
+# sliding-window layers keep constant-size per-slot state ([G, n_slots,
+# ...]) that simply resets on admission.  ``decode_step_slots`` is the
+# engine's serve step: fixed shapes for any admission/eviction state, so
+# admitting a request never recompiles.
+
+
+def _init_layer_paged_cache(kind: LayerKind, cfg: ModelConfig, n_slots: int,
+                            n_pages: int, page_size: int, dtype):
+    if kind.mixer == "gqa":
+        return attn.init_paged_kv_cache(n_pages, page_size, cfg.n_kv,
+                                        cfg.head_dim, dtype)
+    if kind.mixer == "gqa_local":
+        return attn.init_kv_cache(n_slots, cfg.window or n_pages * page_size,
+                                  cfg.n_kv, cfg.head_dim, dtype)
+    if kind.mixer == "mla":
+        m = cfg.mla
+        return attn.init_paged_mla_cache(n_pages, page_size, m.kv_lora,
+                                         m.rope_dim, dtype)
+    if kind.mixer == "ssm":
+        s = cfg.ssm
+        return ssm_mod.init_ssm_cache(n_slots, s.d_inner, s.head_p,
+                                      s.state_n, s.conv_w, dtype)
+    if kind.mixer == "rglru":
+        return rglru_mod.init_rglru_cache(n_slots, cfg.rglru.width,
+                                          cfg.rglru.conv_w, dtype)
+    raise ValueError(kind.mixer)
+
+
+def init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
+                     page_size: int, dtype=jnp.float32):
+    """Engine decode caches mirroring the param stacks: leaves [G, ...]."""
+    caches = []
+    for spec in cfg.stacks:
+        stack = {}
+        for pi, kind in enumerate(spec.pattern):
+            one = _init_layer_paged_cache(kind, cfg, n_slots, n_pages,
+                                          page_size, dtype)
+            stack[f"pos{pi}"] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (spec.groups,) + x.shape),
+                one)
+        caches.append(stack)
+    return tuple(caches)
+
+
+def _write_layer_prefill(kind: LayerKind, paged, fentry, slot: int,
+                         pages: Array, page_size: int):
+    """Commit one layer's batch-1 prefill cache entry into the paged /
+    per-slot layout (leaves keep their leading [G] group dim)."""
+    if kind.mixer in ("gqa", "mla"):
+        def scatter(pool, val):                      # val [G, 1, S, ...]
+            v = val[:, 0]
+            g, s = v.shape[0], v.shape[1]
+            n_full = pages.shape[0] * page_size
+            pad = [(0, 0)] * v.ndim
+            pad[1] = (0, n_full - s)
+            v = jnp.pad(v, pad).reshape(
+                (g, pages.shape[0], page_size) + v.shape[2:])
+            return pool.at[:, pages].set(v.astype(pool.dtype))
+        if kind.mixer == "gqa":
+            return attn.PagedKVCache(k=scatter(paged.k, fentry.k),
+                                     v=scatter(paged.v, fentry.v))
+        return attn.PagedMLACache(c_kv=scatter(paged.c_kv, fentry.c_kv),
+                                  k_rope=scatter(paged.k_rope,
+                                                 fentry.k_rope))
+    if kind.mixer == "gqa_local":
+        # the prefill entry is already in ring layout (positions mod cap)
+        cap = fentry.k.shape[2]
+        return attn.KVCache(
+            k=paged.k.at[:, slot, :cap].set(fentry.k[:, 0].astype(
+                paged.k.dtype)),
+            v=paged.v.at[:, slot, :cap].set(fentry.v[:, 0].astype(
+                paged.v.dtype)))
+    # ssm / rglru: constant-size per-slot state, one row per slot
+    return jax.tree_util.tree_map(
+        lambda dst, src: dst.at[:, slot].set(src[:, 0].astype(dst.dtype)),
+        paged, fentry)
+
+
+def write_prefill_to_slot(cfg: ModelConfig, paged_caches, prefill_caches,
+                          slot: int, pages, page_size: int):
+    """Scatter a batch-1 ``prefill`` cache into slot ``slot``'s pages /
+    state rows.  ``pages``: physical page ids covering positions
+    [0, prompt_len).  Returns the updated cache tree."""
+    pages = jnp.asarray(pages, jnp.int32)
+    out = []
+    for spec, pstack, fstack in zip(cfg.stacks, paged_caches,
+                                    prefill_caches):
+        ns = {}
+        for pi, kind in enumerate(spec.pattern):
+            ns[f"pos{pi}"] = _write_layer_prefill(
+                kind, pstack[f"pos{pi}"], fstack[f"pos{pi}"], slot, pages,
+                page_size)
+        out.append(ns)
+    return tuple(out)
+
+
+def _gate_slot_cache(new, old, alive: Array):
+    """Keep masked slots' per-slot state untouched (page-starved slots
+    must resume bit-exactly; leading cache dim is the slot dim)."""
+    def sel(n, o):
+        m = alive.reshape((alive.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+def _apply_mixer_decode_slots(kind, p, x_t, cache, page_table, pos, alive,
+                              cfg):
+    if kind.mixer == "gqa":
+        page_size = cache.k.shape[1]
+        return attn.gqa_decode_paged(
+            p, x_t, cache, page_table, pos, alive, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv, head_dim=cfg.head_dim, page_size=page_size,
+            attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+            query_scale=cfg.query_scale)
+    if kind.mixer == "gqa_local":
+        out, c = attn.gqa_decode_ring_slots(
+            p, x_t, cache, pos, alive, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            head_dim=cfg.head_dim, window=cfg.window,
+            attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+            query_scale=cfg.query_scale)
+        return out, _gate_slot_cache(c, cache, alive)
+    if kind.mixer == "mla":
+        m = cfg.mla
+        page_size = cache.c_kv.shape[1]
+        return attn.mla_decode_paged(
+            p, x_t, cache, page_table, pos, alive, n_heads=cfg.n_heads,
+            kv_lora=m.kv_lora, rope_dim=m.rope_dim, nope_dim=m.nope_dim,
+            v_dim=m.v_dim, page_size=page_size, rope_theta=cfg.rope_theta)
+    if kind.mixer == "ssm":
+        s = cfg.ssm
+        out, c = ssm_mod.ssm_decode(p, x_t, cache, d_inner=s.d_inner,
+                                    head_p=s.head_p, state_n=s.state_n)
+        return out, _gate_slot_cache(c, cache, alive)
+    if kind.mixer == "rglru":
+        out, c = rglru_mod.rglru_decode(p, x_t, cache, width=cfg.rglru.width)
+        return out, _gate_slot_cache(c, cache, alive)
+    raise ValueError(kind.mixer)
+
+
+def _apply_layer_decode_slots(kind, p, x_t, cache, page_table, pos, alive,
+                              cfg):
+    h = L.rms_norm(x_t, p["ln1_norm_scale"])
+    out, cache = _apply_mixer_decode_slots(kind, p["mixer"], h, cache,
+                                           page_table, pos, alive, cfg)
+    if cfg.post_norms:
+        out = L.rms_norm(out, p["post1_norm_scale"])
+    x_t = x_t + out
+    if kind.mlp != "none":
+        h = L.rms_norm(x_t, p["ln2_norm_scale"])
+        if kind.mlp == "moe":
+            out = moe_mod.apply_moe(p["mlp"], h, top_k=cfg.moe.top_k,
+                                    act=cfg.mlp_act,
+                                    capacity_factor=cfg.moe.capacity_factor)
+        else:
+            out = L.apply_mlp(p["mlp"], h, cfg.mlp_act)
+        if cfg.post_norms:
+            out = L.rms_norm(out, p["post2_norm_scale"])
+        x_t = x_t + out
+    return x_t, cache
+
+
+def decode_step_slots(params, cfg: ModelConfig, caches, page_table,
+                      tokens_t: Array, pos: Array, alive: Array):
+    """Slot-aware serve step for the continuous-batching engine.
+
+    tokens_t [B, 1] int32 (B = n_slots); pos [B] int32 per-slot write
+    positions; alive [B] bool.  Dead / page-starved slots are masked:
+    their attention reads are invalid, their pool writes land on the
+    reserved trash page, and their per-slot state (ring / SSM / RG-LRU)
+    is left untouched.  Returns (logits [B, 1, V], new caches); shapes
+    are independent of which slots are live, so admission never
+    recompiles.
+    """
+    x = Q.qembed(params, "embed_tok", tokens_t)
+    if cfg.emb_scale is not None:
+        x = x * jnp.asarray(cfg.emb_scale, x.dtype)
+    if cfg.pos_embed == "sinusoidal":
+        x = x + L.sinusoidal_positions(pos[:, None],
+                                       cfg.d_model).astype(x.dtype)
+
+    new_caches = []
+    for spec, sp, sc in zip(cfg.stacks, params["stacks"], caches):
+        def body(carry, xs):
+            h = carry
+            gp, gc = xs
+            new_gc = {}
+            for pi, kind in enumerate(spec.pattern):
+                h, c = _apply_layer_decode_slots(
+                    kind, gp[f"pos{pi}"], h, gc[f"pos{pi}"], page_table,
+                    pos, alive, cfg)
+                new_gc[f"pos{pi}"] = c
+            return h, new_gc
+
+        x, nc = jax.lax.scan(body, x, (sp, sc))
+        new_caches.append(nc)
+    return _head(params, cfg, x), tuple(new_caches)
+
+
 def prefill(params, cfg: ModelConfig, tokens: Array,
             patch_embeds: Optional[Array] = None,
             last_logits_only: bool = False):

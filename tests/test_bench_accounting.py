@@ -35,8 +35,8 @@ def bench_json(tmp_path_factory):
     env["REPRO_BENCH_FAST"] = "1"
     env.setdefault("JAX_PLATFORMS", "cpu")
     res = subprocess.run(
-        [sys.executable, "-m", "benchmarks.run", "--only", "kernels",
-         "--json", str(out)],
+        [sys.executable, "-m", "benchmarks.run", "--only",
+         "kernels,engine", "--json", str(out)],
         cwd=REPO, env=env, capture_output=True, text=True, timeout=1800)
     assert res.returncode == 0, res.stderr[-3000:]
     with open(out) as f:
@@ -76,3 +76,28 @@ def test_uint8_oracle_rows_report_one_byte(bench_json):
     for name, row in bench_json.items():
         if "uint8" in name:
             assert "idx_bytes/weight=1.0" in row["derived"]
+
+
+_TPS_RE = re.compile(
+    r"tok/s=([0-9.]+) one_shot=([0-9.]+) \(x([0-9.]+)\); "
+    r"occupancy=([0-9.]+) page_util=([0-9.]+) peak=([0-9.]+)")
+
+
+def test_engine_throughput_rows(bench_json):
+    """The continuous-batching bench must emit its dense + packed cells
+    with tokens/s, slot occupancy and page-pool utilization, and state
+    the equal-HBM budget it compared under."""
+    for expect in ("engine_throughput_dense",
+                   "engine_throughput_K2_packed",
+                   "engine_throughput_K16_packed"):
+        assert expect in bench_json, f"bench row {expect} disappeared"
+        derived = bench_json[expect]["derived"]
+        m = _TPS_RE.search(derived)
+        assert m, f"{expect}: no throughput accounting in {derived!r}"
+        tps, one_shot, ratio, occ, util, peak = map(float, m.groups())
+        assert tps > 0 and one_shot > 0
+        assert ratio == pytest.approx(tps / one_shot, rel=0.05)
+        assert 0 < occ <= 1 and 0 <= util <= 1 and 0 < peak <= 1
+        assert "equal-HBM" in derived
+        if "packed" in expect:
+            assert "B/weight idx" in derived

@@ -380,6 +380,61 @@ def test_lctrainer_sharded_c_step_plan_flag_1dev():
                                rtol=1e-5, atol=1e-6)
 
 
+def test_engine_paged_cache_sharding_rules():
+    """Page pools replicate the page axis over data (any slot's table
+    entry may point at any physical page) and shard the kv-head axis
+    over ``model``; per-slot state shards the slot axis over data like a
+    decode batch.  A fused engine decode step must run under these
+    placements on a 2×4 mesh without resharding errors."""
+    res = run_sub("""
+        from repro.dist.sharding import engine_cache_shardings, param_shardings
+        from repro.models.transformer import (LayerKind, ModelConfig,
+                                              StackSpec, decode_step_slots,
+                                              init_paged_cache, init_params)
+        cfg = ModelConfig(
+            name="tiny", family="dense", d_model=32, n_heads=8, n_kv=4,
+            head_dim=4, d_ff=64, vocab=96,
+            stacks=(StackSpec(pattern=(LayerKind("gqa", "dense"),),
+                              groups=2),),
+            tie_embeddings=True, q_chunk=8, kv_chunk=8, remat=False)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        n_slots, n_pages, page = 4, 8, 4
+        caches = init_paged_cache(cfg, n_slots, n_pages, page)
+        sh = engine_cache_shardings(caches, mesh, n_slots=n_slots,
+                                    n_pages=n_pages)
+        pool_sh = sh[0]["pos0"].k        # [G, n_pages+1, page, kv, hd]
+        pool_spec = tuple(pool_sh.spec)
+        # the ambiguous oversubscribed case (n_pages + 1 == n_slots):
+        # pool pages must still replicate, never data-shard
+        amb = init_paged_cache(cfg, 4, 3, page)
+        amb_sh = engine_cache_shardings(amb, mesh, n_slots=4, n_pages=3)
+        amb_spec = tuple(amb_sh[0]["pos0"].k.spec)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        params = jax.tree_util.tree_map(jax.device_put, params,
+                                        param_shardings(params, mesh))
+        caches = jax.tree_util.tree_map(jax.device_put, caches, sh)
+        pt = jnp.zeros((n_slots, 2), jnp.int32).at[:, 0].set(
+            jnp.arange(1, n_slots + 1))
+        toks = jnp.zeros((n_slots, 1), jnp.int32)
+        pos = jnp.zeros((n_slots,), jnp.int32)
+        alive = jnp.ones((n_slots,), bool)
+        with mesh:
+            logits, _ = jax.jit(decode_step_slots, static_argnums=1)(
+                params, cfg, caches, pt, toks, pos, alive)
+        print(json.dumps({
+            "pool_spec": [str(s) for s in pool_spec],
+            "pool_model_axis": pool_spec[3] == "model",
+            "pool_pages_replicated": pool_spec[1] is None,
+            "ambiguous_pool_pages_replicated": amb_spec[1] is None,
+            "logits_ok": bool(np.isfinite(np.asarray(logits)).all()),
+        }))
+    """)
+    assert res["pool_model_axis"], res
+    assert res["pool_pages_replicated"], res
+    assert res["ambiguous_pool_pages_replicated"], res
+    assert res["logits_ok"], res
+
+
 def test_moe_ep_shard_map_equals_vmap():
     """Rank-local EP dispatch (shard_map) == the local vmap path."""
     res = run_sub("""

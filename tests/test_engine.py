@@ -1,0 +1,321 @@
+"""Continuous-batching engine differential + stress suite.
+
+THE invariant: for any admission order, slot count, page-pool size and
+completion pattern, every request's greedy token stream from the engine
+equals the one-shot lockstep loop's (``repro.engine.oneshot``) — across
+{dense, packed} serving layouts and K ∈ {2, 16} on the mixed
+gqa+moe+ssm stack.  Plus: page-reuse stress (short/long interleave with
+an oversubscribed pool never corrupts a neighbor's KV), no-recompile on
+admission, deterministic per-request sampling, and scheduler / page-pool
+unit behavior.
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from helpers import mixed_cfg, pack_model
+from repro.engine import (Engine, PagePool, Request, SlotScheduler,
+                          greedy_generate, truncate_at_eos)
+
+
+@functools.lru_cache(maxsize=None)
+def _mixed(k: int, layout: str):
+    """(cfg, serving params) for the mixed gqa+moe+ssm stack — cached:
+    packing is the expensive step."""
+    cfg = mixed_cfg(tie=True)
+    params = jax.random.PRNGKey(0)
+    from repro.models.transformer import init_params
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    if layout == "dense":
+        return cfg, params
+    packed = pack_model(params, k)
+    return cfg, packed.serving_params(packed=True)
+
+
+@functools.lru_cache(maxsize=None)
+def _prompts(vocab: int, n: int, length: int):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(7 + length), (n, length), 0, vocab))
+
+
+def _oracle(params, cfg, reqs):
+    """One-shot greedy streams per request (grouped by prompt length —
+    the lockstep loop needs a rectangular prompt batch)."""
+    out = {}
+    by_len = {}
+    for r in reqs:
+        by_len.setdefault(r.prompt_len, []).append(r)
+    for length, group in by_len.items():
+        prompts = np.stack([r.prompt for r in group])
+        gen = max(r.max_new_tokens for r in group)
+        toks = np.asarray(greedy_generate(params, cfg,
+                                          jax.numpy.asarray(prompts),
+                                          gen)[0])
+        for i, r in enumerate(group):
+            out[r.rid] = truncate_at_eos(toks[i][:r.max_new_tokens],
+                                         r.eos_id)
+    return out
+
+
+def _assert_streams_equal(outs, want):
+    assert set(outs) == set(want)
+    for rid in want:
+        np.testing.assert_array_equal(
+            outs[rid], want[rid],
+            err_msg=f"request {rid}: engine stream != one-shot stream")
+
+
+# ---------------------------------------------------------------------------
+# The differential matrix: {dense, packed} × K ∈ {2, 16}, staggered
+# admission (more requests than slots, mixed prompt lengths) and
+# out-of-order completion (mixed max-new-tokens)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout,k", [("dense", 16), ("packed", 2),
+                                      ("packed", 16)])
+def test_engine_matches_one_shot_staggered(layout, k):
+    cfg, params = _mixed(k, layout)
+    p16 = _prompts(cfg.vocab, 4, 16)
+    p8 = _prompts(cfg.vocab, 2, 8)
+    gens = [6, 2, 5, 3, 6, 1]
+    reqs = [Request(rid=r, prompt=(p16[r // 2] if r % 2 == 0
+                                   else p8[r // 4]),
+                    max_new_tokens=gens[r]) for r in range(6)]
+    want = _oracle(params, cfg, reqs)
+
+    eng = Engine(params, cfg, n_slots=2, page_size=8, max_seq=24,
+                 token_budget=12)
+    before = eng.decode_compile_count()
+    outs = eng.run(reqs)
+    _assert_streams_equal(outs, want)
+    # staggered admission / eviction never retraced the decode step
+    assert eng.decode_compile_count() - before <= 1
+    s = eng.stats.summary()
+    assert s["finished"] == 6
+    assert 0 < s["slot_occupancy"] <= 1
+    assert 0 < s["page_utilization_max"] <= 1
+
+
+def test_engine_eos_early_exit_out_of_order():
+    """EOS stops a request mid-stream; its slot and pages free while
+    neighbors keep decoding."""
+    cfg, params = _mixed(16, "packed")
+    p16 = _prompts(cfg.vocab, 3, 16)
+    base = [Request(rid=r, prompt=p16[r], max_new_tokens=8)
+            for r in range(3)]
+    plain = _oracle(params, cfg, base)
+    # make request 1's third token its EOS: it must finish after 3 tokens
+    eos = int(plain[1][2])
+    reqs = [Request(rid=r, prompt=p16[r], max_new_tokens=8,
+                    eos_id=eos if r == 1 else None) for r in range(3)]
+    want = _oracle(params, cfg, reqs)
+    assert len(want[1]) == 3
+
+    eng = Engine(params, cfg, n_slots=2, page_size=8, max_seq=24)
+    outs = eng.run(reqs)
+    _assert_streams_equal(outs, want)
+    assert len(outs[1]) == 3 and outs[1][-1] == eos
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-lite-16b",
+                                  "recurrentgemma-2b"])
+def test_engine_matches_one_shot_mla_rglru_windowed(arch):
+    """The mixer kinds the mixed stack doesn't cover: MLA (paged
+    absorbed-latent decode) and RG-LRU + sliding-window gqa_local
+    (per-slot ring buffers) — engine streams must still equal the
+    one-shot loop's under staggered admission."""
+    from repro.configs import get_config, reduce_config
+    from repro.models.transformer import init_params
+    cfg = reduce_config(get_config(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg.vocab, 3, 16)
+    reqs = [Request(rid=r, prompt=prompts[r],
+                    max_new_tokens=[5, 3, 4][r]) for r in range(3)]
+    want = _oracle(params, cfg, reqs)
+    eng = Engine(params, cfg, n_slots=2, page_size=8, max_seq=24)
+    _assert_streams_equal(eng.run(reqs), want)
+
+
+# ---------------------------------------------------------------------------
+# Page reuse stress: oversubscribed pool, short/long interleave
+# ---------------------------------------------------------------------------
+
+def test_page_reuse_stress_never_corrupts_neighbor_kv():
+    """A long-running request decodes while short requests churn through
+    the slots around it, constantly recycling pages.  The pool is
+    oversubscribed (stalls + preemptions must occur), yet every stream —
+    including the long neighbor's — stays exactly the one-shot stream:
+    a page handed to a new request is never still referenced by an old
+    page table."""
+    cfg, params = _mixed(16, "packed")
+    p16 = _prompts(cfg.vocab, 8, 16)
+    p8 = _prompts(cfg.vocab, 4, 8)
+    reqs = [Request(rid=0, prompt=p16[0], max_new_tokens=8)]  # the long one
+    for r in range(1, 8):
+        reqs.append(Request(rid=r, prompt=(p8[r % 4] if r % 2
+                                           else p16[r]),
+                            max_new_tokens=2 + r % 3))
+    want = _oracle(params, cfg, reqs)
+
+    # 3 slots but only 7 usable pages (full residency would need 9)
+    eng = Engine(params, cfg, n_slots=3, page_size=8, max_seq=24,
+                 n_pages=7, token_budget=20)
+    outs = eng.run(reqs)
+    _assert_streams_equal(outs, want)
+    s = eng.stats.summary()
+    assert s["page_utilization_max"] > 0.8
+
+
+def test_preemption_replays_request_exactly():
+    """When every runnable slot is page-starved the youngest is
+    preempted and replayed from scratch — deterministically, so its
+    final stream is still the oracle stream."""
+    cfg, params = _mixed(16, "packed")
+    p16 = _prompts(cfg.vocab, 6, 16)
+    reqs = [Request(rid=r, prompt=p16[r], max_new_tokens=[6, 2, 5, 3, 6,
+                                                          4][r])
+            for r in range(6)]
+    want = _oracle(params, cfg, reqs)
+    eng = Engine(params, cfg, n_slots=3, page_size=8, max_seq=22,
+                 n_pages=6, token_budget=20)
+    outs = eng.run(reqs)
+    _assert_streams_equal(outs, want)
+    assert eng.stats.preemptions > 0
+    assert eng.stats.stall_events > 0
+
+
+# ---------------------------------------------------------------------------
+# Per-slot sampling
+# ---------------------------------------------------------------------------
+
+def test_sampled_streams_deterministic_across_batching():
+    """temperature/top-k streams depend only on (request, seed), not on
+    slot assignment, admission order, or pool shape."""
+    cfg, params = _mixed(16, "packed")
+    p16 = _prompts(cfg.vocab, 4, 16)
+
+    def mk():
+        return [Request(rid=r, prompt=p16[r], max_new_tokens=5,
+                        temperature=0.8, top_k=7, seed=100 + r)
+                for r in range(4)]
+
+    o1 = Engine(params, cfg, n_slots=2, page_size=8, max_seq=24).run(mk())
+    o2 = Engine(params, cfg, n_slots=4, page_size=4, max_seq=24).run(mk())
+    for r in o1:
+        np.testing.assert_array_equal(o1[r], o2[r])
+    # all sampled ids are valid vocab entries
+    for r in o1:
+        assert (o1[r] >= 0).all() and (o1[r] < cfg.vocab).all()
+
+
+def test_bf16_model_infers_bf16_pool_and_matches_oracle():
+    """The KV-pool dtype is inferred from the embedding leaf: a bf16
+    model gets a bf16 pool (an f32 pool would round differently than
+    the oracle's bf16 caches and break stream parity)."""
+    import jax.numpy as jnp
+    from repro.models.transformer import (LayerKind, ModelConfig,
+                                          StackSpec, init_params)
+    cfg = ModelConfig(
+        name="bf16-eng", family="dense", d_model=32, n_heads=4, n_kv=2,
+        head_dim=8, d_ff=64, vocab=96,
+        stacks=(StackSpec(pattern=(LayerKind("gqa", "dense"),),
+                          groups=2),),
+        tie_embeddings=True, q_chunk=8, kv_chunk=8, remat=False)
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.bfloat16)
+    prompts = _prompts(cfg.vocab, 2, 16)
+    reqs = [Request(rid=r, prompt=prompts[r], max_new_tokens=[5, 3][r])
+            for r in range(2)]
+    want = _oracle(params, cfg, reqs)
+    eng = Engine(params, cfg, n_slots=2, page_size=8, max_seq=24)
+    assert eng.caches[0]["pos0"].k.dtype == jnp.bfloat16
+    _assert_streams_equal(eng.run(reqs), want)
+
+
+def test_greedy_requests_ignore_seed():
+    cfg, params = _mixed(16, "packed")
+    p16 = _prompts(cfg.vocab, 2, 16)
+    a = Engine(params, cfg, n_slots=2, page_size=8, max_seq=24).run(
+        [Request(rid=0, prompt=p16[0], max_new_tokens=4, seed=1)])
+    b = Engine(params, cfg, n_slots=2, page_size=8, max_seq=24).run(
+        [Request(rid=0, prompt=p16[0], max_new_tokens=4, seed=2)])
+    np.testing.assert_array_equal(a[0], b[0])
+
+
+# ---------------------------------------------------------------------------
+# Scheduler / page-pool units
+# ---------------------------------------------------------------------------
+
+def test_page_pool_alloc_free_accounting():
+    pool = PagePool(n_pages=6, page_size=8, n_slots=2,
+                    max_pages_per_slot=3)
+    assert pool.free_pages == 6 and pool.used_pages == 0
+    assert pool.alloc(0, 2)
+    assert pool.table[0, 0] != 0 and pool.table[0, 1] != 0
+    assert pool.table[0, 2] == 0                 # unallocated → trash
+    assert pool.ensure(0, 17)                    # pos 17 → 3rd page
+    assert pool.used_pages == 3
+    assert not pool.ensure(0, 24)                # beyond max_pages_per_slot
+    assert pool.alloc(1, 3)
+    assert pool.free_pages == 0
+    assert not pool.alloc(0, 1) and not pool.alloc(1, 1)
+    freed = pool.free_slot(0)
+    assert freed == 3 and pool.free_pages == 3
+    assert (pool.table[0] == 0).all()
+    # freed pages immediately reusable — and all-or-nothing alloc
+    assert not pool.alloc(1, 4)
+    p1_before = pool.pages_of(1)
+    assert pool.pages_of(1) == p1_before
+    pool2 = PagePool(n_pages=3, page_size=8, n_slots=1,
+                     max_pages_per_slot=3)
+    assert not pool2.alloc(0, 4)
+    assert pool2.free_pages == 3
+
+
+def test_slot_scheduler_admit_evict_tracking():
+    sched = SlotScheduler(2)
+    r = Request(rid=0, prompt=np.arange(5), max_new_tokens=3)
+    sched.submit(r)
+    assert sched.has_work() and sched.free_ids() == [0, 1]
+    st = sched.admit(0, sched.queue.popleft())
+    assert sched.free_ids() == [1] and sched.running_ids() == []
+    assert sched.prefilling_ids() == [0]
+    st.prefilled = True
+    st.out.append(42)
+    assert sched.running_ids() == [0]
+    assert st.write_pos == 5          # prompt_len + n_generated - 1
+    assert not st.finished()
+    st.out += [43, 44]
+    assert st.finished()              # max_new_tokens reached
+    sched.evict(0)
+    assert not sched.has_work()
+    # EOS completion
+    r2 = Request(rid=1, prompt=np.arange(4), max_new_tokens=10, eos_id=9)
+    st2 = sched.admit(1, r2)
+    st2.prefilled = True
+    st2.out.append(9)
+    assert st2.finished()
+    with pytest.raises(ValueError):
+        Request(rid=2, prompt=np.array([], np.int32))
+    with pytest.raises(ValueError):
+        Request(rid=3, prompt=np.arange(3), max_new_tokens=0)
+
+
+def test_engine_rejects_oversized_request_and_tiny_pool():
+    cfg, params = _mixed(16, "packed")
+    p16 = _prompts(cfg.vocab, 1, 16)
+    eng = Engine(params, cfg, n_slots=1, page_size=8, max_seq=24)
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0, prompt=p16[0], max_new_tokens=100))
+    # a request that fits max_seq but can never fit the pool must be
+    # rejected up front (it would otherwise preempt-cycle forever)
+    eng2 = Engine(params, cfg, n_slots=1, page_size=8, max_seq=24,
+                  n_pages=2)
+    with pytest.raises(ValueError):
+        eng2.submit(Request(rid=0, prompt=p16[0], max_new_tokens=8))
+    # pool smaller than one prompt: same loud rejection, not a hang
+    eng3 = Engine(params, cfg, n_slots=1, page_size=8, max_seq=24,
+                  n_pages=1)
+    with pytest.raises(ValueError):
+        eng3.run([Request(rid=0, prompt=p16[0], max_new_tokens=2)])

@@ -4,8 +4,8 @@ End-to-end packed-vs-dense **bit-exactness** on CPU for a mixed stack
 (attention + MLP + MoE + SSM layers) across ``forward``, ``prefill`` and
 ``decode_step`` at K ∈ {2, 16}; embedding dequant-on-gather
 (``dispatch.quantized_gather``); the non-matrix (MoE expert [E, D, F])
-packed layout; the deprecated ``mlp_matmul``/``mlp_weight`` shims and the
-PR-2 MLP-only artifact path (load + serve bit-exact)."""
+packed layout; the PR-2 MLP-only artifact path (load + serve
+bit-exact)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,7 +17,6 @@ from helpers import assert_trees_equal as _tree_equal
 from repro.core import CompressionPlan, PackedModel
 from repro.core import compression as C
 from repro.kernels import dispatch
-from repro.models import layers as L
 from repro.models import qleaf as Q
 from repro.models.transformer import (decode_step, forward, init_params,
                                       prefill)
@@ -159,9 +158,9 @@ def test_quantized_gather_matches_dense_rows(k):
 
 def test_pr2_mlp_only_artifact_loads_and_serves_bit_exact(tmp_path):
     """The PR-2 artifact path — save → load → MLP-only serving_params —
-    still serves bit-exactly through the qleaf-refactored model, and the
-    deprecated ``mlp_matmul``/``mlp_weight``/``_has_mlp_leaf`` shims
-    keep answering for old callers."""
+    still serves bit-exactly through the qleaf-refactored model (the
+    deprecated ``mlp_matmul``/``mlp_weight`` aliases are gone; qleaf is
+    the only weight-fetch API)."""
     cfg = _mixed_cfg(tie=True)
     params = init_params(jax.random.PRNGKey(0), cfg)
     packed = _pack(params, 16)
@@ -180,17 +179,14 @@ def test_pr2_mlp_only_artifact_loads_and_serves_bit_exact(tmp_path):
     toks = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0, cfg.vocab)
     _tree_equal(forward(dense, cfg, toks), forward(sp, cfg, toks))
 
-    # deprecated shims == qleaf
+    # the qleaf entry points answer for the legacy MLP-only layout
     x = jnp.asarray(np.random.RandomState(0).randn(5, cfg.d_model),
                     jnp.float32)
     np.testing.assert_array_equal(
-        np.asarray(L.mlp_matmul(mlp_p, "w_in", x)),
-        np.asarray(Q.qmatmul(mlp_p, "w_in", x)))
-    np.testing.assert_array_equal(
-        np.asarray(L.mlp_weight(mlp_p, "w_in", jnp.float32)),
-        np.asarray(Q.qweight(mlp_p, "w_in", jnp.float32)))
-    assert L._has_mlp_leaf(mlp_p, "w_in") and Q.has_leaf(mlp_p, "w_in")
-    assert not L._has_mlp_leaf(mlp_p, "nope")
+        np.asarray(Q.qmatmul(mlp_p, "w_in", x)),
+        np.asarray(x @ Q.qweight(mlp_p, "w_in", jnp.float32)))
+    assert Q.has_leaf(mlp_p, "w_in")
+    assert not Q.has_leaf(mlp_p, "nope")
 
 
 # ---------------------------------------------------------------------------
