@@ -35,10 +35,23 @@ def main() -> None:
                          "(name → us_per_call + derived)")
     args = ap.parse_args()
 
+    only = args.only.split(",") if args.only else None
+    if only:
+        # A typo'd group used to select nothing and exit green — CI then
+        # "passed" while benchmarking nothing.  Every token must match
+        # at least one module.
+        groups = [m.rsplit(".bench_", 1)[-1] for m in MODULES]
+        bad = [t for t in only
+               if not any(t and t in m for m in MODULES)]
+        if bad:
+            print(f"error: --only {','.join(bad)!r} matches no benchmark "
+                  f"module; valid groups: {', '.join(groups)}",
+                  file=sys.stderr)
+            sys.exit(2)
+
     print("name,us_per_call,derived")
     results = {}
     failures = 0
-    only = args.only.split(",") if args.only else None
     for modname in MODULES:
         if only and not any(tok and tok in modname for tok in only):
             continue

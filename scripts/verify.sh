@@ -17,6 +17,16 @@ cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# XLA's CPU backend splits LLVM codegen across a thread pool; on
+# low-core runners that parallel split races and sporadically SIGSEGVs
+# inside backend_compile on long many-compilation runs (observed on a
+# 1-vCPU box compiling the kmeans scan, different test each run).
+# Serializing codegen removes the crash and costs nothing at CI scale.
+# Appended so a caller's XLA_FLAGS still apply; the test_dist.py
+# subprocesses overwrite XLA_FLAGS themselves (see note above) and are
+# single-compile, short-lived processes.
+export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_cpu_parallel_codegen_split_count=1"
+
 # Cross-route differential matrix first — the serving-layout invariant
 # ({dense, uint8, packed} × {forward, prefill, decode} × K × dtype must
 # stay bit-exact; tests/test_differential.py + golden artifacts) — then
@@ -43,6 +53,18 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/smoke_serve_packed.py
 # completion over the packed mixed stack, every greedy stream equal to
 # the one-shot loop's (the full matrix lives in tests/test_engine.py).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/smoke_engine.py
+
+# Static serving-graph audit (hard gate): compile-time proof of the
+# eq.-14 invariants over both committed golden fixtures — dense-inflation
+# scan of every serve entry's jaxpr (pallas routes traced on CPU, no
+# Mosaic), per-leaf HBM bytes/weight == bits_per_index(K)/8 from compiled
+# HLO, the engine recompile gate, and VMEM/lane lint of every reachable
+# block config.  Non-allowlisted violations exit 1 and fail the build;
+# AUDIT_*.json is uploaded next to the bench artifact by CI.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis.audit \
+    --packed tests/fixtures/pr2_mlp_only --out AUDIT_pr2.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis.audit \
+    --packed tests/fixtures/pr3_full --out AUDIT_pr3.json
 
 # Kernel + engine bench smoke (serve-path byte accounting, engine
 # throughput rows, perf trajectory): the same CSV/JSON CI uploads as an

@@ -1,0 +1,42 @@
+"""Static serving-graph auditor — compile-time proofs of the eq.-14
+serving invariants (ISSUE 6).
+
+The serving story of PRs 2–5 is a *dynamic* story: bench byte assertions
+and differential tests catch a regression only if a covered row happens
+to execute it.  This package proves the same invariants statically,
+without running the model, over the real serve entry points (``forward``
+/ ``prefill`` / ``decode_step`` / ``decode_step_slots`` / the engine's
+fused decode+sample step):
+
+* :mod:`repro.analysis.graph`     — dense-inflation detection: walk the
+  traced jaxpr for codebook gathers that materialize a packed leaf's
+  full dense weight (the exact LM-head failure PR 4 fixed);
+* :mod:`repro.analysis.hbm`       — per-parameter HBM byte audit over
+  compiled HLO: every packed leaf's graph input must read exactly
+  ``bits_per_index(K)/8`` B/weight (eq.-14 checked from what executes,
+  not from bench timers);
+* :mod:`repro.analysis.recompile` — trace-count auditor: admission /
+  completion / preemption in the engine step loop must never create new
+  jit cache entries;
+* :mod:`repro.analysis.vmem`      — Pallas kernel static checks: VMEM
+  footprint estimates and grid/lane-divisibility validation for every
+  block config reachable from the autotune tables, so a bad entry fails
+  lint on CPU instead of failing Mosaic compile on TPU;
+* :mod:`repro.analysis.audit`     — the CLI driver
+  (``python -m repro.analysis.audit --packed <artifact>``) emitting
+  ``AUDIT.json`` + a human table, wired into ``scripts/verify.sh`` and
+  CI as a hard gate over the committed golden fixtures.
+"""
+from repro.analysis.graph import (DenseInflation, find_dense_inflations,
+                                  protected_leaves)
+from repro.analysis.hbm import audit_entry_hbm
+from repro.analysis.recompile import RecompileAuditor, RecompileViolation
+from repro.analysis.vmem import (audit_block_space, estimate_vmem_bytes,
+                                 validate_block_config)
+
+__all__ = [
+    "DenseInflation", "find_dense_inflations", "protected_leaves",
+    "audit_entry_hbm",
+    "RecompileAuditor", "RecompileViolation",
+    "audit_block_space", "estimate_vmem_bytes", "validate_block_config",
+]

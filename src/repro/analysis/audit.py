@@ -1,0 +1,237 @@
+"""The audit CLI: ``python -m repro.analysis.audit --packed <artifact>``.
+
+Runs every static check in this package against a ``PackedModel``
+artifact directory and emits machine-readable ``AUDIT.json`` plus a
+human table (``launch.report.audit_table``):
+
+1. **dense-inflation** — trace ``forward`` / ``prefill`` /
+   ``decode_step_slots`` / the engine's fused decode+sample step with the
+   *pallas* kernel backend pinned (tracing is abstract eval — no Mosaic,
+   runs on CPU) and walk the jaxpr for codebook gathers that rebuild a
+   packed leaf's dense weight;
+2. **hbm-bytes / hbm-padding / hbm-dead-operand / dense-weight-input** —
+   compile the same entries (ref backend: parameter identity is
+   backend-independent, and CI has no TPU) and assert each packed leaf's
+   only HBM input is its uint32 word operand at ``bits_per_index(K)/8``
+   bytes/weight;
+3. **recompile** — drive a fresh engine through admission / chunked
+   prefill / completion / page-pressure preemption after a warmup run
+   and assert zero jit-cache growth;
+4. **vmem-blocks** — lint every block config reachable from the
+   autotune surface (VMEM footprint, lane divisibility) without Mosaic.
+
+Violations matching ``allowlist.json`` (packaged default, or
+``--allowlist``) are reported but don't fail the gate; anything else
+exits 1.  ``scripts/verify.sh`` and CI run this over the committed
+golden fixtures.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+_DEFAULT_ALLOWLIST = os.path.join(os.path.dirname(__file__),
+                                  "allowlist.json")
+
+
+def _glob(pattern: str, value: str) -> bool:
+    """Glob where ONLY ``*`` is special (leaf paths are full of ``[``/
+    ``]``, which fnmatch would read as character classes)."""
+    rx = ".*".join(re.escape(part) for part in pattern.split("*"))
+    return re.fullmatch(rx, value) is not None
+
+
+def load_allowlist(path: Optional[str] = None) -> List[Dict[str, str]]:
+    """Entries ``{"check", "subject", "reason"}``; ``subject`` is a
+    ``*``-glob over the violation's subject (a leaf path or block
+    source).  Every entry must carry a non-empty reason — the allowlist
+    documents exceptions, it doesn't hide them."""
+    with open(path or _DEFAULT_ALLOWLIST) as fh:
+        data = json.load(fh)
+    entries = data["entries"] if isinstance(data, dict) else data
+    for e in entries:
+        if not e.get("reason"):
+            raise ValueError(f"allowlist entry {e} has no reason — "
+                             f"document the exception or remove it")
+    return entries
+
+
+def split_allowed(violations: List[Dict[str, str]],
+                  allowlist: List[Dict[str, str]]):
+    """(active, allowed) — a violation is allowed iff an entry matches
+    both its check name and its subject glob."""
+    active, allowed = [], []
+    for v in violations:
+        match = next(
+            (e for e in allowlist
+             if _glob(e["check"], v.get("check", ""))
+             and _glob(e["subject"], v.get("subject", ""))),
+            None)
+        if match is not None:
+            allowed.append({**v, "allowed_reason": match["reason"]})
+        else:
+            active.append(v)
+    return active, allowed
+
+
+def _serve_entries(sp, cfg):
+    """name → (fn, args) for every real serve entry point.  ``cfg`` is
+    closed over (it is a static argument everywhere)."""
+    import jax.numpy as jnp
+
+    from repro.engine.engine import Engine, _decode_and_sample
+    from repro.models import transformer as T
+
+    toks = jnp.zeros((1, 8), jnp.int32)
+    entries = {
+        "forward": (lambda p, t: T.forward(p, cfg, t), (sp, toks)),
+        "prefill": (lambda p, t: T.prefill(p, cfg, t,
+                                           last_logits_only=True),
+                    (sp, toks)),
+    }
+    eng = Engine(sp, cfg, n_slots=2, page_size=8, max_seq=32)
+    caches = eng.caches
+    table = jnp.asarray(eng.pool.table)
+    b = eng.n_slots
+    dec = (caches, table, jnp.zeros((b, 1), jnp.int32),
+           jnp.zeros((b,), jnp.int32), jnp.zeros((b,), bool))
+    entries["decode_step_slots"] = (
+        lambda p, c, pt, t, pos, al: T.decode_step_slots(
+            p, cfg, c, pt, t, pos, al),
+        (sp,) + dec)
+    sample = (jnp.zeros((b,), jnp.float32), jnp.zeros((b,), jnp.int32),
+              jnp.zeros((b, 2), jnp.uint32))
+    entries["engine_decode_sample"] = (
+        lambda p, c, pt, t, pos, al, tm, tk, ky: _decode_and_sample(
+            p, cfg, c, pt, t, pos, al, tm, tk, ky),
+        (sp,) + dec + sample)
+    return entries
+
+
+def run_audit(packed_dir: str, config: Optional[str] = None,
+              allowlist_path: Optional[str] = None,
+              skip: Optional[List[str]] = None) -> Dict[str, Any]:
+    """All checks over one artifact; returns the AUDIT.json payload."""
+    from repro.analysis import graph as G
+    from repro.analysis import hbm as H
+    from repro.analysis import recompile as R
+    from repro.analysis import vmem as V
+    from repro.analysis.zoo import infer_config
+    from repro.core.compression import PackedModel
+
+    skip = skip or []
+    pm = PackedModel.load(packed_dir)
+    cfg_name, cfg = infer_config(pm, config)
+    sp = pm.serving_params(packed=True)
+    prot = G.protected_leaves(sp)
+
+    report: Dict[str, Any] = {
+        "artifact": os.path.abspath(packed_dir),
+        "config": cfg_name,
+        "protected_leaves": sorted(prot),
+        "checks": {},
+        "violations": [],
+    }
+    violations: List[Dict[str, str]] = []
+
+    if "graph" not in skip:
+        per_entry: Dict[str, List[str]] = {}
+        with G.trace_backend("pallas"):
+            for name, (fn, args) in _serve_entries(sp, cfg).items():
+                hits = G.find_dense_inflations(fn, args, prot)
+                per_entry[name] = [h.describe() for h in hits]
+                for h in hits:
+                    violations.append({
+                        "check": "dense-inflation", "subject": h.leaf,
+                        "detail": f"{name}: {h.describe()}"})
+        report["checks"]["graph"] = per_entry
+
+    if "hbm" not in skip:
+        hbm_entries: Dict[str, Any] = {}
+        with G.trace_backend("ref"):
+            for name, (fn, args) in _serve_entries(sp, cfg).items():
+                res = H.audit_entry_hbm(fn, args, prot, entry=name)
+                hbm_entries[name] = {
+                    "rows": res["rows"],
+                    "packed_input_bytes": res["packed_input_bytes"],
+                    "float_input_bytes": res["float_input_bytes"],
+                }
+                violations.extend(res["violations"])
+        report["checks"]["hbm"] = hbm_entries
+
+    if "recompile" not in skip:
+        try:
+            report["checks"]["recompile"] = R.audit_engine_recompiles(
+                sp, cfg)
+        except R.RecompileViolation as e:
+            violations.append({"check": "recompile",
+                               "subject": "engine-step-loop",
+                               "detail": str(e)})
+            report["checks"]["recompile"] = {"error": str(e)}
+
+    if "vmem" not in skip:
+        res = V.audit_block_space(prot)
+        report["checks"]["vmem"] = {
+            "configs_checked": len(res["rows"]),
+            "warnings": [w for r in res["rows"] for w in r["warnings"]],
+        }
+        violations.extend(res["violations"])
+
+    active, allowed = split_allowed(violations,
+                                    load_allowlist(allowlist_path))
+    report["violations"] = active
+    report["allowed_violations"] = allowed
+    report["ok"] = not active
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit",
+        description="Static serving-graph audit over a PackedModel "
+                    "artifact (compile-time eq.-14 proof).")
+    ap.add_argument("--packed", required=True,
+                    help="PackedModel artifact directory")
+    ap.add_argument("--config", default=None,
+                    help="model-zoo config name (default: inferred from "
+                         "the artifact's leaf paths)")
+    ap.add_argument("--out", default=None,
+                    help="write AUDIT.json here (default: stdout only)")
+    ap.add_argument("--allowlist", default=None,
+                    help="allowlist JSON (default: packaged "
+                         "allowlist.json)")
+    ap.add_argument("--skip", action="append", default=[],
+                    choices=["graph", "hbm", "recompile", "vmem"],
+                    help="skip a check (repeatable; for debugging)")
+    args = ap.parse_args(argv)
+
+    report = run_audit(args.packed, config=args.config,
+                       allowlist_path=args.allowlist, skip=args.skip)
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(report, fh, indent=2, default=_json_default)
+        print(f"wrote {args.out}")
+
+    from repro.launch.report import audit_table
+    print(audit_table(report))
+    return 0 if report["ok"] else 1
+
+
+def _json_default(obj):
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, tuple):
+        return list(obj)
+    raise TypeError(f"not JSON serializable: {type(obj)}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

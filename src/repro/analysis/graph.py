@@ -1,0 +1,259 @@
+"""Dense-inflation detection over traced serve graphs.
+
+THE invariant (PR 2→4): a quantized leaf's HBM-resident form is the
+bit-packed uint32 word operand; its full dense ``[Kd, N]`` (or ``[V, D]``)
+float weight must never be materialized inside a decode/serve graph.  The
+exact historical failure: the tied LM head used to dequant-then-dot,
+inflating the whole ``[V, D]`` embedding matrix every decode step — PR 4
+replaced it with the fused transposed kernel, but nothing *prevents* a
+regression except a bench row happening to cover the path.
+
+This module proves the invariant statically: trace a serve entry point to
+its jaxpr (with the ``pallas`` kernel backend, so the fused routes appear
+as opaque ``pallas_call`` eqns whose operands stay packed) and walk every
+equation — including ``pjit`` / ``scan`` / ``while`` / ``cond`` bodies,
+but *not* Pallas kernel bodies, whose in-VMEM tile dequant is the blessed
+mechanism — for codebook-gather ops whose output is a registered leaf's
+dense shape.  A hit means the graph rebuilt the dense weight (the
+dequant-then-dot pattern); whether it feeds a ``dot_general`` is reported
+alongside.
+
+Known, documented exceptions (e.g. MoE expert stacks, which are einsum
+operands dequantized in-jit — ``PackedLayout.shape`` is set) are handled
+by the audit allowlist, not here: this module reports every
+materialization it finds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+
+# Primitives that materialize a dequantized tensor from a (small)
+# codebook: jnp indexing / jnp.take lower to gather.
+_GATHER_PRIMS = {"gather", "take", "dynamic_gather"}
+
+# Pass-through ops a materialized weight may flow through before the
+# contraction (used only for the feeds-dot annotation).
+_PASSTHROUGH = {"convert_element_type", "reshape", "transpose",
+                "broadcast_in_dim", "squeeze", "slice", "copy",
+                "stop_gradient", "mul", "add", "sub", "div"}
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseInflation:
+    """One dense-weight materialization found in a traced graph."""
+
+    leaf: str              # serving-tree path of the packed leaf
+    shape: Tuple[int, ...]  # the materialized dense shape
+    primitive: str         # the materializing primitive (gather family)
+    feeds_dot: bool        # flows into a dot_general in the same subjaxpr
+
+    def describe(self) -> str:
+        dot = "feeds dot_general" if self.feeds_dot else "dot feed unproven"
+        return (f"{self.leaf}: dense {'×'.join(map(str, self.shape))} "
+                f"materialized by `{self.primitive}` ({dot})")
+
+
+def _walk_tree(tree: Any, path: str, out: Dict[str, dict]) -> None:
+    if isinstance(tree, dict):
+        for key, val in tree.items():
+            if isinstance(key, str) and key.endswith("_layout") \
+                    and f"{key[:-7]}_pidx" in tree:
+                name = key[:-7]
+                out[f"{path}['{name}']"] = {
+                    "layout": val,
+                    "pidx_shape": tuple(tree[f"{name}_pidx"].shape),
+                }
+            elif isinstance(val, (dict, tuple, list)):
+                _walk_tree(val, f"{path}['{key}']", out)
+    elif isinstance(tree, (tuple, list)):
+        for i, val in enumerate(tree):
+            _walk_tree(val, f"{path}[{i}]", out)
+
+
+def protected_leaves(serving_params: Any) -> Dict[str, dict]:
+    """Packed leaves of a ``serving_params(packed=True)`` tree and the
+    dense shapes their decode would materialize.
+
+    Returns leaf path → {"layout", "pidx_shape", "dense_shapes"} where
+    ``dense_shapes`` covers the 2-D packed view ``(kd, n)``, the
+    per-group original shape (``layout.shape``, e.g. MoE ``[E, D, F]``),
+    and their grouped variants with the leading stacked-layer axis.
+    """
+    found: Dict[str, dict] = {}
+    _walk_tree(serving_params, "", found)
+    for info in found.values():
+        lay = info["layout"]
+        shapes = {(lay.kd, lay.n)}
+        if lay.shape is not None:
+            shapes.add(tuple(lay.shape))
+        if len(info["pidx_shape"]) == 3:        # grouped (stacked layers)
+            g = info["pidx_shape"][0]
+            for s in list(shapes):
+                shapes.add((g,) + s)
+        info["dense_shapes"] = shapes
+    return found
+
+
+def _sub_jaxprs(eqn) -> List[Any]:
+    """Inner jaxprs of an equation — pjit/scan/while/cond/custom calls.
+    Pallas kernel bodies are deliberately excluded: their in-VMEM tile
+    dequant is the blessed fused mechanism, not an inflation."""
+    if eqn.primitive.name == "pallas_call":
+        return []
+    subs: List[Any] = []
+    for val in eqn.params.values():
+        vals = val if isinstance(val, (list, tuple)) else (val,)
+        for v in vals:
+            if hasattr(v, "jaxpr"):             # ClosedJaxpr
+                subs.append(v.jaxpr)
+            elif hasattr(v, "eqns"):            # raw Jaxpr
+                subs.append(v)
+    return subs
+
+
+def _taint_of(taint: Dict[int, set], vars_) -> set:
+    out: set = set()
+    for v in vars_:
+        if hasattr(v, "val"):                   # Literal
+            continue
+        out |= taint.get(id(v), set())
+    return out
+
+
+def _seed_taint(jaxpr, args: Sequence[Any],
+                protected: Dict[str, dict]) -> Dict[int, set]:
+    """Top-jaxpr invar → {leaf} for every protected leaf's ``_pidx`` /
+    ``_cb`` argument array.  Taint flows through equations (and into
+    scan/pjit bodies positionally), so a codebook gather deep inside the
+    stack is attributed to the leaf whose arrays actually feed it —
+    shape-only attribution collides (e.g. a flattened MoE expert stack
+    dequants to the same [96, 48] as a dense MLP's ``w_out``)."""
+    flat = jax.tree_util.tree_flatten_with_path(tuple(args))[0]
+    paths = [jax.tree_util.keystr(p) for p, _ in flat]
+    taint: Dict[int, set] = {}
+    if len(paths) != len(jaxpr.invars):
+        return taint                             # fall back to shape-only
+    suffix_to_leaf = {}
+    for leaf in protected:
+        head, name = leaf.rsplit("['", 1)
+        for kind in ("_pidx", "_cb"):
+            suffix_to_leaf[f"{head}['{name[:-2]}{kind}']"] = leaf
+    for i, path in enumerate(paths):
+        for suffix, leaf in suffix_to_leaf.items():
+            if path.endswith(suffix):
+                taint.setdefault(id(jaxpr.invars[i]), set()).add(leaf)
+    return taint
+
+
+def _feeds_dot(jaxpr, start_var) -> bool:
+    """True if ``start_var`` flows into a dot_general / pallas_call in
+    this subjaxpr, possibly through pass-through elementwise ops."""
+    frontier = {id(start_var)}
+    seen = set()
+    changed = True
+    while changed:
+        changed = False
+        for eqn in jaxpr.eqns:
+            if id(eqn) in seen:
+                continue
+            if any(id(v) in frontier for v in eqn.invars
+                   if not hasattr(v, "val")):      # skip Literals
+                if eqn.primitive.name in ("dot_general", "pallas_call"):
+                    return True
+                seen.add(id(eqn))
+                if eqn.primitive.name in _PASSTHROUGH:
+                    frontier.update(id(v) for v in eqn.outvars)
+                    changed = True
+    return False
+
+
+def _scan_jaxpr(jaxpr, shape_index: Dict[Tuple[int, ...], List[str]],
+                hits: List[DenseInflation],
+                taint: Dict[int, set]) -> None:
+    for eqn in jaxpr.eqns:
+        in_taint = _taint_of(taint, eqn.invars)
+        if eqn.primitive.name in _GATHER_PRIMS:
+            for outvar in eqn.outvars:
+                aval = outvar.aval
+                shape = tuple(getattr(aval, "shape", ()))
+                dtype = getattr(aval, "dtype", None)
+                # Only float materializations count — an int array of the
+                # leaf shape is the unpack intermediate (4 B/weight index
+                # inflation is caught by the HBM parameter audit instead).
+                if dtype is None or dtype.kind != "f":
+                    continue
+                candidates = shape_index.get(shape, ())
+                if not candidates:
+                    continue
+                # Taint disambiguates same-shape leaves; an untainted hit
+                # (fallback) charges every shape candidate.
+                attributed = [l for l in candidates if l in in_taint] \
+                    or list(candidates)
+                for leaf in attributed:
+                    hits.append(DenseInflation(
+                        leaf=leaf, shape=shape,
+                        primitive=eqn.primitive.name,
+                        feeds_dot=_feeds_dot(jaxpr, outvar)))
+        for sub in _sub_jaxprs(eqn):
+            inner: Dict[int, set] = {}
+            # scan/pjit sub-jaxpr invars align with eqn invars
+            # (consts+carry+xs); on a length mismatch (e.g. while's
+            # cond/body consts) align the shared tail (the carry).
+            pairs = (zip(sub.invars, eqn.invars)
+                     if len(sub.invars) == len(eqn.invars)
+                     else zip(reversed(sub.invars), reversed(eqn.invars)))
+            for iv, ov in pairs:
+                t = _taint_of(taint, [ov])
+                if t:
+                    inner[id(iv)] = t
+            _scan_jaxpr(sub, shape_index, hits, inner)
+        if in_taint:
+            for ov in eqn.outvars:
+                taint[id(ov)] = taint.get(id(ov), set()) | in_taint
+
+
+def find_dense_inflations(fn: Callable, args: Sequence[Any],
+                          protected: Dict[str, dict]
+                          ) -> List[DenseInflation]:
+    """Trace ``fn(*args)`` and report every dense materialization of a
+    protected leaf.  ``protected`` is :func:`protected_leaves` output."""
+    shape_index: Dict[Tuple[int, ...], List[str]] = {}
+    for leaf, info in protected.items():
+        for shape in info["dense_shapes"]:
+            shape_index.setdefault(tuple(shape), []).append(leaf)
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    hits: List[DenseInflation] = []
+    taint = _seed_taint(jaxpr.jaxpr, args, protected)
+    _scan_jaxpr(jaxpr.jaxpr, shape_index, hits, taint)
+    # de-dup (scan bodies repeat per stack; one report per leaf+shape+prim)
+    uniq: Dict[Tuple, DenseInflation] = {}
+    for h in hits:
+        key = (h.leaf, h.shape, h.primitive)
+        if key not in uniq or (h.feeds_dot and not uniq[key].feeds_dot):
+            uniq[key] = h
+    return sorted(uniq.values(), key=lambda h: (h.leaf, h.shape))
+
+
+def trace_backend(backend: str = "pallas"):
+    """Context manager pinning ``REPRO_KERNEL_BACKEND`` while tracing —
+    the auditor traces the *production* kernel routes (fused Pallas
+    calls) even on CPU; tracing never compiles Mosaic, so this is safe
+    off-TPU."""
+    import contextlib
+
+    @contextlib.contextmanager
+    def _ctx():
+        prev = os.environ.get("REPRO_KERNEL_BACKEND")
+        os.environ["REPRO_KERNEL_BACKEND"] = backend
+        try:
+            yield
+        finally:
+            if prev is None:
+                os.environ.pop("REPRO_KERNEL_BACKEND", None)
+            else:
+                os.environ["REPRO_KERNEL_BACKEND"] = prev
+    return _ctx()

@@ -1,0 +1,135 @@
+"""Per-parameter HBM byte audit over compiled HLO — eq. 14 checked
+against what actually executes.
+
+``launch/hlo_analysis.py`` historically only attributed collective bytes;
+its :func:`~repro.launch.hlo_analysis.entry_parameters` extension (this
+PR) parses the ENTRY computation's ``parameter(i)`` instructions out of a
+compiled module.  This module maps those parameters back to serving-tree
+leaves (jax flattens jit arguments in ``tree_flatten`` order, so entry
+parameter *i* IS flat leaf *i*) and proves, per packed leaf:
+
+* the leaf's **only** HBM-resident form is the uint32 word operand —
+  exactly ``prod(word_shape) · 4`` bytes, i.e. ``bits_per_index(K)/8``
+  bytes per weight (plus lane padding when the packed axis is not a
+  multiple of ``lanes``; zero on the committed fixtures);
+* the word operand is **live** (read by the computation) — a dead packed
+  input means the graph got the weight some other way;
+* **no float parameter** of the leaf's dense shape exists — the dense
+  weight is never an HBM input (the regression ``serving_params`` could
+  reintroduce by emitting both layouts).
+
+The compile runs on the CPU (ref-backend) graph: parameter identity and
+layout are backend-independent — the packed tree is the same HBM input
+set the TPU graph consumes — and CI has no TPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.compression import bits_per_index
+from repro.launch import hlo_analysis
+
+
+def _leaf_paths(args: Sequence[Any]) -> List[str]:
+    flat = jax.tree_util.tree_flatten_with_path(tuple(args))[0]
+    return [jax.tree_util.keystr(path) for path, _ in flat]
+
+
+def _pidx_suffix(leaf_path: str) -> str:
+    """Protected-leaf path → the keystr suffix of its ``_pidx`` leaf.
+    ``"['stacks'][0]['mixer']['wk']"`` → ``"['stacks'][0]['mixer']['wk_pidx']"``."""
+    head, name = leaf_path.rsplit("['", 1)
+    return f"{head}['{name[:-2]}_pidx']"
+
+
+def audit_entry_hbm(fn, args: Sequence[Any], protected: Dict[str, dict],
+                    *, entry: str = "entry") -> Dict[str, Any]:
+    """Compile ``fn(*args)`` and audit its entry parameters.
+
+    ``protected`` is :func:`repro.analysis.graph.protected_leaves` output
+    for the serving tree inside ``args``.  Returns ``{"entry", "rows",
+    "violations", "packed_input_bytes", "float_input_bytes"}`` where each
+    row is one packed leaf's byte accounting and each violation is a
+    ``{"check", "subject", "detail"}`` dict.
+    """
+    text = jax.jit(fn).lower(*args).compile().as_text()
+    params = hlo_analysis.entry_parameters(text, on_unknown="raise")
+    paths = _leaf_paths(args)
+    if len(params) != len(paths):
+        raise RuntimeError(
+            f"{entry}: HLO entry has {len(params)} parameters but the "
+            f"argument tree has {len(paths)} leaves — parameter "
+            f"attribution would be wrong")
+    by_index = {p["index"]: p for p in params}
+
+    dense_shapes: Dict[tuple, str] = {}
+    for leaf, info in protected.items():
+        for shape in info["dense_shapes"]:
+            dense_shapes[tuple(shape)] = leaf
+
+    rows: List[Dict[str, Any]] = []
+    violations: List[Dict[str, str]] = []
+    packed_bytes = 0.0
+    for leaf, info in sorted(protected.items()):
+        suffix = _pidx_suffix(leaf)
+        idxs = [i for i, p in enumerate(paths) if p.endswith(suffix)]
+        if len(idxs) != 1:
+            violations.append({
+                "check": "hbm-bytes", "subject": leaf,
+                "detail": f"{entry}: expected exactly one {suffix} "
+                          f"argument leaf, found {len(idxs)}"})
+            continue
+        prm = by_index[idxs[0]]
+        lay = info["layout"]
+        groups = (info["pidx_shape"][0]
+                  if len(info["pidx_shape"]) == 3 else 1)
+        weights = groups * lay.kd * lay.n
+        expected = 4 * groups * int(np.prod(lay.word_shape))
+        bpw = prm["bytes"] / weights
+        exact = bits_per_index(lay.k) / 8
+        row = {"path": leaf, "entry": entry, "param_index": prm["index"],
+               "hlo_dtype": prm["dtype"], "hlo_shape": prm["shape"],
+               "hbm_bytes": prm["bytes"], "weights": weights,
+               "bytes_per_weight": bpw, "expected_bytes_per_weight": exact,
+               "uses": prm["uses"], "k": lay.k, "bits": lay.bits}
+        rows.append(row)
+        packed_bytes += prm["bytes"]
+        if prm["dtype"] != "u32" or prm["bytes"] != expected:
+            violations.append({
+                "check": "hbm-bytes", "subject": leaf,
+                "detail": f"{entry}: packed operand is "
+                          f"{prm['dtype']}{list(prm['shape'])} = "
+                          f"{prm['bytes']:.0f} B; layout implies u32 "
+                          f"words = {expected} B"})
+        elif bpw != exact:
+            violations.append({
+                "check": "hbm-padding", "subject": leaf,
+                "detail": f"{entry}: {bpw:.4f} B/weight from lane "
+                          f"padding (eq.-14 exact is {exact:.4f}); pad "
+                          f"the leaf or allowlist it"})
+        if prm["uses"] == 0:
+            violations.append({
+                "check": "hbm-dead-operand", "subject": leaf,
+                "detail": f"{entry}: packed word operand is an unused "
+                          f"entry parameter — the graph is not reading "
+                          f"the packed layout"})
+
+    float_bytes = 0.0
+    for i, prm in enumerate(params):
+        if not prm["dtype"].startswith(("f", "bf")):
+            continue
+        float_bytes += prm["bytes"]
+        hit = dense_shapes.get(tuple(prm["shape"]))
+        if hit is not None:
+            violations.append({
+                "check": "dense-weight-input", "subject": hit,
+                "detail": f"{entry}: float parameter {prm['index']} "
+                          f"{prm['dtype']}{list(prm['shape'])} matches "
+                          f"this packed leaf's dense shape — the dense "
+                          f"weight is HBM-resident ({paths[i]})"})
+    return {"entry": entry, "rows": rows, "violations": violations,
+            "packed_input_bytes": packed_bytes,
+            "float_input_bytes": float_bytes}

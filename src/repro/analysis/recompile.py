@@ -1,0 +1,164 @@
+"""Recompile gate: jit-cache growth auditing around the engine step loop.
+
+The engine's fixed-shape contract (PR 5) says admission, completion and
+preemption never retrace a device call — dead slots are masked, slot
+indices stay traced, prefill shapes depend only on the prompt length.
+``test_engine`` used to assert this ad hoc on the decode cache alone;
+this module promotes it into a reusable analyzer covering **every**
+device call the step loop makes (decode+sample, prefill, prefill-sample,
+page commit) and ships a canned scenario —
+:func:`audit_engine_recompiles` — that the audit CLI runs against an
+artifact: warm up the shared jit caches, then drive a fresh engine
+through admission, chunked prefill, completion AND page-pressure
+preemption while asserting zero cache growth.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Dict, Mapping, Optional, Union
+
+import numpy as np
+
+
+class RecompileViolation(AssertionError):
+    """A watched jit cache grew beyond its budget during a scenario."""
+
+
+def _as_counts_fn(source: Any) -> Callable[[], Dict[str, int]]:
+    """Normalize a counts source: a zero-arg callable returning
+    ``{name: count}`` (e.g. ``Engine.trace_counts``), or a mapping of
+    name → jitted function / zero-arg int callable."""
+    if isinstance(source, Mapping):
+        probes = {}
+        for name, fn in source.items():
+            if hasattr(fn, "_cache_size"):
+                probes[name] = fn._cache_size
+            elif callable(fn):
+                probes[name] = fn
+            else:
+                raise TypeError(f"{name}: not a jitted fn or callable")
+        return lambda: {n: int(p()) for n, p in probes.items()}
+    if hasattr(source, "_cache_size"):      # a single jitted function
+        return lambda: {"jit": int(source._cache_size())}
+    if callable(source):
+        return lambda: {k: int(v) for k, v in source().items()}
+    raise TypeError("counts source must be a callable, mapping, or jit fn")
+
+
+class RecompileAuditor:
+    """Snapshot jit-cache entry counts, run a scenario, assert no growth.
+
+    ::
+
+        aud = RecompileAuditor(engine.trace_counts)
+        with aud.frozen("steady-state decode"):
+            engine.run(requests)
+
+    ``budget`` (per check) allows bounded growth — e.g. ``{"decode": 1}``
+    for a scenario that legitimately compiles the step once.  Growth in
+    any *other* watched cache still raises.
+    """
+
+    def __init__(self, counts: Any):
+        self._counts = _as_counts_fn(counts)
+        self._base: Optional[Dict[str, int]] = None
+
+    def snapshot(self) -> Dict[str, int]:
+        self._base = dict(self._counts())
+        return dict(self._base)
+
+    def delta(self) -> Dict[str, int]:
+        if self._base is None:
+            raise RuntimeError("snapshot() before delta()")
+        now = self._counts()
+        return {k: now[k] - self._base.get(k, 0) for k in now}
+
+    def check(self, label: str = "scenario",
+              budget: Union[int, Mapping[str, int], None] = None
+              ) -> Dict[str, int]:
+        """Raise :class:`RecompileViolation` if any watched cache grew
+        beyond its budget (default 0); returns the delta otherwise."""
+        delta = self.delta()
+        if isinstance(budget, Mapping):
+            allowed = lambda k: int(budget.get(k, 0))  # noqa: E731
+        else:
+            allowed = lambda k: int(budget or 0)       # noqa: E731
+        grew = {k: d for k, d in delta.items() if d > allowed(k)}
+        if grew:
+            detail = ", ".join(f"{k}: +{d} (budget {allowed(k)})"
+                               for k, d in sorted(grew.items()))
+            raise RecompileViolation(
+                f"{label}: jit caches grew during the scenario — {detail}. "
+                f"The step loop retraced; check for shape- or "
+                f"dtype-varying arguments.")
+        return delta
+
+    @contextlib.contextmanager
+    def frozen(self, label: str = "scenario",
+               budget: Union[int, Mapping[str, int], None] = None):
+        self.snapshot()
+        yield self
+        self.check(label, budget)
+
+
+def audit_engine_recompiles(params, cfg, *, n_slots: int = 2,
+                            page_size: int = 8, max_seq: int = 64,
+                            vocab: Optional[int] = None) -> Dict[str, Any]:
+    """Prove the engine step loop never retraces, on a scenario that
+    actually exercises admission, chunked prefill, completion and
+    page-pressure preemption.
+
+    Two passes with identical request shapes: a warmup engine populates
+    the shared jit caches, then a **fresh** engine replays the scenario
+    under a frozen :class:`RecompileAuditor` — any cache growth means a
+    step-loop code path (not a new shape) triggered a retrace.  Raises
+    :class:`RecompileViolation` on growth; returns the evidence dict
+    ``{"counts", "delta", "events"}`` and asserts the scenario really
+    contained admissions, completions and ≥1 preemption (an audit that
+    never preempted proves nothing about preemption).
+    """
+    from repro.engine.engine import Engine
+    from repro.engine.scheduler import Request
+
+    if vocab is None:
+        vocab = cfg.vocab
+    rng = np.random.default_rng(0)
+    pages_per_slot = -(-max_seq // page_size)
+    # Pool sized so each request fits alone but two running slots
+    # collide mid-generation → guaranteed stall → preemption.
+    n_pages = pages_per_slot
+    long_total = max_seq - page_size // 2
+
+    def scenario():
+        prompt_len = 2 * page_size
+        new = long_total - prompt_len
+        return [Request(rid=r,
+                        prompt=rng.integers(0, vocab, prompt_len,
+                                            dtype=np.int64).astype(np.int32),
+                        max_new_tokens=new,
+                        temperature=0.7 if r % 2 else 0.0,
+                        top_k=8 if r % 2 else 0, seed=r)
+                for r in range(3)]
+
+    def drive(engine):
+        return engine.run(scenario())
+
+    mk = lambda: Engine(params, cfg, n_slots=n_slots,  # noqa: E731
+                        page_size=page_size, max_seq=max_seq,
+                        n_pages=n_pages)
+    warm = mk()
+    drive(warm)
+
+    fresh = mk()
+    auditor = RecompileAuditor(fresh.trace_counts)
+    with auditor.frozen("engine admission/completion/preemption loop"):
+        drive(fresh)
+    st = fresh.stats
+    events = {"admitted": st.admitted, "finished": st.finished,
+              "preemptions": st.preemptions, "steps": st.steps}
+    if not (st.admitted >= 3 and st.finished >= 3 and st.preemptions >= 1):
+        raise RuntimeError(
+            f"recompile-audit scenario too weak to prove anything: "
+            f"{events} (needs admissions, completions and a preemption)")
+    return {"counts": fresh.trace_counts(), "delta": auditor.delta(),
+            "events": events}

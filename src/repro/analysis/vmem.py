@@ -1,0 +1,202 @@
+"""Pallas kernel static checks: VMEM footprint + grid/divisibility lint.
+
+A bad (bm, bn, bk) entry in ``dispatch._PACKED_BLOCK_TABLE`` (or a bad
+``REPRO_PACKED_BLOCKS`` override) fails at Mosaic *compile* time on a
+TPU — which CI doesn't have.  This module re-derives, from the same
+BlockSpecs the kernels declare, what Mosaic would be asked to fit:
+
+* per-grid-step VMEM bytes — DMA'd blocks ×2 for the pipeline's double
+  buffering, plus the unpack/dequant intermediates the kernel body
+  creates — checked against a conservative budget (TPU VMEM is ~16 MB
+  per core; see the Pallas guide's memory-space table);
+* lane-divisibility: the word-packed axis's block must be a multiple of
+  ``lanes = 32 // bits`` so uint32 words never straddle a block boundary
+  (``bk`` for the forward kernel and the row-order transposed kernel,
+  ``bn`` for the kd-order transposed kernel — exactly the ValueErrors
+  the kernels raise, surfaced without tracing);
+* tiling hygiene: ``bm % 8`` (f32 sublane), last-dim ``% 128`` (lane)
+  misalignment — warnings, not errors, since Mosaic pads.
+
+Everything here is integer arithmetic over static shapes: it runs on
+CPU, no Mosaic, no TPU.  :func:`audit_block_space` sweeps every block
+config reachable from the autotune surface — each ``_PACKED_BLOCK_TABLE``
+entry plus ``packed_block_sizes``/``packed_block_sizes_t`` evaluated at
+representative serve M values for every packed leaf of an artifact.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from repro.core.compression import PackedLayout, bits_per_index
+from repro.kernels import dispatch
+
+VMEM_BYTES = 16 * 1024 * 1024          # per TPU core (Pallas guide)
+# Leave headroom for Mosaic's own staging + the K-entry LUT replication.
+VMEM_BUDGET = int(0.75 * VMEM_BYTES)
+
+# Decode micro-batch / prefill M values the serve paths actually emit.
+SERVE_M = (1, 8, 64, 256)
+
+KINDS = ("packed_matmul", "packed_matmul_t", "gather")
+
+
+def estimate_vmem_bytes(kind: str, bm: int, bn: int, bk: int, bits: int,
+                        k: int, *, order: str = "kd",
+                        dequant: str = "lut") -> int:
+    """Per-grid-step VMEM bytes a kernel asks Mosaic to resident-fit.
+
+    Mirrors the BlockSpecs in ``kernels/codebook_matmul_packed{,_t}.py``
+    and ``kernels/quantized_gather.py``: DMA'd input/output blocks count
+    ×2 (pipeline double buffering); the in-kernel unpack index tile and
+    dequantized weight tile count once (``dequant="onehot"`` adds the
+    [*, K] one-hot instead of the LUT result).
+    """
+    lanes = 32 // bits
+    f32, u32, i32 = 4, 4, 4
+    if kind == "packed_matmul":
+        # x[bm,bk] · unpack(pidx[bk//lanes, bn]) with cb[1,K] → out[bm,bn]
+        dma = bm * bk * f32 + (bk // lanes) * bn * u32 + k * f32 \
+            + bm * bn * f32
+        tile = (bk, bn)
+    elif kind == "packed_matmul_t":
+        # x[bm,bk] · unpack(pidx).T; word block is [bn//lanes, bk] (kd:
+        # V packed) or [bn, bk//lanes] (row: D packed) — same byte count.
+        dma = bm * bk * f32 + (bn * bk // lanes) * u32 + k * f32 \
+            + bm * bn * f32
+        tile = (bn, bk)
+    elif kind == "gather":
+        # One packed word row [1, bk//lanes] → out row [1, bk]; bm/bn
+        # unused (the grid is one step per token).
+        dma = (bk // lanes) * u32 + k * f32 + bk * f32
+        tile = (1, bk)
+    else:
+        raise ValueError(f"kind={kind!r}; choose from {KINDS}")
+    body = tile[0] * tile[1] * i32                       # unpacked indices
+    if dequant == "onehot":
+        body += tile[0] * tile[1] * k * f32              # one-hot tensor
+    else:
+        body += tile[0] * tile[1] * f32                  # LUT result tile
+    return 2 * dma + body
+
+
+def validate_block_config(kind: str, bm: int, bn: int, bk: int, bits: int,
+                          k: int, *, order: str = "kd",
+                          dequant: str = "lut",
+                          budget: int = VMEM_BUDGET) -> Dict[str, Any]:
+    """Statically lint one block config; returns
+    ``{"ok", "errors", "warnings", "vmem_bytes"}``.  ``errors`` are
+    conditions the kernels reject (lane straddling) or Mosaic cannot fit
+    (VMEM over budget); ``warnings`` are padding inefficiencies.
+    """
+    errors: List[str] = []
+    warnings: List[str] = []
+    lanes = 32 // bits
+    if min(bm, bn, bk) < 1:
+        errors.append(f"non-positive block ({bm},{bn},{bk})")
+    if kind == "packed_matmul" and bk % lanes:
+        errors.append(f"bk={bk} not a multiple of lanes={lanes} "
+                      f"(bits={bits}): words straddle the k-block edge")
+    if kind == "packed_matmul_t":
+        if order == "kd" and bn % lanes:
+            errors.append(f"bn={bn} not a multiple of lanes={lanes} "
+                          f"(bits={bits}): V is the word-packed axis")
+        if order == "row" and bk % lanes:
+            errors.append(f"bk={bk} not a multiple of lanes={lanes} "
+                          f"(bits={bits}): D is the word-packed axis")
+    if kind == "gather" and bk % lanes:
+        errors.append(f"word row of {bk} features not a multiple of "
+                      f"lanes={lanes}")
+    if kind != "gather":
+        if bm % 8:
+            warnings.append(f"bm={bm} not a multiple of the f32 sublane "
+                            f"tile (8) — Mosaic pads the activation block")
+        for name, v in (("bn", bn), ("bk", bk)):
+            if v % 128:
+                warnings.append(f"{name}={v} not 128-lane aligned — "
+                                f"padded tiles waste VPU/MXU width")
+    vmem = estimate_vmem_bytes(kind, bm, bn, bk, bits, k, order=order,
+                               dequant=dequant)
+    if vmem > budget:
+        errors.append(f"~{vmem / 2**20:.1f} MiB/step exceeds the "
+                      f"{budget / 2**20:.1f} MiB VMEM budget "
+                      f"(core has {VMEM_BYTES / 2**20:.0f} MiB)")
+    elif vmem > 0.8 * budget:
+        warnings.append(f"~{vmem / 2**20:.1f} MiB/step is within 20% of "
+                        f"the {budget / 2**20:.1f} MiB VMEM budget")
+    return {"ok": not errors, "errors": errors, "warnings": warnings,
+            "vmem_bytes": vmem}
+
+
+def _leaf_block_configs(leaf: str, lay: PackedLayout
+                        ) -> Iterable[Dict[str, Any]]:
+    """Every (kind, blocks) the dispatch layer could pick for this leaf
+    at the serve M values."""
+    if lay.shape is not None:
+        return                       # dequant-then-dot route — no kernel
+    if lay.order == "row":
+        # Embedding serving layout: fused gather (whole packed row per
+        # token) + the row-order transposed LM-head route (tied models).
+        yield {"kind": "gather", "blocks": (1, 1, lay.n),
+               "m": 1, "order": "row"}
+        for m in SERVE_M:
+            bm, bn, bk = dispatch.packed_block_sizes_t(
+                m, lay.n, lay.kd, lay.bits, "row")
+            yield {"kind": "packed_matmul_t", "blocks": (bm, bn, bk),
+                   "m": m, "order": "row"}
+    else:
+        for m in SERVE_M:
+            bm, bn, bk = dispatch.packed_block_sizes(m, lay.kd, lay.n,
+                                                     lay.bits)
+            yield {"kind": "packed_matmul", "blocks": (bm, bn, bk),
+                   "m": m, "order": "kd"}
+
+
+def audit_block_space(protected: Dict[str, dict],
+                      dequant: str = "lut") -> Dict[str, Any]:
+    """Sweep every block config reachable from the autotune surface.
+
+    ``protected`` is :func:`repro.analysis.graph.protected_leaves`
+    output.  Covers (a) each autotune-table entry verbatim (both the
+    forward and transposed interpretations it serves) and (b) the
+    heuristic's picks for every packed leaf at the serve M values.
+    Returns ``{"rows", "violations"}``; a violation is any config with
+    ``errors`` — a table entry or heuristic output the kernels would
+    reject or Mosaic could not fit.
+    """
+    jobs: List[Dict[str, Any]] = []
+    for (m, kd, n, bits), blocks in dispatch.packed_block_table().items():
+        jobs.append({"kind": "packed_matmul", "blocks": blocks, "m": m,
+                     "order": "kd", "bits": bits, "k": 1 << bits,
+                     "source": f"table[{m},{kd},{n},{bits}]"})
+        lanes = 32 // bits
+        bm, bn, bk = blocks
+        bn_t = max(lanes, bn // lanes * lanes)   # packed_block_sizes_t
+        jobs.append({"kind": "packed_matmul_t", "blocks": (bm, bn_t, bk),
+                     "m": m, "order": "kd", "bits": bits, "k": 1 << bits,
+                     "source": f"table[{m},{kd},{n},{bits}]:t"})
+    for leaf, info in sorted(protected.items()):
+        lay = info["layout"]
+        for job in _leaf_block_configs(leaf, lay):
+            job.update(bits=lay.bits, k=lay.k, source=leaf)
+            jobs.append(job)
+
+    rows: List[Dict[str, Any]] = []
+    violations: List[Dict[str, str]] = []
+    for job in jobs:
+        bm, bn, bk = job["blocks"]
+        res = validate_block_config(job["kind"], bm, bn, bk, job["bits"],
+                                    job["k"], order=job["order"],
+                                    dequant=dequant)
+        rows.append({**job, **res})
+        for err in res["errors"]:
+            violations.append({
+                "check": "vmem-blocks", "subject": job["source"],
+                "detail": f"{job['kind']} blocks ({bm},{bn},{bk}) at "
+                          f"M={job['m']}: {err}"})
+    return {"rows": rows, "violations": violations}
+
+
+def block_table_entries() -> Dict[Tuple[int, int, int, int],
+                                  Tuple[int, int, int]]:
+    """Re-export of the dispatch autotune table (audit CLI convenience)."""
+    return dispatch.packed_block_table()

@@ -1,0 +1,76 @@
+"""The tiny model zoo the committed golden fixtures were generated from.
+
+These configs used to live in ``tests/helpers.py``; the static auditor
+needs them importable from ``src`` (the audit CLI reconstructs the model
+a ``PackedModel`` artifact serves in order to trace its graphs), so they
+live here and the test helpers re-export them.  Changing a config here
+invalidates the fixtures under ``tests/fixtures/`` — regenerate with
+``scripts/make_golden_fixtures.py`` and say so in the commit message.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.compression import PackedModel
+from repro.models.transformer import (LayerKind, ModelConfig, MoESpec,
+                                      SSMSpec, StackSpec)
+
+
+def tiny_cfg(tie: bool = True) -> ModelConfig:
+    """Smallest stack that still exercises every packed route: GQA +
+    dense MLP, tied embeddings (row-packed table → fused gather AND fused
+    transposed LM head)."""
+    return ModelConfig(
+        name="tiny-diff", family="dense", d_model=32, n_heads=4, n_kv=2,
+        head_dim=8, d_ff=64, vocab=96,
+        stacks=(StackSpec(pattern=(LayerKind("gqa", "dense"),), groups=2),),
+        tie_embeddings=tie, q_chunk=8, kv_chunk=8, remat=False)
+
+
+def mixed_cfg(tie: bool) -> ModelConfig:
+    """Tiny mixed stack: gqa+dense-MLP, ssm (no MLP), gqa+MoE — every
+    mixer/MLP kind the full-model qleaf layout must cover on CPU."""
+    return ModelConfig(
+        name="mixed-qleaf", family="hybrid", d_model=48, n_heads=4, n_kv=2,
+        head_dim=12, d_ff=96, vocab=160,
+        stacks=(StackSpec(pattern=(LayerKind("gqa", "dense"),
+                                   LayerKind("ssm", "none")), groups=2),
+                StackSpec(pattern=(LayerKind("gqa", "moe"),), groups=1)),
+        tie_embeddings=tie,
+        moe=MoESpec(n_experts=4, top_k=2, n_shared=1, d_ff_expert=24,
+                    capacity_factor=4.0),
+        ssm=SSMSpec(d_inner=96, head_p=16, state_n=12, conv_w=4, chunk=8),
+        q_chunk=8, kv_chunk=8, remat=False)
+
+
+CONFIGS = {
+    "tiny": lambda: tiny_cfg(tie=True),
+    "tiny-untied": lambda: tiny_cfg(tie=False),
+    "mixed": lambda: mixed_cfg(tie=False),
+    "mixed-tied": lambda: mixed_cfg(tie=True),
+}
+
+
+def infer_config(pm: PackedModel, name: Optional[str] = None
+                 ) -> tuple[str, ModelConfig]:
+    """(config name, ModelConfig) for an artifact.
+
+    ``name`` (a :data:`CONFIGS` key) overrides; otherwise the choice is
+    read off the artifact's leaf paths — the mixed stack has SSM leaves
+    at ``pos1``, an untied model stores ``head_w``.  This covers every
+    committed fixture; artifacts from other configs must pass
+    ``--config`` explicitly.
+    """
+    if name is not None:
+        if name not in CONFIGS:
+            raise ValueError(f"unknown config {name!r}; "
+                             f"choose from {sorted(CONFIGS)}")
+        return name, CONFIGS[name]()
+    paths = list(pm.packed) + list(pm.dense)
+    mixed = any("'pos1'" in p for p in paths)
+    tied = not any("'head_w'" in p for p in paths)
+    if mixed:
+        key = "mixed-tied" if tied else "mixed"
+    else:
+        key = "tiny" if tied else "tiny-untied"
+    return key, CONFIGS[key]()

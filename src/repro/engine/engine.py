@@ -200,6 +200,19 @@ class Engine:
         one engine must never add another)."""
         return int(self._decode._cache_size())
 
+    def trace_counts(self) -> Dict[str, int]:
+        """Jit-cache entry counts for every device call the step loop
+        makes.  These are the module-level shared jits, so the counts are
+        process-wide; ``repro.analysis.recompile.RecompileAuditor``
+        snapshots them around a scenario to prove admission / completion
+        / preemption never trigger a retrace."""
+        return {
+            "decode": int(self._decode._cache_size()),
+            "prefill": int(self._prefill._cache_size()),
+            "sample": int(self._sample._cache_size()),
+            "commit": int(_COMMIT._cache_size()),
+        }
+
     def run(self, requests: Optional[List[Request]] = None,
             max_steps: int = 100_000) -> Dict[int, np.ndarray]:
         """Drive steps until queue and slots drain; returns rid → tokens."""

@@ -84,6 +84,14 @@ _PACKED_BLOCK_TABLE: Dict[Tuple[int, int, int, int],
 }
 
 
+def packed_block_table() -> Dict[Tuple[int, int, int, int],
+                                 Tuple[int, int, int]]:
+    """The exact-shape autotune entries (copy).  Public so the static
+    auditor (``repro.analysis.vmem``) can lint every committed entry —
+    a bad one otherwise only fails at Mosaic compile time on a TPU."""
+    return dict(_PACKED_BLOCK_TABLE)
+
+
 def _round_up(v: int, mult: int) -> int:
     return -(-v // mult) * mult
 

@@ -23,15 +23,31 @@ spec's "operand sizes"):
 from __future__ import annotations
 
 import re
+import warnings
 from collections import defaultdict
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+# Bytes per element.  Sub-byte and FP8 types matter here: the packed
+# serving artifacts feed u32 words today, but quantized KV caches and
+# entropy-coded artifacts (ROADMAP) will surface u4/f8 operands — and an
+# audit that silently counts them as 0 bytes under-reports HBM traffic.
+_DTYPE_BYTES: Dict[str, float] = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f4e2m1fn": 0.5,
+    "f8e3m4": 1, "f8e4m3": 1, "f8e4m3fn": 1, "f8e4m3b11fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e5m2": 1, "f8e5m2fnuz": 1, "f8e8m0fnu": 1,
+    "c64": 8, "c128": 16,
 }
+# Shape-like tokens that legitimately carry no byte count.
+_BYTELESS_TYPES = {"token", "opaque"}
 
-_SHAPE_RE = re.compile(r"([a-z]+\d*)\[([\d,]*)\]")
+# Full dtype token (letters+digits, e.g. ``f8e4m3fn``) directly before
+# ``[dims]``.  The pre-fix pattern ``[a-z]+\d*`` stopped at the first
+# letter-digit alternation, so ``f8e4m3fn[...]`` parsed as dtype ``fn``
+# → unknown → silently 0 bytes.
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([\d,]*)\]")
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 # %name = <type> opcode(...)
@@ -39,9 +55,12 @@ _INSTR_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+?)(?:\.\d+)?\(")
 
 
-def _shape_bytes(dtype: str, dims: str) -> int:
+def _shape_bytes(dtype: str, dims: str,
+                 unknown: Optional[Set[str]] = None) -> float:
     if dtype not in _DTYPE_BYTES:
-        return 0
+        if unknown is not None and dtype not in _BYTELESS_TYPES:
+            unknown.add(dtype)
+        return 0.0
     n = 1
     if dims:
         for d in dims.split(","):
@@ -49,8 +68,27 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return n * _DTYPE_BYTES[dtype]
 
 
-def _all_shape_bytes(s: str) -> List[int]:
-    return [_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(s)]
+def _all_shape_bytes(s: str, unknown: Optional[Set[str]] = None
+                     ) -> List[float]:
+    return [_shape_bytes(d, dims, unknown)
+            for d, dims in _SHAPE_RE.findall(s)]
+
+
+def _resolve_unknown(unknown: Set[str], on_unknown: str) -> None:
+    """Unknown dtypes must not silently count as 0 bytes: ``"raise"``
+    for audits (under-counting voids the eq.-14 proof), ``"warn"``
+    (default for :func:`analyze`) for exploratory use."""
+    if not unknown:
+        return
+    msg = (f"unrecognized HLO dtypes counted as 0 bytes: "
+           f"{sorted(unknown)} — extend hlo_analysis._DTYPE_BYTES")
+    if on_unknown == "raise":
+        raise ValueError(msg)
+    if on_unknown == "warn":
+        warnings.warn(msg, stacklevel=3)
+    elif on_unknown != "ignore":
+        raise ValueError(f"on_unknown={on_unknown!r}; "
+                         f"choose raise|warn|ignore")
 
 
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*")
@@ -159,8 +197,77 @@ def _call_edges(comps: Dict[str, List[str]]):
     return edges
 
 
-def analyze(text: str) -> Dict:
+_PARAM_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+parameter\((\d+)\)")
+
+
+def entry_parameters(text: str, *, on_unknown: str = "raise") -> List[Dict]:
+    """Parse the ENTRY computation's ``parameter(i)`` instructions.
+
+    Returns, sorted by parameter index, one dict per parameter:
+    ``{"index", "name", "dtype", "shape", "bytes", "uses"}`` — ``uses``
+    counts references to the parameter by the rest of the ENTRY body (0
+    means the input is dead at the top level).  Only the ENTRY block is
+    scanned: subcomputations declare their own ``parameter`` instructions
+    which do not correspond to HBM inputs.  jax jit entries are untupled,
+    so entry parameter *i* is flat argument leaf *i*.
+    """
+    entry_lines: List[str] = []
+    in_entry = False
+    depth = 0
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not in_entry:
+            if re.match(r"^ENTRY\s", line):
+                in_entry = True
+                depth = line.count("{") - line.count("}")
+            continue
+        depth += line.count("{") - line.count("}")
+        if depth <= 0 and "{" not in line:
+            break
+        entry_lines.append(line.strip())
+    if not entry_lines:
+        raise ValueError("no ENTRY computation found in HLO text")
+
+    unknown: Set[str] = set()
+    params: List[Dict] = []
+    body: List[str] = []
+    for line in entry_lines:
+        m = _PARAM_RE.match(line)
+        if m is None:
+            body.append(line)
+            continue
+        name, ty, index = m.group(1), m.group(2), int(m.group(3))
+        if ty.startswith("("):
+            raise ValueError(
+                f"parameter({index}) is tuple-typed ({ty}); the audit "
+                f"needs untupled entry parameters (jax jit default)")
+        shapes = _SHAPE_RE.findall(ty)
+        if len(shapes) != 1:
+            raise ValueError(
+                f"parameter({index}): cannot parse array type {ty!r}")
+        dtype, dims = shapes[0]
+        params.append({
+            "index": index, "name": name, "dtype": dtype,
+            "shape": tuple(int(d) for d in dims.split(",") if d),
+            "bytes": _shape_bytes(dtype, dims, unknown), "uses": 0,
+        })
+    _resolve_unknown(unknown, on_unknown)
+    indices = [p["index"] for p in params]
+    if len(set(indices)) != len(indices):
+        raise ValueError("duplicate parameter indices in ENTRY")
+
+    body_text = "\n".join(body)
+    for p in params:
+        p["uses"] = len(re.findall(
+            r"(?<![\w.])%?" + re.escape(p["name"]) + r"(?![\w.])",
+            body_text))
+    return sorted(params, key=lambda p: p["index"])
+
+
+def analyze(text: str, *, on_unknown: str = "warn") -> Dict:
     """Returns {collective_bytes, collective_breakdown, dot_flops}."""
+    unknown: Set[str] = set()
     comps = _split_computations(text)
     wedges = _while_edges(comps)
     cedges = _call_edges(comps)
@@ -186,14 +293,15 @@ def analyze(text: str) -> Dict:
         for line, op, paren in parsed:
             if not is_internal and op not in _no_hbm_ops:
                 bytes_per_comp[name] += float(
-                    sum(_all_shape_bytes(line[:paren])))
+                    sum(_all_shape_bytes(line[:paren], unknown)))
             base_op = op[:-6] if op.endswith("-start") else op
             if base_op in _COLLECTIVES:
-                out_b = float(sum(_all_shape_bytes(line[:paren])))
+                out_b = float(sum(_all_shape_bytes(line[:paren], unknown)))
                 if base_op == "reduce-scatter":
                     mop = re.search(r"\(\s*(%[\w.\-]+)", line[paren:])
                     opnd_b = (float(sum(_all_shape_bytes(
-                        symtab.get(mop.group(1), "")))) if mop else 0.0)
+                        symtab.get(mop.group(1), ""), unknown))) if mop
+                              else 0.0)
                     size = opnd_b or out_b
                 else:
                     size = out_b
@@ -226,6 +334,7 @@ def analyze(text: str) -> Dict:
     for r in roots:
         walk(r, 1.0, [])
 
+    _resolve_unknown(unknown, on_unknown)
     return {
         "collective_bytes": sum(totals.values()),
         "collective_breakdown": dict(totals),

@@ -107,12 +107,77 @@ def packed_report(directory: str) -> None:
               f"| {r['reason'] or '-'} |")
 
 
+def audit_table(report: dict) -> str:
+    """Human rendering of an ``repro.analysis.audit`` report (the
+    AUDIT.json payload, or a path to one)."""
+    if isinstance(report, str):
+        with open(report) as fh:
+            report = json.load(fh)
+    lines = [f"## §Static audit — {report['artifact']} "
+             f"(config {report['config']})\n"]
+    hbm = report.get("checks", {}).get("hbm", {})
+    if hbm:
+        lines.append("### HBM bytes per weight (compiled-HLO entry "
+                     "parameters; eq.-14 exact = bits/8)\n")
+        lines.append("| leaf | entry | K | bits | HLO operand | B/weight "
+                     "| exact | uses |")
+        lines.append("|---|---|---|---|---|---|---|---|")
+        for entry, res in sorted(hbm.items()):
+            for r in res["rows"]:
+                shape = "×".join(map(str, r["hlo_shape"]))
+                flag = ("" if r["bytes_per_weight"]
+                        == r["expected_bytes_per_weight"] else " ⚠")
+                lines.append(
+                    f"| `{r['path']}` | {entry} | {r['k']} | {r['bits']} "
+                    f"| {r['hlo_dtype']}[{shape}] "
+                    f"| {r['bytes_per_weight']:g}{flag} "
+                    f"| {r['expected_bytes_per_weight']:g} "
+                    f"| {r['uses']} |")
+        lines.append("")
+    rc = report.get("checks", {}).get("recompile")
+    if isinstance(rc, dict) and "events" in rc:
+        ev, ct = rc["events"], rc["counts"]
+        lines.append(f"### Recompile gate — {ev['steps']} steps, "
+                     f"{ev['admitted']} admitted, {ev['finished']} "
+                     f"finished, {ev['preemptions']} preempted: "
+                     f"0 new jit entries "
+                     f"(decode={ct['decode']}, prefill={ct['prefill']}, "
+                     f"sample={ct['sample']}, commit={ct['commit']})\n")
+    vm = report.get("checks", {}).get("vmem")
+    if vm:
+        lines.append(f"### VMEM / block lint — {vm['configs_checked']} "
+                     f"configs checked, {len(vm['warnings'])} warnings\n")
+    allowed = report.get("allowed_violations", [])
+    if allowed:
+        lines.append(f"### Allowlisted exceptions ({len(allowed)})\n")
+        for v in allowed:
+            lines.append(f"- `{v['subject']}` [{v['check']}]: "
+                         f"{v['allowed_reason']}")
+        lines.append("")
+    active = report.get("violations", [])
+    if active:
+        lines.append(f"### VIOLATIONS ({len(active)}) — audit FAILED\n")
+        for v in active:
+            lines.append(f"- `{v['subject']}` [{v['check']}]: "
+                         f"{v['detail']}")
+    else:
+        lines.append("**Audit passed** — 0 violations "
+                     f"({len(allowed)} documented exceptions).")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--packed", default=None, metavar="DIR",
                     help="print the eq.-14 report for this PackedModel "
                          "artifact instead of the dry-run tables")
+    ap.add_argument("--audit", default=None, metavar="AUDIT_JSON",
+                    help="render the human table for an AUDIT.json "
+                         "written by `python -m repro.analysis.audit`")
     args = ap.parse_args()
+    if args.audit:
+        print(audit_table(args.audit))
+        return
     if args.packed:
         packed_report(args.packed)
         return

@@ -25,43 +25,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.zoo import mixed_cfg, tiny_cfg  # noqa: F401 — the
+# fixture-zoo configs moved to src (the audit CLI reconstructs the model
+# an artifact serves); re-exported so every existing test import works.
 from repro.core import CompressionPlan, PackedModel
-from repro.models.transformer import (LayerKind, ModelConfig, MoESpec,
-                                      SSMSpec, StackSpec, decode_step,
-                                      forward, init_params, prefill)
+from repro.models.transformer import (ModelConfig, decode_step, forward,
+                                      init_params, prefill)
 
 # the PR-2-era MLP-only coverage set (pre-qleaf serving)
 MLP_LEGACY = ("w_in", "w_gate", "w_out")
 
 LAYOUTS = ("dense", "uint8", "packed")
 MODES = ("forward", "prefill", "decode")
-
-
-def tiny_cfg(tie: bool = True) -> ModelConfig:
-    """Smallest stack that still exercises every new packed route: GQA +
-    dense MLP, tied embeddings (row-packed table → fused gather AND fused
-    transposed LM head)."""
-    return ModelConfig(
-        name="tiny-diff", family="dense", d_model=32, n_heads=4, n_kv=2,
-        head_dim=8, d_ff=64, vocab=96,
-        stacks=(StackSpec(pattern=(LayerKind("gqa", "dense"),), groups=2),),
-        tie_embeddings=tie, q_chunk=8, kv_chunk=8, remat=False)
-
-
-def mixed_cfg(tie: bool) -> ModelConfig:
-    """Tiny mixed stack: gqa+dense-MLP, ssm (no MLP), gqa+MoE — every
-    mixer/MLP kind the full-model qleaf layout must cover on CPU."""
-    return ModelConfig(
-        name="mixed-qleaf", family="hybrid", d_model=48, n_heads=4, n_kv=2,
-        head_dim=12, d_ff=96, vocab=160,
-        stacks=(StackSpec(pattern=(LayerKind("gqa", "dense"),
-                                   LayerKind("ssm", "none")), groups=2),
-                StackSpec(pattern=(LayerKind("gqa", "moe"),), groups=1)),
-        tie_embeddings=tie,
-        moe=MoESpec(n_experts=4, top_k=2, n_shared=1, d_ff_expert=24,
-                    capacity_factor=4.0),
-        ssm=SSMSpec(d_inner=96, head_p=16, state_n=12, conv_w=4, chunk=8),
-        q_chunk=8, kv_chunk=8, remat=False)
 
 
 def pack_model(params, k: int) -> PackedModel:

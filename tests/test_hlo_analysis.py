@@ -64,3 +64,98 @@ def test_trip_count_fallback_from_condition():
         ', backend_config={"known_trip_count":{"n":"12"}}', "")
     res = H.analyze(text)
     assert res["collective_breakdown"]["all-reduce"] == 128 * 256 * 4 * 12
+
+
+# ---------------------------------------------------------------------------
+# dtype table: fp8/sub-byte types must count real bytes, unknown types
+# must not silently count as 0 (the pre-fix behaviour under-reported HBM)
+# ---------------------------------------------------------------------------
+
+def test_fp8_and_subbyte_dtypes_counted():
+    # the old regex parsed "f8e4m3fn[...]" as dtype "fn" → 0 bytes
+    assert H._shape_bytes("f8e4m3fn", "128,256") == 128 * 256
+    assert H._shape_bytes("bf16", "4,4") == 32
+    assert H._shape_bytes("u4", "64") == 32
+    assert H._shape_bytes("u32", "2,3") == 24
+    # the full-token regex must grab the whole dtype
+    assert H._SHAPE_RE.findall("f8e4m3fn[12,8]{1,0}") == [("f8e4m3fn",
+                                                           "12,8")]
+
+
+def test_fp8_collective_counts_bytes():
+    text = FIXTURE.replace("f32[64,8]{1,0} all-gather",
+                           "f8e4m3fn[64,8]{1,0} all-gather")
+    res = H.analyze(text)
+    assert res["collective_breakdown"]["all-gather"] == 64 * 8  # 1 B/elem
+
+
+def test_unknown_dtype_warns_in_analyze_raises_on_request():
+    import warnings
+
+    import pytest
+    text = FIXTURE.replace("f32[64,8]{1,0} all-gather",
+                           "q3x[64,8]{1,0} all-gather")
+    with warnings.catch_warnings(record=True) as got:
+        warnings.simplefilter("always")
+        H.analyze(text)
+    assert any("q3x" in str(w.message) for w in got)
+    with pytest.raises(ValueError, match="q3x"):
+        H.analyze(text, on_unknown="raise")
+    H.analyze(text, on_unknown="ignore")      # opt-out still available
+
+
+# ---------------------------------------------------------------------------
+# entry_parameters — the HBM audit's data source
+# ---------------------------------------------------------------------------
+
+ENTRY_FIXTURE = """
+HloModule jit_g, entry_computation_layout={(f32[4,8],u32[2,8],f32[16])->f32[4,8]}
+
+%fused_computation (p.0: f32[4,8], p.1: u32[2,8]) -> f32[4,8] {
+  %p.0 = f32[4,8]{1,0} parameter(0)
+  %p.1 = u32[2,8]{1,0} parameter(1)
+  %c = f32[4,8]{1,0} convert(%p.1)
+  ROOT %a = f32[4,8]{1,0} add(%p.0, %c)
+}
+
+ENTRY main.10 {
+  Arg_0.1 = f32[4,8]{1,0} parameter(0)
+  Arg_1.2 = u32[2,8]{1,0} parameter(1)
+  Arg_2.3 = f32[16]{0} parameter(2)
+  fusion.4 = f32[4,8]{1,0} fusion(Arg_0.1, Arg_1.2), kind=kLoop, calls=%fused_computation
+  ROOT add.5 = f32[4,8]{1,0} add(fusion.4, fusion.4)
+}
+"""
+
+
+def test_entry_parameters_parses_entry_only():
+    params = H.entry_parameters(ENTRY_FIXTURE)
+    # the fused computation's parameter(0/1) must NOT appear
+    assert [p["index"] for p in params] == [0, 1, 2]
+    assert params[0]["dtype"] == "f32" and params[0]["shape"] == (4, 8)
+    assert params[0]["bytes"] == 4 * 8 * 4
+    assert params[1]["dtype"] == "u32" and params[1]["bytes"] == 2 * 8 * 4
+    # uses: Arg_0/Arg_1 feed the fusion; Arg_2 is dead
+    assert params[0]["uses"] == 1
+    assert params[1]["uses"] == 1
+    assert params[2]["uses"] == 0
+
+
+def test_entry_parameters_unknown_dtype_raises():
+    import pytest
+    text = ENTRY_FIXTURE.replace("f32[16]{0} parameter(2)",
+                                 "q3x[16]{0} parameter(2)")
+    with pytest.raises(ValueError, match="q3x"):
+        H.entry_parameters(text)
+    assert H.entry_parameters(text, on_unknown="ignore")[2]["bytes"] == 0
+
+
+def test_entry_parameters_on_real_compiled_module():
+    import jax
+    import jax.numpy as jnp
+    f = jax.jit(lambda a, b: a @ b)
+    text = f.lower(jnp.zeros((4, 8)), jnp.zeros((8, 16))).compile().as_text()
+    params = H.entry_parameters(text, on_unknown="raise")
+    assert [p["index"] for p in params] == [0, 1]
+    assert params[0]["shape"] == (4, 8) and params[1]["shape"] == (8, 16)
+    assert all(p["uses"] >= 1 for p in params)
