@@ -24,6 +24,7 @@ workload (accounting strings unchanged in form).
 from __future__ import annotations
 
 import os
+import tempfile
 import time
 
 import jax
@@ -31,7 +32,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CompressionPlan, compression
-from repro.engine import Engine, Request, greedy_generate
+from repro.engine import (Engine, FaultPlan, Request,
+                          ServeSupervisorConfig, greedy_generate,
+                          supervised_serve)
 from repro.models.transformer import (LayerKind, ModelConfig, MoESpec,
                                       SSMSpec, StackSpec, init_params)
 
@@ -128,19 +131,94 @@ def _bench_cell(name, params, cfg, weight_note):
     return (name, dt_e * 1e6, derived)
 
 
+def _bench_cell_faulted(name, params, cfg, weight_note):
+    """The throughput cell again, under ~2% injected faults served via
+    ``supervised_serve`` — measures what fault tolerance costs: snapshot
+    cadence, restore replay, and quarantined work, against the same
+    one-shot baseline at the same HBM budget."""
+    n_req = 6 if FAST else 16
+    prompt_len, gen_max = 16, (8 if FAST else 24)
+    n_slots, page_size = 4, 8
+    prompts, gens, reqs = _workload(cfg, n_req, prompt_len, gen_max)
+    max_seq = prompt_len + gen_max
+    pages_per_slot = -(-max_seq // page_size)
+    n_pages = n_slots * pages_per_slot
+
+    def build():
+        return Engine(params, cfg, n_slots=n_slots, page_size=page_size,
+                      max_seq=max_seq, n_pages=n_pages,
+                      token_budget=n_slots + prompt_len)
+
+    # clean warmup run: compiles everything and measures the fault-free
+    # step count the 2% fault rate is calibrated against
+    clean = build()
+    clean.run([Request(rid=r.rid, prompt=r.prompt,
+                       max_new_tokens=r.max_new_tokens) for r in reqs])
+    total_steps = clean.stats.steps
+    n_faults = max(5, total_steps * 2 // 100)   # ≥1 of each kind
+
+    def faulted_run():
+        plan = FaultPlan.generate(17, horizon=max(total_steps - 4, 8),
+                                  n_slots=n_slots, n_events=n_faults)
+        with tempfile.TemporaryDirectory() as td:
+            sup = ServeSupervisorConfig(
+                snapshot_dir=td,
+                snapshot_every=max(total_steps // 4, 4),
+                max_restarts=2 * n_faults,
+                max_steps=50 * max(total_steps, 10))
+            outputs, _, report = supervised_serve(
+                build, [Request(rid=r.rid, prompt=r.prompt,
+                                max_new_tokens=r.max_new_tokens)
+                        for r in reqs], sup, injector=plan)
+        return outputs, report
+
+    faulted_run()                                   # warm
+    _one_shot_serve(params, cfg, prompts, gens, n_slots)
+
+    t0 = time.perf_counter()
+    outputs, report = faulted_run()
+    dt_e = time.perf_counter() - t0
+    useful_e = sum(len(v) for v in outputs.values())
+    t0 = time.perf_counter()
+    useful_o = _one_shot_serve(params, cfg, prompts, gens, n_slots)
+    dt_o = time.perf_counter() - t0
+
+    s = report.final_stats
+    tps_e, tps_o = useful_e / dt_e, useful_o / dt_o
+    kv_tokens = n_pages * page_size
+    derived = (f"tok/s={tps_e:.1f} one_shot={tps_o:.1f} "
+               f"(x{tps_e / tps_o:.2f}); occupancy={s['slot_occupancy']:.2f} "
+               f"page_util={s['page_utilization']:.2f} "
+               f"peak={s['page_utilization_max']:.2f}; "
+               f"equal-HBM: slots={n_slots} pages={n_pages}x{page_size} "
+               f"({kv_tokens} KV tokens, == one-shot {n_slots}x{max_seq}); "
+               f"{weight_note}; R={n_req} gen {max(gens)}/{min(gens)} skew; "
+               f"faults={n_faults}/{total_steps} steps (~2%): "
+               f"{report.restarts} restarts {report.kill_restores} kills "
+               f"{report.snapshots} snapshots, finished "
+               f"{len(outputs)}/{n_req}")
+    return (name, dt_e * 1e6, derived)
+
+
 def run():
     rows = []
     cfg = _cfg()
     params = init_params(jax.random.PRNGKey(0), cfg)
     rows.append(_bench_cell("engine_throughput_dense", params, cfg,
                             "weights dense f32 (4 B/weight)"))
+    sp16 = None
     for k in (2, 16):
         packed = _pack(params, k)
         sp = packed.serving_params(packed=True)
+        if k == 16:
+            sp16 = sp
         bits = compression.bits_per_index(k)
         rows.append(_bench_cell(
             f"engine_throughput_K{k}_packed", sp, cfg,
             f"weights bit-packed K={k} ({bits / 8:g} B/weight idx)"))
+    rows.append(_bench_cell_faulted(
+        "engine_throughput_faulted", sp16, cfg,
+        "weights bit-packed K=16 (0.5 B/weight idx)"))
     return rows
 
 

@@ -1,0 +1,124 @@
+"""CI smoke: the fault-tolerance acceptance gate, end to end.
+
+Drives the full packed mixed stack (attention + MLP + MoE + SSM) through
+``supervised_serve`` under a seeded :class:`FaultPlan` containing every
+fault kind — injected decode failure, NaN-poisoned slot, page-pressure
+spike, kill-and-restore, preemption signal — plus one deadline-bound
+request, and asserts the ISSUE acceptance criteria:
+
+* the supervisor never raises;
+* every ``FINISHED`` stream is bit-exact to the one-shot oracle;
+* every other request carries exactly one typed outcome;
+* every planned fault actually fired.
+
+Writes ``CHAOS_report.json`` (plan, outcomes, supervisor counters) for
+the CI artifact upload.  Run by scripts/verify.sh.
+
+    PYTHONPATH=src python scripts/smoke_chaos.py [out.json]
+"""
+import json
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.core import CompressionPlan
+from repro.engine import (Engine, FaultPlan, Outcome, Request,
+                          ServeSupervisorConfig, greedy_generate,
+                          supervised_serve, truncate_at_eos)
+from repro.models.transformer import (LayerKind, ModelConfig, MoESpec,
+                                      SSMSpec, StackSpec, init_params)
+
+K = 16
+SEED = 23
+PROMPT, GEN = 16, 8
+N_REQ, SLOTS = 5, 2
+
+
+def main():
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "CHAOS_report.json"
+    cfg = ModelConfig(
+        name="chaos-smoke", family="hybrid", d_model=48, n_heads=4,
+        n_kv=2, head_dim=12, d_ff=96, vocab=160,
+        stacks=(StackSpec(pattern=(LayerKind("gqa", "dense"),
+                                   LayerKind("ssm", "none")), groups=2),
+                StackSpec(pattern=(LayerKind("gqa", "moe"),), groups=1)),
+        tie_embeddings=True,
+        moe=MoESpec(n_experts=4, top_k=2, n_shared=1, d_ff_expert=24,
+                    capacity_factor=4.0),
+        ssm=SSMSpec(d_inner=96, head_p=16, state_n=12, conv_w=4, chunk=8),
+        q_chunk=8, kv_chunk=8, remat=False)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    plan_c = CompressionPlan.parse(f"adaptive:{K}")
+    qspec = plan_c.build_qspec(params)
+    state = plan_c.init(jax.random.PRNGKey(1), params, qspec)
+    sp = plan_c.pack(params, state, qspec).serving_params(packed=True)
+
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (N_REQ, PROMPT),
+                                 0, cfg.vocab)
+    oracle = np.asarray(greedy_generate(sp, cfg, prompts, GEN)[0])
+    reqs = [Request(rid=r, prompt=np.asarray(prompts[r]),
+                    max_new_tokens=GEN,
+                    deadline_steps=3 if r == N_REQ - 1 else None)
+            for r in range(N_REQ)]
+
+    # horizon well inside the workload's fault-free step count (~25+)
+    # so every scheduled event lands while requests are still in flight
+    fault_plan = FaultPlan.generate(SEED, horizon=18, n_slots=SLOTS)
+    assert all(v >= 1 for v in fault_plan.counts().values()), \
+        "generated plan must contain every fault kind"
+
+    with tempfile.TemporaryDirectory() as snap_dir:
+        sup = ServeSupervisorConfig(snapshot_dir=snap_dir,
+                                    snapshot_every=5, max_restarts=6,
+                                    max_steps=800)
+        outputs, results, report = supervised_serve(
+            lambda: Engine(sp, cfg, n_slots=SLOTS, page_size=8,
+                           max_seq=PROMPT + GEN, n_pages=5,
+                           token_budget=SLOTS + PROMPT),
+            reqs, sup, injector=fault_plan)
+
+    # -- acceptance assertions ----------------------------------------------
+    assert sorted(results) == list(range(N_REQ)), \
+        f"untracked requests: {sorted(results)}"
+    n_finished = 0
+    for rid, res in sorted(results.items()):
+        if res.outcome is Outcome.FINISHED:
+            want = truncate_at_eos(oracle[rid][:GEN], None)
+            np.testing.assert_array_equal(
+                outputs[rid], want,
+                err_msg=f"request {rid}: stream != one-shot oracle "
+                        f"under faults")
+            n_finished += 1
+        else:
+            assert res.detail, f"request {rid}: untyped {res.outcome}"
+    assert n_finished >= 1, "no request survived the chaos schedule"
+    assert not report.aborted, "supervisor exhausted its budget"
+    assert len(fault_plan._fired) == len(fault_plan.events), \
+        f"unfired events: {len(fault_plan.events) - len(fault_plan._fired)}"
+
+    payload = {
+        "seed": SEED,
+        "plan": fault_plan.to_json(),
+        "fault_counts": fault_plan.counts(),
+        "supervisor": report.to_json(),
+        "outcomes": {str(rid): results[rid].to_json()
+                     for rid in sorted(results)},
+        "finished": n_finished,
+        "oracle_bit_exact": True,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    kinds = ", ".join(f"{k}x{v}" for k, v in
+                      sorted(fault_plan.counts().items()))
+    print(f"chaos smoke: {len(fault_plan.events)} injected faults "
+          f"({kinds}) over {N_REQ} requests — {n_finished} finished "
+          f"bit-exact to one-shot, {N_REQ - n_finished} typed "
+          f"({report.restarts} restarts, {report.restores} restores, "
+          f"{report.snapshots} snapshots) — wrote {out_path} — OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -54,6 +54,15 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/smoke_serve_packed.py
 # the one-shot loop's (the full matrix lives in tests/test_engine.py).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/smoke_engine.py
 
+# Fault-tolerance smoke (hard gate): a seeded FaultPlan with every fault
+# kind — injected decode failure, NaN-poisoned slot, page-pressure
+# spike, kill-and-restore, preemption signal — driven through
+# supervised_serve; every FINISHED stream must be bit-exact to the
+# one-shot oracle and every other request typed.  CHAOS_report.json is
+# uploaded next to the audit artifacts by CI.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/smoke_chaos.py \
+    CHAOS_report.json
+
 # Static serving-graph audit (hard gate): compile-time proof of the
 # eq.-14 invariants over both committed golden fixtures — dense-inflation
 # scan of every serve entry's jaxpr (pallas routes traced on CPU, no

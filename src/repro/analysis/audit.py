@@ -106,10 +106,10 @@ def _serve_entries(sp, cfg):
             p, cfg, c, pt, t, pos, al),
         (sp,) + dec)
     sample = (jnp.zeros((b,), jnp.float32), jnp.zeros((b,), jnp.int32),
-              jnp.zeros((b, 2), jnp.uint32))
+              jnp.zeros((b, 2), jnp.uint32), jnp.zeros((b,), bool))
     entries["engine_decode_sample"] = (
-        lambda p, c, pt, t, pos, al, tm, tk, ky: _decode_and_sample(
-            p, cfg, c, pt, t, pos, al, tm, tk, ky),
+        lambda p, c, pt, t, pos, al, tm, tk, ky, po: _decode_and_sample(
+            p, cfg, c, pt, t, pos, al, tm, tk, ky, po),
         (sp,) + dec + sample)
     return entries
 
@@ -211,8 +211,14 @@ def main(argv=None) -> int:
                     help="skip a check (repeatable; for debugging)")
     args = ap.parse_args(argv)
 
-    report = run_audit(args.packed, config=args.config,
-                       allowlist_path=args.allowlist, skip=args.skip)
+    from repro.core.compression import ArtifactError
+    try:
+        report = run_audit(args.packed, config=args.config,
+                           allowlist_path=args.allowlist, skip=args.skip)
+    except ArtifactError as e:
+        # a corrupt artifact is an audit *failure*, not a crash
+        print(f"artifact rejected: {e}", file=sys.stderr)
+        return 1
     if args.out:
         with open(args.out, "w") as fh:
             json.dump(report, fh, indent=2, default=_json_default)

@@ -38,6 +38,7 @@ from repro.core.schemes import (     # noqa: F401
     registered_schemes,
 )
 from repro.core.compression import (  # noqa: F401
+    ArtifactError,
     PackedLayout,
     PackedLeaf,
     PackedModel,

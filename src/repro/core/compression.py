@@ -22,10 +22,12 @@ and what the serving path (``repro.kernels.dispatch`` + ``launch/serve.py
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import math
 import os
 import re
+import warnings
 from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
@@ -34,6 +36,21 @@ import numpy as np
 
 Array = jax.Array
 PyTree = Any
+
+
+class ArtifactError(RuntimeError):
+    """A :class:`PackedModel` artifact is missing, truncated, or fails
+    integrity verification.  The message names the offending leaf/key so
+    an operator knows *which* array is bad, and the serving entry points
+    (``launch/serve.py``, ``repro.analysis.audit``) surface it as a
+    clean load failure instead of a deep numpy traceback — a corrupt
+    artifact must never be half-served."""
+
+
+def _array_sha256(arr: np.ndarray) -> str:
+    """Content hash of one array (dtype/shape are recorded separately in
+    the manifest, so the hash covers exactly the element bytes)."""
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
 
 
 def bits_per_index(k: int) -> int:
@@ -576,22 +593,40 @@ class PackedModel:
     # -- persistence --------------------------------------------------------
 
     def save(self, directory: str) -> str:
-        """Write ``manifest.json`` + ``arrays.npz`` under ``directory``."""
+        """Write ``manifest.json`` + ``arrays.npz`` under ``directory``.
+
+        Manifest **version 2**: every npz key carries its SHA-256 (over
+        element bytes), dtype, and shape, plus artifact-wide totals —
+        :meth:`load` verifies all of it, so a truncated download or a
+        flipped bit fails loudly (``ArtifactError`` naming the leaf)
+        instead of serving garbage logits."""
         os.makedirs(directory, exist_ok=True)
         arrays: Dict[str, np.ndarray] = {}
+        integrity: Dict[str, Dict[str, Any]] = {}
+
+        def add(key: str, arr: np.ndarray):
+            arrays[key] = arr
+            integrity[key] = {"sha256": _array_sha256(arr),
+                              "dtype": str(np.asarray(arr).dtype),
+                              "shape": list(np.shape(arr))}
+
         manifest: Dict[str, Any] = {
-            "version": 1, "scheme": self.scheme_spec, "k": self.k,
+            "version": 2, "scheme": self.scheme_spec, "k": self.k,
             "codebook_entries": self.codebook_entries,
             "bits_ref": self.bits_ref, "packed": [], "dense": [],
         }
         for i, (ks, leaf) in enumerate(sorted(self.packed.items())):
-            arrays[f"p{i}_words"] = leaf.words
-            arrays[f"p{i}_cb"] = leaf.codebook
+            add(f"p{i}_words", leaf.words)
+            add(f"p{i}_cb", leaf.codebook)
             manifest["packed"].append({"path": ks, "shape": list(leaf.shape),
                                        "k": leaf.k, "dtype": leaf.dtype})
         for j, (ks, arr) in enumerate(sorted(self.dense.items())):
-            arrays[f"d{j}"] = arr
+            add(f"d{j}", arr)
             manifest["dense"].append({"path": ks})
+        manifest["arrays"] = integrity
+        manifest["n_arrays"] = len(arrays)
+        manifest["total_elements"] = int(sum(int(np.asarray(a).size)
+                                             for a in arrays.values()))
         np.savez(os.path.join(directory, "arrays.npz"), **arrays)
         with open(os.path.join(directory, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=1)
@@ -599,16 +634,81 @@ class PackedModel:
 
     @classmethod
     def load(cls, directory: str) -> "PackedModel":
-        with open(os.path.join(directory, "manifest.json")) as f:
-            manifest = json.load(f)
-        data = np.load(os.path.join(directory, "arrays.npz"))
+        """Load and verify an artifact.  Version-2 manifests are fully
+        integrity-checked per array; version-1 (pre-integrity) artifacts
+        still load, with a warning.  Any missing/corrupt piece raises
+        :class:`ArtifactError` naming the bad leaf."""
+        man_path = os.path.join(directory, "manifest.json")
+        npz_path = os.path.join(directory, "arrays.npz")
+        try:
+            with open(man_path) as f:
+                manifest = json.load(f)
+        except FileNotFoundError:
+            raise ArtifactError(f"no PackedModel manifest at {man_path}")
+        except ValueError as e:
+            raise ArtifactError(f"unparseable manifest {man_path}: {e}")
+        version = int(manifest.get("version", 1))
+        if version > 2:
+            raise ArtifactError(
+                f"{directory}: manifest version {version} is newer than "
+                f"this reader (knows <= 2)")
+        try:
+            data = np.load(npz_path)
+        except FileNotFoundError:
+            raise ArtifactError(f"no PackedModel arrays at {npz_path}")
+        except Exception as e:   # zipfile.BadZipFile, OSError, ...
+            raise ArtifactError(f"unreadable arrays.npz at {npz_path}: "
+                                f"{e!r}")
+
+        def fetch(key: str, owner: str) -> np.ndarray:
+            if key not in data.files:
+                raise ArtifactError(
+                    f"{directory}: arrays.npz is missing {key!r} "
+                    f"(leaf {owner!r}) — truncated artifact?")
+            try:
+                arr = data[key]
+            except Exception as e:
+                raise ArtifactError(
+                    f"{directory}: cannot decode {key!r} (leaf "
+                    f"{owner!r}): {e!r}")
+            if version >= 2:
+                rec = manifest["arrays"].get(key)
+                if rec is None:
+                    raise ArtifactError(
+                        f"{directory}: manifest has no integrity record "
+                        f"for {key!r} (leaf {owner!r})")
+                if (str(arr.dtype) != rec["dtype"]
+                        or list(arr.shape) != list(rec["shape"])):
+                    raise ArtifactError(
+                        f"{directory}: {key!r} (leaf {owner!r}) is "
+                        f"{arr.dtype}{list(arr.shape)}, manifest says "
+                        f"{rec['dtype']}{rec['shape']}")
+                got = _array_sha256(arr)
+                if got != rec["sha256"]:
+                    raise ArtifactError(
+                        f"{directory}: {key!r} (leaf {owner!r}) failed "
+                        f"integrity check: sha256 {got[:12]}… != manifest "
+                        f"{rec['sha256'][:12]}…")
+            return arr
+
+        if version < 2:
+            warnings.warn(
+                f"PackedModel at {directory} has a version-{version} "
+                f"manifest (no per-array integrity data); loading "
+                f"unverified — re-save to upgrade", stacklevel=2)
+        elif int(manifest.get("n_arrays", -1)) != len(data.files):
+            raise ArtifactError(
+                f"{directory}: arrays.npz holds {len(data.files)} arrays, "
+                f"manifest expects {manifest.get('n_arrays')}")
+
         packed = {}
         for i, rec in enumerate(manifest["packed"]):
             packed[rec["path"]] = PackedLeaf(
-                words=data[f"p{i}_words"], codebook=data[f"p{i}_cb"],
+                words=fetch(f"p{i}_words", rec["path"]),
+                codebook=fetch(f"p{i}_cb", rec["path"]),
                 shape=tuple(rec["shape"]), k=int(rec["k"]),
                 dtype=rec["dtype"])
-        dense = {rec["path"]: data[f"d{j}"]
+        dense = {rec["path"]: fetch(f"d{j}", rec["path"])
                  for j, rec in enumerate(manifest["dense"])}
         return cls(packed=packed, dense=dense,
                    scheme_spec=manifest["scheme"], k=int(manifest["k"]),

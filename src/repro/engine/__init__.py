@@ -13,14 +13,27 @@ queued ones.
   decode under a per-step token budget);
 * :mod:`repro.engine.oneshot`   — the lockstep one-shot greedy loop, the
   engine's reference oracle (formerly duplicated in launch/serve.py and
-  scripts/smoke_serve_packed.py).
+  scripts/smoke_serve_packed.py);
+* :mod:`repro.engine.outcomes`  — typed per-request terminal outcomes
+  (the failure-isolation contract);
+* :mod:`repro.engine.snapshot`  — bit-exact snapshot/restore + the
+  ``supervised_serve`` restart loop;
+* :mod:`repro.engine.chaos`     — seeded deterministic fault injection.
 """
+from repro.engine.chaos import FaultEvent, FaultPlan
 from repro.engine.engine import Engine, EngineStats
 from repro.engine.kvcache import PagePool
 from repro.engine.oneshot import greedy_generate, truncate_at_eos
+from repro.engine.outcomes import Outcome, RequestResult
 from repro.engine.sampling import sample_tokens, slot_key
 from repro.engine.scheduler import Request, SlotScheduler
+from repro.engine.snapshot import (ServeReport, ServeSupervisorConfig,
+                                   SnapshotError, restore_into,
+                                   save_snapshot, supervised_serve)
 
 __all__ = ["Engine", "EngineStats", "PagePool", "Request", "SlotScheduler",
            "greedy_generate", "truncate_at_eos", "sample_tokens",
-           "slot_key"]
+           "slot_key", "Outcome", "RequestResult", "FaultEvent",
+           "FaultPlan", "SnapshotError", "ServeReport",
+           "ServeSupervisorConfig", "save_snapshot", "restore_into",
+           "supervised_serve"]

@@ -1,0 +1,152 @@
+"""Deterministic chaos harness for the serving engine.
+
+A :class:`FaultPlan` is a seeded schedule of injected faults that
+:func:`~repro.engine.snapshot.supervised_serve` consults before every
+engine step:
+
+* ``decode_fail``  — raise :class:`~repro.fault.SimulatedNodeFailure`
+  (the supervisor restores the last snapshot and replays);
+* ``poison``       — NaN-poison one slot's logits for one step (the
+  engine must quarantine exactly that slot);
+* ``pressure``     — seize free pages for ``duration`` steps (a
+  simulated neighbor hogging the pool; the engine stalls/waits, never
+  preempts on borrowed starvation);
+* ``kill_restore`` — snapshot → tear the engine down → restore, mid
+  stream (the bit-exactness acceptance gate);
+* ``preempt``      — raise :class:`~repro.fault.PreemptionSignal`
+  (save-and-exit, then in-process resume).
+
+Every event fires **at most once** per plan object (the ``_fired`` set
+lives on the plan, which outlives engine restarts) — a restored run
+replaying through an event's step must not re-suffer it, mirroring
+``repro.fault.FailureInjector``.  Event times are engine steps and the
+schedule comes from ``np.random.RandomState(seed)``, so a plan is fully
+reproducible: the acceptance oracle (``engine/oneshot.py``'s lockstep
+loop) must match every FINISHED stream bit-for-bit under any seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.fault import PreemptionSignal, SimulatedNodeFailure
+
+KINDS = ("decode_fail", "poison", "pressure", "kill_restore", "preempt")
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One scheduled fault.  ``step`` is the earliest engine step the
+    event may fire at (it fires on the first supervisor poll with
+    ``step >= event.step``); ``slot``/``pages``/``duration`` parametrize
+    the kind that uses them."""
+
+    step: int
+    kind: str
+    slot: int = 0
+    pages: int = 1
+    duration: int = 2
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.step < 0:
+            raise ValueError("fault step must be >= 0")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """A deterministic fault schedule (the ``injector`` protocol of
+    :func:`~repro.engine.snapshot.supervised_serve`)."""
+
+    events: List[FaultEvent] = dataclasses.field(default_factory=list)
+    seed: Optional[int] = None
+    _fired: set = dataclasses.field(default_factory=set)
+    _pending_release: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list)          # (release_step, n_pages)
+
+    @classmethod
+    def generate(cls, seed: int, *, horizon: int = 48, n_slots: int = 4,
+                 kinds: Sequence[str] = KINDS,
+                 n_events: Optional[int] = None) -> "FaultPlan":
+        """A seeded random plan with ≥ 1 event of every requested kind
+        (the acceptance criterion's minimum fault mix), spread over
+        ``horizon`` steps."""
+        rng = np.random.RandomState(seed)
+        kinds = list(kinds)
+        if n_events is None:
+            n_events = len(kinds) + int(rng.randint(0, 3))
+        picks = kinds + [kinds[int(rng.randint(len(kinds)))]
+                         for _ in range(max(n_events - len(kinds), 0))]
+        events = []
+        for kind in picks:
+            events.append(FaultEvent(
+                # step >= 2 so the first prefill commits before chaos
+                step=2 + int(rng.randint(max(horizon - 2, 1))),
+                kind=kind,
+                slot=int(rng.randint(n_slots)),
+                pages=1 + int(rng.randint(3)),
+                duration=1 + int(rng.randint(4))))
+        events.sort(key=lambda e: (e.step, KINDS.index(e.kind), e.slot))
+        return cls(events=events, seed=seed)
+
+    def counts(self) -> dict:
+        return {k: sum(e.kind == k for e in self.events) for k in KINDS}
+
+    def to_json(self) -> dict:
+        return {"seed": self.seed,
+                "events": [e.to_json() for e in self.events]}
+
+    # -- injector protocol --------------------------------------------------
+
+    def apply(self, eng, step: int) -> Optional[str]:
+        """Fire every due, unfired event.  May mutate ``eng``, raise a
+        fault exception, or return ``"kill_restore"``; called by the
+        supervisor before each engine step."""
+        # scheduled pressure releases first (so a seize's own release
+        # isn't blocked by an exception from a later event this step)
+        still = []
+        for when, n in self._pending_release:
+            if step >= when:
+                eng.pool.release(n)
+            else:
+                still.append((when, n))
+        self._pending_release = still
+
+        for idx, ev in enumerate(self.events):
+            if idx in self._fired or step < ev.step:
+                continue
+            if ev.kind == "poison":
+                # needs a decoding slot to poison; stays pending until
+                # one exists (deterministic: state at a step is a pure
+                # function of the seed and the schedule)
+                running = eng.sched.running_ids()
+                if not running:
+                    continue
+                self._fired.add(idx)
+                eng.poison_slot(running[ev.slot % len(running)])
+            elif ev.kind == "pressure":
+                self._fired.add(idx)
+                taken = eng.pool.seize(ev.pages)
+                if taken:
+                    self._pending_release.append(
+                        (step + max(ev.duration, 1), taken))
+            elif ev.kind == "kill_restore":
+                # hand control back immediately: later due events fire
+                # on the next poll, against the restored engine
+                self._fired.add(idx)
+                return "kill_restore"
+            elif ev.kind == "decode_fail":
+                self._fired.add(idx)
+                raise SimulatedNodeFailure(
+                    f"injected decode failure at step {step}")
+            elif ev.kind == "preempt":
+                self._fired.add(idx)
+                raise PreemptionSignal(
+                    f"injected preemption at step {step}")
+        return None

@@ -21,6 +21,19 @@ every running slot is page-starved and nothing else can progress, the
 youngest stalled request is preempted back to the queue head and
 restarts from scratch — deterministic sampling keys make the replayed
 stream identical.
+
+**Failure isolation** (PR 7): one request's fate never corrupts a
+neighbor.  Every request ends in exactly one typed
+:class:`~repro.engine.outcomes.Outcome` in :attr:`Engine.results` —
+an unservable prompt is *rejected* before reserving a page
+(``REJECTED_TOO_LARGE``; a full bounded queue gives
+``REJECTED_BACKPRESSURE``), per-request deadlines expire to
+``DEADLINE_EXCEEDED`` with pages freed immediately, :meth:`cancel`
+frees mid-stream, a per-request preemption budget converts page-starved
+livelock into a typed ``FAILED``, and a non-finite logit row
+quarantines only the poisoned slot while batch mates keep decoding.
+The engine itself no longer raises out of :meth:`run`: exceeding
+``max_steps`` fails the stragglers and returns every completed stream.
 """
 from __future__ import annotations
 
@@ -35,6 +48,7 @@ import numpy as np
 from repro.engine import sampling
 from repro.engine.kvcache import PagePool
 from repro.engine.oneshot import jit_prefill
+from repro.engine.outcomes import Outcome, RequestResult
 from repro.engine.scheduler import Request, SlotScheduler
 from repro.models.transformer import (ModelConfig, decode_step_slots,
                                       init_paged_cache,
@@ -42,12 +56,21 @@ from repro.models.transformer import (ModelConfig, decode_step_slots,
 
 
 def _decode_and_sample(params, cfg, caches, page_table, tokens_t, pos,
-                       alive, temps, top_ks, keys):
-    """One fused device call per engine step: decode + per-slot sample."""
+                       alive, temps, top_ks, keys, poison):
+    """One fused device call per engine step: decode + per-slot sample.
+
+    ``poison`` [B] bool overwrites a slot's logits row with NaN *after*
+    the model ran — the chaos harness's injection point for numerically
+    poisoned slots (``engine/chaos.py``); all-False in production.  The
+    returned ``bad`` flags rows with any non-finite logit (injected or
+    genuine) so the engine can quarantine exactly that slot.
+    """
     logits, caches = decode_step_slots(params, cfg, caches, page_table,
                                        tokens_t, pos, alive)
-    nxt = sampling.sample_tokens(logits[:, 0], temps, top_ks, keys)
-    return nxt, caches
+    row = logits[:, 0]
+    row = jnp.where(poison[:, None], jnp.full_like(row, jnp.nan), row)
+    nxt, bad = sampling.sample_and_flag(row, temps, top_ks, keys)
+    return nxt, bad, caches
 
 
 # module-level jits shared by every Engine instance: constructing an
@@ -57,7 +80,7 @@ def _decode_and_sample(params, cfg, caches, page_table, tokens_t, pos,
 # engine (their prefill calls must be the same computation anyway for
 # stream parity).
 _DECODE = jax.jit(_decode_and_sample, static_argnums=1)
-_SAMPLE = jax.jit(sampling.sample_tokens)
+_SAMPLE = jax.jit(sampling.sample_and_flag)
 # slot stays traced (it is only an index), so admitting into slot 63
 # reuses slot 0's compiled scatter
 _COMMIT = jax.jit(write_prefill_to_slot, static_argnums=(0, 5))
@@ -88,6 +111,11 @@ class EngineStats:
     #                                work discarded by preemption)
     stall_events: int = 0
     preemptions: int = 0
+    rejected: int = 0              # TOO_LARGE + BACKPRESSURE at submit
+    cancelled: int = 0
+    deadline_expired: int = 0
+    quarantined: int = 0           # non-finite logit rows isolated
+    failed: int = 0                # FAILED outcomes (incl. quarantines)
     occupancy_sum: float = 0.0
     page_util_sum: float = 0.0
     page_util_max: float = 0.0
@@ -115,6 +143,11 @@ class EngineStats:
             "finished": self.finished,
             "preemptions": self.preemptions,
             "stall_events": self.stall_events,
+            "rejected": self.rejected,
+            "cancelled": self.cancelled,
+            "deadline_expired": self.deadline_expired,
+            "quarantined": self.quarantined,
+            "failed": self.failed,
             "wall_s": self.wall_s,
         }
 
@@ -137,13 +170,23 @@ class Engine:
     caches inherit the prefill dtype, so a mismatched pool would round
     differently and break stream parity.  The default infers it from
     the params' embedding leaf (any serving layout).
+
+    Admission control: ``queue_limit`` bounds the request queue —
+    :meth:`submit` beyond it records ``REJECTED_BACKPRESSURE`` instead
+    of growing without bound (the backpressure signal a front end
+    propagates to clients).  ``max_preemptions`` bounds how many times
+    one request may be preempted for page pressure before it fails
+    typed (two page-starved giants otherwise ping-pong the
+    no-progress resolver forever).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
                  page_size: int = 16, max_seq: int = 256,
                  n_pages: Optional[int] = None,
                  token_budget: Optional[int] = None,
-                 prefill_chunk: int = 64, dtype=None, mesh=None):
+                 prefill_chunk: int = 64, dtype=None, mesh=None,
+                 queue_limit: Optional[int] = None,
+                 max_preemptions: int = 8):
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -159,8 +202,12 @@ class Engine:
                              else n_slots + self.prefill_chunk)
         if self.token_budget < 1:
             raise ValueError("token_budget must be >= 1")
+        self.queue_limit = (None if queue_limit is None
+                            else max(int(queue_limit), 1))
+        self.max_preemptions = int(max_preemptions)
         if dtype is None:
             dtype = _activation_dtype(params)
+        self.dtype = jnp.dtype(dtype)
         self.caches = init_paged_cache(cfg, n_slots, n_pages, page_size,
                                        dtype)
         if mesh is not None:
@@ -174,25 +221,88 @@ class Engine:
         self._prefill = jit_prefill
         self._sample = _SAMPLE
         self._zero_key = np.zeros((2,), np.uint32)
+        self._no_poison = np.zeros((n_slots,), bool)
+        self._poison_mask: Optional[np.ndarray] = None
         self._table_cache = (-1, None)     # (pool.version, device table)
         self.outputs: Dict[int, np.ndarray] = {}
+        self.results: Dict[int, RequestResult] = {}
+        self._submit_step: Dict[int, int] = {}
+        self._preempt_counts: Dict[int, int] = {}
         self.stats = EngineStats()
 
     # -- public API ---------------------------------------------------------
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> Optional[Outcome]:
+        """Admission control.  Returns ``None`` when the request is
+        queued, or the typed rejection outcome (also recorded in
+        :attr:`results`) — never raises, never reserves a page for an
+        unservable request, never disturbs in-flight neighbors."""
         total = req.prompt_len + req.max_new_tokens
         if total > self.max_seq:
-            raise ValueError(
-                f"request {req.rid}: prompt {req.prompt_len} + max_new "
-                f"{req.max_new_tokens} exceeds max_seq {self.max_seq}")
+            return self._reject(
+                req, Outcome.REJECTED_TOO_LARGE,
+                f"prompt {req.prompt_len} + max_new {req.max_new_tokens} "
+                f"exceeds max_seq {self.max_seq}")
         if self.pool.pages_for_len(total) > self.pool.n_pages:
             # would stall at the same position on every replay — reject
             # up front instead of preempt-cycling until max_steps
-            raise ValueError(
-                f"request {req.rid}: needs {self.pool.pages_for_len(total)}"
-                f" pages to finish, pool has {self.pool.n_pages}")
+            return self._reject(
+                req, Outcome.REJECTED_TOO_LARGE,
+                f"needs {self.pool.pages_for_len(total)} pages to finish, "
+                f"pool has {self.pool.n_pages}")
+        if (self.queue_limit is not None
+                and len(self.sched.queue) >= self.queue_limit):
+            return self._reject(
+                req, Outcome.REJECTED_BACKPRESSURE,
+                f"queue full ({self.queue_limit}); retry after drain")
+        self._submit_step.setdefault(req.rid, self.stats.steps)
         self.sched.submit(req)
+        return None
+
+    def cancel(self, rid: int, detail: str = "client cancel") -> bool:
+        """Cancel a queued or running request: its pages free
+        immediately, its partial tokens ride in the typed result, and
+        batch mates never notice.  Returns False for unknown/finished
+        rids."""
+        if self.sched.remove_queued(rid) is not None:
+            self._record(rid, Outcome.CANCELLED, detail=detail)
+            self.stats.cancelled += 1
+            return True
+        slot = self.sched.slot_of(rid)
+        if slot is None:
+            return False
+        s = self.sched.evict(slot)
+        self.pool.free_slot(slot)
+        self._record(rid, Outcome.CANCELLED, tokens=s.out, detail=detail)
+        self.stats.cancelled += 1
+        return True
+
+    def poison_slot(self, slot: int):
+        """Chaos-harness injection point: NaN-poison ``slot``'s logits
+        row on the *next* decode step (one step only).  The quarantine
+        path must isolate exactly that slot."""
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range")
+        if self._poison_mask is None:
+            self._poison_mask = np.zeros((self.n_slots,), bool)
+        self._poison_mask[slot] = True
+
+    def abort_remaining(self, detail: str):
+        """Terminate every queued and in-flight request with a typed
+        ``FAILED`` carrying its partial tokens (used on ``max_steps``
+        overrun and supervisor give-up — completed outputs survive)."""
+        while self.sched.queue:
+            req = self.sched.queue.popleft()
+            self._record(req.rid, Outcome.FAILED, detail=detail)
+            self.stats.failed += 1
+        for i, s in enumerate(self.sched.slots):
+            if s is None:
+                continue
+            self.sched.evict(i)
+            self.pool.free_slot(i)
+            self._record(s.req.rid, Outcome.FAILED, tokens=s.out,
+                         detail=detail)
+            self.stats.failed += 1
 
     def decode_compile_count(self) -> int:
         """Number of compiled decode-step variants in the shared jit
@@ -215,14 +325,20 @@ class Engine:
 
     def run(self, requests: Optional[List[Request]] = None,
             max_steps: int = 100_000) -> Dict[int, np.ndarray]:
-        """Drive steps until queue and slots drain; returns rid → tokens."""
+        """Drive steps until queue and slots drain; returns rid → tokens
+        for every ``FINISHED`` request.  Never raises: rejected /
+        expired / failed requests carry typed outcomes in
+        :attr:`results`, and a ``max_steps`` overrun fails the
+        stragglers instead of discarding the completed streams."""
         for r in requests or ():
             self.submit(r)
         t0 = time.perf_counter()
         while self.sched.has_work():
             self.step()
             if self.stats.steps > max_steps:
-                raise RuntimeError("engine exceeded max_steps")
+                self.abort_remaining(f"engine exceeded max_steps "
+                                     f"({max_steps})")
+                break
         self.stats.wall_s += time.perf_counter() - t0
         return dict(self.outputs)
 
@@ -233,8 +349,13 @@ class Engine:
         st.steps += 1
         st.occupancy_sum += self.sched.occupancy()
         info = {"decoded": 0, "prefill_tokens": 0, "admitted": 0,
-                "finished": 0, "stalled": 0, "preempted": 0}
+                "finished": 0, "stalled": 0, "preempted": 0, "expired": 0,
+                "quarantined": 0}
         budget = self.token_budget
+
+        # 0) deadline sweep: expired requests (queued or in-flight) free
+        #    their slot/pages before any work is scheduled this step
+        self._expire_deadlines(info)
 
         # 1) decode every running slot whose next page is available
         running = self.sched.running_ids()
@@ -276,20 +397,65 @@ class Engine:
             st.prefill_tokens += chunk
             info["prefill_tokens"] += chunk
             if s.prefill_progress >= s.req.prompt_len:
-                self._commit_prefill(i, s)
-                if s.finished():
-                    self._finish(i, info)
+                self._commit_prefill(i, s, info)
 
         util = self.pool.utilization()
         st.page_util_sum += util
         st.page_util_max = max(st.page_util_max, util)
 
         if not (info["decoded"] or info["prefill_tokens"]
-                or info["admitted"]):
+                or info["admitted"] or info["expired"]
+                or info["quarantined"]):
             self._resolve_no_progress(stalled, info)
         return info
 
     # -- internals ----------------------------------------------------------
+
+    def _record(self, rid: int, outcome: Outcome, tokens=None,
+                detail: str = ""):
+        self.results[rid] = RequestResult(
+            rid=rid, outcome=outcome,
+            tokens=np.asarray(tokens if tokens is not None else [],
+                              np.int32),
+            detail=detail,
+            n_preemptions=self._preempt_counts.get(rid, 0))
+
+    def _reject(self, req: Request, outcome: Outcome,
+                detail: str) -> Outcome:
+        self._record(req.rid, outcome, detail=f"request {req.rid}: {detail}")
+        self.stats.rejected += 1
+        return outcome
+
+    def _expire_deadlines(self, info):
+        expired = []
+        for req in list(self.sched.queue):
+            if self._deadline_hit(req):
+                self.sched.remove_queued(req.rid)
+                self._record(req.rid, Outcome.DEADLINE_EXCEEDED,
+                             detail=self._deadline_detail(req))
+                expired.append(req.rid)
+        for i, s in enumerate(self.sched.slots):
+            if s is None or not self._deadline_hit(s.req):
+                continue
+            self.sched.evict(i)
+            self.pool.free_slot(i)
+            self._record(s.req.rid, Outcome.DEADLINE_EXCEEDED,
+                         tokens=s.out,
+                         detail=self._deadline_detail(s.req))
+            expired.append(s.req.rid)
+        if expired:
+            self.stats.deadline_expired += len(expired)
+            info["expired"] = len(expired)
+
+    def _deadline_hit(self, req: Request) -> bool:
+        if req.deadline_steps is None:
+            return False
+        born = self._submit_step.get(req.rid, 0)
+        return self.stats.steps - born > req.deadline_steps
+
+    def _deadline_detail(self, req: Request) -> str:
+        return (f"deadline of {req.deadline_steps} steps exceeded "
+                f"(submitted at step {self._submit_step.get(req.rid, 0)})")
 
     def _page_table(self):
         if self._table_cache[0] != self.pool.version:
@@ -315,19 +481,38 @@ class Engine:
             keys[i] = (np.asarray(sampling.slot_key(s.req.seed,
                                                     s.n_generated))
                        if s.req.temperature > 0 else self._zero_key)
-        nxt, self.caches = self._decode(
+        poison = (self._poison_mask if self._poison_mask is not None
+                  else self._no_poison)
+        self._poison_mask = None           # one-shot injection
+        nxt, bad, self.caches = self._decode(
             self.params, self.cfg, self.caches, self._page_table(),
             jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(alive),
-            jnp.asarray(temps), jnp.asarray(top_ks), jnp.asarray(keys))
-        nxt = np.asarray(nxt)
+            jnp.asarray(temps), jnp.asarray(top_ks), jnp.asarray(keys),
+            jnp.asarray(poison))
+        nxt, bad = np.asarray(nxt), np.asarray(bad)
         for i in ready:
+            if bad[i]:
+                self._quarantine(i, info)
+                continue
             s = self.sched.slots[i]
             s.out.append(int(nxt[i]))
             info["decoded"] += 1
             if s.finished():
                 self._finish(i, info)
 
-    def _commit_prefill(self, i, s):
+    def _quarantine(self, i, info):
+        """Isolate a slot whose logits went non-finite: typed ``FAILED``
+        with the partial stream, pages freed, neighbors untouched (their
+        lanes sampled from their own finite rows this very step)."""
+        s = self.sched.evict(i)
+        self.pool.free_slot(i)
+        self._record(s.req.rid, Outcome.FAILED, tokens=s.out,
+                     detail="non-finite logits: slot quarantined")
+        self.stats.quarantined += 1
+        self.stats.failed += 1
+        info["quarantined"] += 1
+
+    def _commit_prefill(self, i, s, info):
         """The bit-exact full-prompt prefill call + page scatter."""
         prompt = jnp.asarray(s.req.prompt[None, :], jnp.int32)
         logits, pcaches = self._prefill(self.params, self.cfg, prompt,
@@ -337,18 +522,24 @@ class Engine:
                               self.page_size)
         key = (np.asarray(sampling.slot_key(s.req.seed, 0))
                if s.req.temperature > 0 else self._zero_key)
-        tok = np.asarray(self._sample(
+        tok, bad = self._sample(
             logits[:, -1], jnp.asarray([s.req.temperature], jnp.float32),
             jnp.asarray([s.req.top_k], jnp.int32),
-            jnp.asarray(key[None, :])))
-        s.out.append(int(tok[0]))
-        s.prefilled = True
+            jnp.asarray(key[None, :]))
         self.stats.prefill_calls += 1
+        s.prefilled = True
+        if bool(np.asarray(bad)[0]):
+            self._quarantine(i, info)
+            return
+        s.out.append(int(np.asarray(tok)[0]))
+        if s.finished():
+            self._finish(i, info)
 
     def _finish(self, i, info):
         s = self.sched.evict(i)
         self.pool.free_slot(i)
         self.outputs[s.req.rid] = np.asarray(s.out, np.int32)
+        self._record(s.req.rid, Outcome.FINISHED, tokens=s.out)
         self.stats.finished += 1
         self.stats.delivered_tokens += len(s.out)
         info["finished"] += 1
@@ -356,18 +547,45 @@ class Engine:
     def _resolve_no_progress(self, stalled, info):
         if stalled:
             # every runnable slot is page-starved and no admission or
-            # prefill could proceed: preempt the youngest, replay later
+            # prefill could proceed: preempt the youngest, replay later.
+            # Injected pressure spikes (seized pages) are transient by
+            # construction — wait them out instead of burning a
+            # request's preemption budget on borrowed starvation.
+            if self.pool.seized:
+                return
             j = max(stalled, key=lambda i: self.sched.slots[i].admit_seq)
             s = self.sched.evict(j)
             self.pool.free_slot(j)
+            rid = s.req.rid
+            n = self._preempt_counts.get(rid, 0) + 1
+            self._preempt_counts[rid] = n
+            self.stats.preemptions += 1
+            info["preempted"] = 1
+            if n > self.max_preemptions:
+                # livelock breaker: two page-starved giants would
+                # otherwise ping-pong this resolver forever
+                self._record(rid, Outcome.FAILED, tokens=s.out,
+                             detail=f"preemption budget exhausted "
+                                    f"({n - 1} > {self.max_preemptions} "
+                                    f"would never converge)")
+                self.stats.failed += 1
+                return
             # Request is immutable (progress lives on SlotState): the
             # replay reuses it as-is and regenerates the same stream
             self.sched.requeue_front(s.req)
-            self.stats.preemptions += 1
-            info["preempted"] = 1
         elif self.sched.queue:
-            req = self.sched.queue[0]
-            raise RuntimeError(
-                f"page pool too small for request {req.rid}: prompt needs "
-                f"{self.pool.pages_for_len(req.prompt_len)} pages, pool has "
-                f"{self.pool.n_pages}")
+            if self.pool.seized or self.pool.used_pages:
+                # pages will free (pressure release / neighbor finish);
+                # the queue head retries admission next step
+                self.stats.stall_events += 1
+                return
+            # defensive: submit() guards total-size up front, so an
+            # unadmittable head with an idle pool is a logic error —
+            # fail that request typed instead of killing the batch
+            req = self.sched.queue.popleft()
+            self._record(
+                req.rid, Outcome.FAILED,
+                detail=f"prompt needs "
+                       f"{self.pool.pages_for_len(req.prompt_len)} pages, "
+                       f"pool has {self.pool.n_pages} — unadmittable")
+            self.stats.failed += 1

@@ -12,6 +12,8 @@ immediately (LIFO, so a queued request reuses the hottest pages first).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 
 
@@ -33,6 +35,7 @@ class PagePool:
         self.max_pages_per_slot = max_pages_per_slot
         self._free = list(range(n_pages, 0, -1))     # LIFO reuse
         self._owned = [[] for _ in range(n_slots)]
+        self._seized = []         # pages withheld by pressure injection
         self.table = np.zeros((n_slots, max_pages_per_slot), np.int32)
         self.version = 0          # bumped on any table change (host cache
         #                           of the device-side table keys on it)
@@ -93,3 +96,64 @@ class PagePool:
         if n:
             self.version += 1
         return n
+
+    # -- pressure injection (chaos harness) ---------------------------------
+
+    @property
+    def seized(self) -> int:
+        """Pages currently withheld from the free list by an injected
+        pressure spike (``engine/chaos.py``)."""
+        return len(self._seized)
+
+    def seize(self, n: int) -> int:
+        """Withhold up to ``n`` free pages (a simulated pressure spike:
+        the allocator behaves exactly as if neighbors held them).  Never
+        touches owned pages — live requests' KV is untouchable.  Returns
+        how many were actually seized."""
+        taken = 0
+        while taken < n and self._free:
+            self._seized.append(self._free.pop())
+            taken += 1
+        return taken
+
+    def release(self, n: Optional[int] = None) -> int:
+        """Return ``n`` seized pages (default: all) to the free list.
+        Tolerates over-release — a restored snapshot may predate the
+        matching :meth:`seize`."""
+        if n is None:
+            n = len(self._seized)
+        given = 0
+        while given < n and self._seized:
+            self._free.append(self._seized.pop())
+            given += 1
+        return given
+
+    # -- snapshot (engine/snapshot.py) --------------------------------------
+
+    def state_dict(self) -> dict:
+        """Full host-side allocator state, JSON-serializable except the
+        table (which rides in the snapshot's npz).
+
+        Seized pages are recorded as *free*: a pressure spike is
+        injected, transient state — the simulated page-hogging neighbor
+        dies with the process, so a restored engine must not inherit
+        the starvation (its injector may no longer hold the matching
+        release)."""
+        return {"free": list(self._free) + list(self._seized),
+                "owned": [list(o) for o in self._owned],
+                "seized": [],
+                "version": int(self.version)}
+
+    def load_state_dict(self, state: dict, table: np.ndarray):
+        got = (len(state["free"]) + len(state["seized"])
+               + sum(len(o) for o in state["owned"]))
+        if got != self.n_pages or len(state["owned"]) != self.n_slots:
+            raise ValueError(
+                f"pool snapshot geometry mismatch: {got} pages / "
+                f"{len(state['owned'])} slots vs pool {self.n_pages} / "
+                f"{self.n_slots}")
+        self._free = [int(p) for p in state["free"]]
+        self._owned = [[int(p) for p in o] for o in state["owned"]]
+        self._seized = [int(p) for p in state["seized"]]
+        self.table = np.asarray(table, np.int32).reshape(self.table.shape)
+        self.version = int(state["version"]) + 1   # force device re-upload

@@ -37,3 +37,18 @@ def sample_tokens(logits: Array, temps: Array, top_ks: Array,
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     sampled = jax.vmap(_sample_one)(logits, temps, top_ks, keys)
     return jnp.where(temps <= 0.0, greedy, sampled)
+
+
+def sample_and_flag(logits: Array, temps: Array, top_ks: Array,
+                    keys: Array):
+    """:func:`sample_tokens` plus a per-row poison flag.
+
+    ``bad[i]`` is True when row ``i`` contains any non-finite logit
+    (NaN/inf — a numerically poisoned slot).  The engine quarantines
+    flagged slots (typed ``FAILED`` outcome, pages freed) instead of
+    streaming garbage; sampling runs on a zeroed copy of bad rows so a
+    neighbor's lane never sees the NaN.  Returns (tokens [B] int32,
+    bad [B] bool)."""
+    bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
+    safe = jnp.where(bad[:, None], jnp.zeros_like(logits), logits)
+    return sample_tokens(safe, temps, top_ks, keys), bad

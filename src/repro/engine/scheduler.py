@@ -23,6 +23,10 @@ class Request:
     ``top_k <= 0`` samples the full vocabulary.  ``seed`` drives the
     per-request sampling stream — a request's tokens depend only on its
     own (prompt, seed), never on batch mates or admission timing.
+    ``deadline_steps`` bounds how many *engine steps* after submission
+    the request may stay unfinished (steps, not wall time, so chaos
+    replays are deterministic); expiry yields a typed
+    ``DEADLINE_EXCEEDED`` outcome and frees the slot/pages immediately.
     """
     rid: int
     prompt: np.ndarray
@@ -31,6 +35,7 @@ class Request:
     temperature: float = 0.0
     top_k: int = 0
     seed: int = 0
+    deadline_steps: Optional[int] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -38,10 +43,30 @@ class Request:
             raise ValueError("empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.deadline_steps is not None and self.deadline_steps < 1:
+            raise ValueError("deadline_steps must be >= 1")
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.size)
+
+    def to_json(self) -> dict:
+        """Snapshot record (the prompt array rides in the npz)."""
+        return {"rid": int(self.rid),
+                "max_new_tokens": int(self.max_new_tokens),
+                "eos_id": None if self.eos_id is None else int(self.eos_id),
+                "temperature": float(self.temperature),
+                "top_k": int(self.top_k), "seed": int(self.seed),
+                "deadline_steps": (None if self.deadline_steps is None
+                                   else int(self.deadline_steps))}
+
+    @classmethod
+    def from_json(cls, rec: dict, prompt: np.ndarray) -> "Request":
+        return cls(rid=int(rec["rid"]), prompt=prompt,
+                   max_new_tokens=int(rec["max_new_tokens"]),
+                   eos_id=rec["eos_id"], temperature=rec["temperature"],
+                   top_k=int(rec["top_k"]), seed=int(rec["seed"]),
+                   deadline_steps=rec.get("deadline_steps"))
 
 
 class SlotState:
@@ -73,6 +98,21 @@ class SlotState:
             return True
         return (self.req.eos_id is not None
                 and self.out[-1] == self.req.eos_id)
+
+    def to_json(self) -> dict:
+        """Snapshot record; the request rides separately (by rid)."""
+        return {"rid": int(self.req.rid), "admit_seq": int(self.admit_seq),
+                "prefill_progress": int(self.prefill_progress),
+                "prefilled": bool(self.prefilled),
+                "out": [int(t) for t in self.out]}
+
+    @classmethod
+    def from_json(cls, rec: dict, req: Request) -> "SlotState":
+        st = cls(req, int(rec["admit_seq"]))
+        st.prefill_progress = int(rec["prefill_progress"])
+        st.prefilled = bool(rec["prefilled"])
+        st.out = [int(t) for t in rec["out"]]
+        return st
 
 
 class SlotScheduler:
@@ -122,3 +162,18 @@ class SlotScheduler:
         assert st is not None, slot
         self.slots[slot] = None
         return st
+
+    def slot_of(self, rid: int) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is not None and s.req.rid == rid:
+                return i
+        return None
+
+    def remove_queued(self, rid: int) -> Optional[Request]:
+        """Drop a still-queued request (cancellation / deadline expiry
+        before admission)."""
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                return req
+        return None

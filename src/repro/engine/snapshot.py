@@ -1,0 +1,367 @@
+"""Bit-exact engine snapshot / restore + the serving supervisor loop.
+
+A snapshot captures *everything* the step loop depends on — scheduler
+queue and slot states, the page allocator (free list / ownership /
+seized pages / table), live KV pages, per-request bookkeeping, typed
+results, and stats — so a restored engine's next step is byte-identical
+to the step the killed engine would have taken.  Sampling keys need no
+serialization: a slot's key is ``slot_key(seed, n_generated)``, both
+already in the snapshot.
+
+Layout (shared atomic-write discipline with ``train/checkpoint.py``)::
+
+    <dir>/snap_00000042.tmp/  → written fully, then os.rename →
+    <dir>/snap_00000042/
+        arrays.npz            # KV cache leaves, page table, prompts, tokens
+        manifest.json         # geometry, scheduler/pool state, npz sha256
+    <dir>/LATEST              # written last (atomic pointer)
+
+:func:`supervised_serve` wraps an engine in the restart loop the
+training side uses (``repro.fault``): periodic snapshots, restore on
+:class:`~repro.fault.SimulatedNodeFailure` (bounded restarts,
+exponential backoff), save-then-resume on
+:class:`~repro.fault.PreemptionSignal`, and controlled
+kill-and-restore.  It **never raises**: when the restart budget is
+exhausted it fails the remaining requests typed and returns every
+completed stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.outcomes import Outcome, RequestResult
+from repro.engine.scheduler import Request, SlotState
+from repro.fault import (PreemptionSignal, SimulatedNodeFailure,
+                         backoff_delay)
+from repro.train.checkpoint import atomic_dir, file_sha256, write_pointer
+
+SNAPSHOT_VERSION = 1
+
+_BYTE_VIEW = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+class SnapshotError(RuntimeError):
+    """A snapshot artifact is missing, corrupt, or geometry-incompatible
+    with the engine being restored.  The supervisor treats it as 'no
+    usable snapshot' (fresh start), never as a crash."""
+
+
+def _pack_leaf(arr) -> Tuple[np.ndarray, str]:
+    """npz-safe encoding: extension dtypes (bf16 etc.) ride as unsigned
+    words of the same width, with the true dtype recorded."""
+    arr = np.asarray(arr)
+    name = str(arr.dtype)
+    if arr.dtype.kind in "biufc":
+        return arr, name
+    return arr.view(_BYTE_VIEW[arr.dtype.itemsize]), name
+
+
+def _unpack_leaf(arr: np.ndarray, name: str) -> np.ndarray:
+    if str(arr.dtype) == name:
+        return arr
+    try:
+        dt = np.dtype(name)
+    except TypeError:
+        dt = np.dtype(getattr(jnp, name))
+    return arr.view(dt)
+
+
+def _live_requests(eng) -> List[Request]:
+    reqs = list(eng.sched.queue)
+    for s in eng.sched.slots:
+        if s is not None:
+            reqs.append(s.req)
+    return reqs
+
+
+def save_snapshot(eng, directory: str, keep: int = 2) -> str:
+    """Atomically persist the engine's full serving state; returns the
+    snapshot path.  Crash-safe: a kill mid-write leaves the previous
+    ``LATEST`` target intact."""
+    os.makedirs(directory, exist_ok=True)
+    name = f"snap_{eng.stats.steps:08d}"
+    final = os.path.join(directory, name)
+
+    arrays: Dict[str, np.ndarray] = {"table": eng.pool.table}
+    for req in _live_requests(eng):
+        arrays[f"req{req.rid}_prompt"] = req.prompt
+    for rid, toks in eng.outputs.items():
+        arrays[f"out{rid}"] = np.asarray(toks, np.int32)
+    for rid, res in eng.results.items():
+        arrays[f"res{rid}_tokens"] = res.tokens
+    flat, _ = jax.tree_util.tree_flatten(eng.caches)
+    dtypes, shapes = [], []
+    for i, leaf in enumerate(flat):
+        enc, dt = _pack_leaf(leaf)
+        arrays[f"cache{i}"] = enc
+        dtypes.append(dt)
+        shapes.append(list(np.asarray(leaf).shape))
+
+    manifest = {
+        "format": "engine-snapshot",
+        "version": SNAPSHOT_VERSION,
+        "step": int(eng.stats.steps),
+        "geometry": {
+            "n_slots": eng.n_slots, "page_size": eng.page_size,
+            "max_seq": eng.max_seq, "n_pages": eng.pool.n_pages,
+            "token_budget": eng.token_budget,
+            "prefill_chunk": eng.prefill_chunk,
+            "dtype": str(eng.dtype),
+        },
+        "stats": dataclasses.asdict(eng.stats),
+        "admit_seq": int(eng.sched._admit_seq),
+        "queue": [int(r.rid) for r in eng.sched.queue],
+        "requests": [r.to_json() for r in _live_requests(eng)],
+        "slots": [None if s is None else s.to_json()
+                  for s in eng.sched.slots],
+        "pool": eng.pool.state_dict(),
+        "outputs": sorted(int(r) for r in eng.outputs),
+        "results": [eng.results[rid].to_json()
+                    for rid in sorted(eng.results)],
+        "submit_step": {str(k): int(v)
+                        for k, v in eng._submit_step.items()},
+        "preempt_counts": {str(k): int(v)
+                           for k, v in eng._preempt_counts.items()},
+        "cache_leaves": len(flat),
+        "cache_dtypes": dtypes,
+        "cache_shapes": shapes,
+    }
+
+    with atomic_dir(final) as tmp:
+        npz_path = os.path.join(tmp, "arrays.npz")
+        np.savez(npz_path, **arrays)
+        manifest["npz_sha256"] = file_sha256(npz_path)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+
+    write_pointer(directory, "LATEST", name)
+    snaps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("snap_") and not d.endswith(".tmp"))
+    for d in snaps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+    return final
+
+
+def latest_snapshot(directory: str) -> Optional[str]:
+    p = os.path.join(directory, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return os.path.join(directory, f.read().strip())
+
+
+def restore_into(eng, directory: str) -> int:
+    """Restore the ``LATEST`` snapshot under ``directory`` into a
+    freshly constructed engine of identical geometry; returns the
+    snapshot's step.  Raises :class:`SnapshotError` on any missing,
+    corrupt, or mismatched artifact (never a partial restore: the
+    engine is only mutated after every piece validates)."""
+    path = latest_snapshot(directory)
+    if path is None or not os.path.isdir(path):
+        raise SnapshotError(f"no snapshot under {directory}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise SnapshotError(f"unreadable snapshot manifest at {path}: {e}")
+    if manifest.get("format") != "engine-snapshot":
+        raise SnapshotError(f"{path} is not an engine snapshot")
+    if manifest.get("version") != SNAPSHOT_VERSION:
+        raise SnapshotError(
+            f"snapshot version {manifest.get('version')} != "
+            f"{SNAPSHOT_VERSION}")
+
+    npz_path = os.path.join(path, "arrays.npz")
+    if not os.path.exists(npz_path):
+        raise SnapshotError(f"{path} missing arrays.npz")
+    got = file_sha256(npz_path)
+    if got != manifest["npz_sha256"]:
+        raise SnapshotError(
+            f"snapshot {path} failed integrity check: arrays.npz sha256 "
+            f"{got[:12]}… != manifest {manifest['npz_sha256'][:12]}…")
+
+    geo = manifest["geometry"]
+    mine = {"n_slots": eng.n_slots, "page_size": eng.page_size,
+            "max_seq": eng.max_seq, "n_pages": eng.pool.n_pages,
+            "token_budget": eng.token_budget,
+            "prefill_chunk": eng.prefill_chunk, "dtype": str(eng.dtype)}
+    if geo != mine:
+        diff = {k: (geo.get(k), mine[k]) for k in mine
+                if geo.get(k) != mine[k]}
+        raise SnapshotError(f"snapshot geometry mismatch: {diff}")
+
+    try:
+        data = np.load(npz_path)
+        flat, treedef = jax.tree_util.tree_flatten(eng.caches)
+        n = manifest["cache_leaves"]
+        if n != len(flat):
+            raise SnapshotError(
+                f"snapshot has {n} cache leaves, engine has {len(flat)}")
+        new_flat = []
+        for i, leaf in enumerate(flat):
+            arr = _unpack_leaf(data[f"cache{i}"],
+                               manifest["cache_dtypes"][i])
+            want = np.asarray(leaf)
+            if list(arr.shape) != list(want.shape):
+                raise SnapshotError(
+                    f"cache leaf {i} shape {list(arr.shape)} != engine "
+                    f"{list(want.shape)}")
+            new_flat.append(jnp.asarray(arr))
+
+        reqs: Dict[int, Request] = {}
+        for rec in manifest["requests"]:
+            rid = int(rec["rid"])
+            reqs[rid] = Request.from_json(rec, data[f"req{rid}_prompt"])
+
+        eng.caches = treedef.unflatten(new_flat)
+        eng.pool.load_state_dict(manifest["pool"], data["table"])
+        eng.sched.queue.clear()
+        for rid in manifest["queue"]:
+            eng.sched.queue.append(reqs[int(rid)])
+        for i, rec in enumerate(manifest["slots"]):
+            eng.sched.slots[i] = (None if rec is None else
+                                  SlotState.from_json(rec,
+                                                      reqs[int(rec["rid"])]))
+        eng.sched._admit_seq = int(manifest["admit_seq"])
+        eng.outputs = {int(rid): np.asarray(data[f"out{rid}"], np.int32)
+                       for rid in manifest["outputs"]}
+        eng.results = {}
+        for rec in manifest["results"]:
+            rid = int(rec["rid"])
+            key = f"res{rid}_tokens"
+            toks = data[key] if key in data else None
+            eng.results[rid] = RequestResult.from_json(rec, toks)
+        eng._submit_step = {int(k): int(v)
+                            for k, v in manifest["submit_step"].items()}
+        eng._preempt_counts = {int(k): int(v)
+                               for k, v in
+                               manifest["preempt_counts"].items()}
+        for k, v in manifest["stats"].items():
+            setattr(eng.stats, k, v)
+    except SnapshotError:
+        raise
+    except (KeyError, ValueError, OSError) as e:
+        raise SnapshotError(f"corrupt snapshot at {path}: {e!r}")
+    return int(manifest["step"])
+
+
+@dataclasses.dataclass
+class ServeSupervisorConfig:
+    """Knobs for :func:`supervised_serve` (mirrors
+    ``train.fault.SupervisorConfig``)."""
+
+    snapshot_dir: str
+    snapshot_every: int = 8        # steps between periodic snapshots
+    max_restarts: int = 4          # failure-restart budget
+    backoff_s: float = 0.0         # base restart delay (0 in tests)
+    max_steps: int = 100_000       # hard overrun bound per incarnation
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """What the supervisor did — ``tests/test_chaos.py`` and
+    ``scripts/smoke_chaos.py`` assert on these counters."""
+
+    restarts: int = 0
+    snapshots: int = 0
+    restores: int = 0
+    kill_restores: int = 0
+    preemptions_signalled: int = 0
+    fresh_starts: int = 0
+    aborted: bool = False
+    final_stats: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def supervised_serve(make_engine: Callable[[], object],
+                     requests: List[Request],
+                     cfg: ServeSupervisorConfig,
+                     injector=None):
+    """Serve ``requests`` to completion under a restart supervisor.
+
+    ``make_engine`` builds a fresh engine (same params/geometry every
+    call).  ``injector`` (e.g. ``chaos.FaultPlan``) is consulted before
+    every step: it may mutate the engine (poison a slot, seize pages),
+    raise :class:`SimulatedNodeFailure` / :class:`PreemptionSignal`, or
+    return ``"kill_restore"`` to demand an immediate snapshot → teardown
+    → restore round trip.
+
+    Returns ``(outputs, results, report)`` — outputs is rid → tokens for
+    FINISHED requests, results maps *every* submitted rid to its typed
+    :class:`~repro.engine.outcomes.RequestResult`.  Never raises on
+    injected faults: an exhausted restart budget fails the remaining
+    requests typed and returns what completed.
+    """
+    report = ServeReport()
+
+    def fresh() -> object:
+        eng = make_engine()
+        for r in requests:
+            eng.submit(r)
+        report.fresh_starts += 1
+        return eng
+
+    def revive() -> object:
+        """Restore from the latest snapshot, or start fresh when none is
+        usable (rejections re-record deterministically on resubmit)."""
+        eng = make_engine()
+        try:
+            restore_into(eng, cfg.snapshot_dir)
+            report.restores += 1
+            return eng
+        except SnapshotError:
+            return fresh()
+
+    eng = fresh()
+    while True:
+        try:
+            while eng.sched.has_work():
+                if eng.stats.steps >= cfg.max_steps:
+                    eng.abort_remaining(
+                        f"supervisor exceeded max_steps ({cfg.max_steps})")
+                    report.aborted = True
+                    break
+                step = eng.stats.steps
+                action = injector.apply(eng, step) if injector else None
+                if action == "kill_restore":
+                    save_snapshot(eng, cfg.snapshot_dir)
+                    report.snapshots += 1
+                    report.kill_restores += 1
+                    eng = revive()
+                    continue
+                if (cfg.snapshot_every and step > 0
+                        and step % cfg.snapshot_every == 0):
+                    save_snapshot(eng, cfg.snapshot_dir)
+                    report.snapshots += 1
+                eng.step()
+            break
+        except PreemptionSignal:
+            # save-and-exit; in-process we immediately resume from the
+            # snapshot we just wrote, exercising the full round trip
+            report.preemptions_signalled += 1
+            save_snapshot(eng, cfg.snapshot_dir)
+            report.snapshots += 1
+            eng = revive()
+        except SimulatedNodeFailure:
+            report.restarts += 1
+            if report.restarts > cfg.max_restarts:
+                eng.abort_remaining("restart budget exhausted")
+                report.aborted = True
+                break
+            delay = backoff_delay(report.restarts, cfg.backoff_s)
+            if delay:
+                time.sleep(delay)
+            eng = revive()
+    report.final_stats = eng.stats.summary()
+    return dict(eng.outputs), dict(eng.results), report

@@ -1,0 +1,70 @@
+"""Shared fault-tolerance primitives for training AND serving.
+
+The supervisor control flow is the same on both sides of the system: a
+step loop that may be interrupted by node failures (restore the last
+durable state and resume, with bounded restarts and exponential
+backoff) or by a preemption notice (save-and-exit).  On a real cluster
+the signals are coordinator heartbeats / SIGTERM; in this container the
+identical control flow is exercised with injected failures.
+
+* :class:`SimulatedNodeFailure` — an unrecoverable step failure; the
+  supervisor restores the last checkpoint/snapshot and replays;
+* :class:`PreemptionSignal` — a scheduled eviction notice; the
+  supervisor saves durable state first, then exits (or, in-process,
+  restores and continues — the serving chaos harness does this to
+  exercise the full save→restore round trip);
+* :class:`FailureInjector` — raises the above at configured steps, each
+  at most once (a restored run replaying past the step must not re-die);
+* :func:`backoff_delay` — the shared bounded-exponential restart delay.
+
+``repro.train.fault`` builds ``supervised_run`` (training: checkpoint/
+restart over a TrainState) and ``repro.engine.snapshot`` builds
+``supervised_serve`` (serving: engine snapshot/restore with typed
+request outcomes) on these primitives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Set
+
+
+class SimulatedNodeFailure(RuntimeError):
+    """An injected (or real) node failure: state since the last durable
+    checkpoint/snapshot is lost; the supervisor restores and replays."""
+
+
+class PreemptionSignal(Exception):
+    """A scheduled eviction notice (SIGTERM-style): save durable state,
+    then exit — the replacement process resumes from it."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministic failure injection at configured step indices.
+
+    Each failure step fires at most once: a supervisor that restores to
+    an earlier step and replays through the same index must not hit the
+    same injected failure again (the real-world analogue: the node that
+    died was replaced).
+    """
+
+    fail_at_steps: Set[int] = dataclasses.field(default_factory=set)
+    preempt_at: Optional[int] = None
+    _fired: Set[int] = dataclasses.field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedNodeFailure(f"injected failure at step {step}")
+        if self.preempt_at is not None and step == self.preempt_at:
+            self.preempt_at = None
+            raise PreemptionSignal(f"preempted at step {step}")
+
+
+def backoff_delay(restarts: int, base_s: float, cap_s: float = 60.0) -> float:
+    """Bounded exponential backoff: ``base · 2^(restarts-1)``, capped.
+    ``restarts`` is 1 on the first restart; 0 seconds when ``base_s`` is
+    0 (the test configuration)."""
+    if base_s <= 0 or restarts < 1:
+        return 0.0
+    return min(base_s * 2 ** (restarts - 1), cap_s)

@@ -57,8 +57,13 @@ from repro.train import checkpoint as ckpt                       # noqa: E402
 
 def _load_params(args, cfg):
     if args.packed:
-        from repro.core import PackedModel
-        packed = PackedModel.load(args.packed)
+        from repro.core import ArtifactError, PackedModel
+        try:
+            packed = PackedModel.load(args.packed)
+        except ArtifactError as e:
+            # integrity gate: a truncated/corrupt artifact must fail the
+            # launch cleanly, never half-serve
+            sys.exit(f"refusing to serve {args.packed}: {e}")
         quant_names = (None if args.serve_leaves == "all"
                        else ("w_in", "w_gate", "w_out"))
         params = packed.serving_params(
@@ -128,6 +133,18 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    # fault tolerance (engine mode)
+    ap.add_argument("--deadline", type=int, default=None,
+                    help="per-request deadline in engine steps "
+                         "(DEADLINE_EXCEEDED past it)")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bound the request queue; submissions beyond it "
+                         "get REJECTED_BACKPRESSURE")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="serve under the restart supervisor with "
+                         "periodic snapshots to this directory")
+    ap.add_argument("--snapshot-every", type=int, default=32,
+                    help="steps between snapshots (with --snapshot-dir)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -169,23 +186,49 @@ def main():
         reqs.append(Request(rid=r, prompt=np.asarray(prompts[r]),
                             max_new_tokens=gen_len,
                             temperature=args.temperature,
-                            top_k=args.top_k, seed=args.seed + r))
+                            top_k=args.top_k, seed=args.seed + r,
+                            deadline_steps=args.deadline))
+
+    def build():
+        return Engine(params, cfg, n_slots=n_slots,
+                      page_size=args.page_size,
+                      max_seq=args.prompt_len + args.gen_len,
+                      n_pages=args.pages, token_budget=args.token_budget,
+                      mesh=mesh, queue_limit=args.queue_limit)
+
     with mesh:
-        eng = Engine(params, cfg, n_slots=n_slots,
-                     page_size=args.page_size,
-                     max_seq=args.prompt_len + args.gen_len,
-                     n_pages=args.pages, token_budget=args.token_budget,
-                     mesh=mesh)
-        outs = eng.run(reqs)
-    for r in sorted(outs):
-        print(f"req{r}: {outs[r]}")
-    s = eng.stats.summary()
-    print(f"engine: {s['delivered_tokens']} tokens in {s['steps']} steps "
-          f"({s['tokens_per_s']:.1f} tok/s, occupancy "
-          f"{s['slot_occupancy']:.2f}, page util {s['page_utilization']:.2f}"
-          f" peak {s['page_utilization_max']:.2f}, "
-          f"{s['preemptions']} preemptions, decode compiled "
-          f"{eng.decode_compile_count()}x)")
+        if args.snapshot_dir:
+            from repro.engine import (ServeSupervisorConfig,
+                                      supervised_serve)
+            sup = ServeSupervisorConfig(snapshot_dir=args.snapshot_dir,
+                                        snapshot_every=args.snapshot_every)
+            outs, results, report = supervised_serve(build, reqs, sup)
+            eng = None
+            print(f"supervisor: {report.snapshots} snapshots, "
+                  f"{report.restores} restores, {report.restarts} restarts")
+        else:
+            eng = build()
+            outs = eng.run(reqs)
+            results = eng.results
+    for r in sorted(results):
+        res = results[r]
+        if res.ok:
+            print(f"req{r}: {res.tokens}")
+        else:
+            print(f"req{r}: {res.outcome.value} ({res.detail}; "
+                  f"{res.tokens.size} partial tokens)")
+    n_bad = sum(not res.ok for res in results.values())
+    if n_bad:
+        print(f"outcomes: {len(results) - n_bad}/{len(results)} finished")
+    if eng is not None:
+        s = eng.stats.summary()
+        print(f"engine: {s['delivered_tokens']} tokens in {s['steps']} "
+              f"steps ({s['tokens_per_s']:.1f} tok/s, occupancy "
+              f"{s['slot_occupancy']:.2f}, page util "
+              f"{s['page_utilization']:.2f}"
+              f" peak {s['page_utilization_max']:.2f}, "
+              f"{s['preemptions']} preemptions, decode compiled "
+              f"{eng.decode_compile_count()}x)")
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ Design points for 1000+ nodes (DESIGN §9):
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import io
 import json
@@ -39,6 +40,42 @@ import numpy as np
 PyTree = Any
 
 
+def file_sha256(path: str) -> str:
+    """Streaming SHA-256 of a file (integrity gate for checkpoint and
+    engine-snapshot artifacts)."""
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+@contextlib.contextmanager
+def atomic_dir(final: str):
+    """Write a directory atomically: yields ``<final>.tmp`` to fill,
+    then os.rename's it over ``final`` (atomic on POSIX) — a crash
+    mid-write never leaves a half-written directory at ``final``.
+    Shared by training checkpoints and engine snapshots."""
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    yield tmp
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+
+def write_pointer(directory: str, pointer: str, value: str):
+    """Atomically update ``<directory>/<pointer>`` to ``value`` (written
+    last, after the data it names — the restore path never sees a
+    pointer to a half-written artifact)."""
+    tmp = os.path.join(directory, pointer + ".tmp")
+    with open(tmp, "w") as f:
+        f.write(value)
+    os.replace(tmp, os.path.join(directory, pointer))
+
+
 def _flatten_with_paths(tree: PyTree):
     flat, treedef = jax.tree_util.tree_flatten(tree)
     return flat, treedef
@@ -49,40 +86,27 @@ def save_checkpoint(directory: str, step: int, tree: PyTree,
     """Atomically persist ``tree`` (+ JSON-serializable ``extra``)."""
     os.makedirs(directory, exist_ok=True)
     name = f"step_{step:08d}"
-    tmp = os.path.join(directory, name + ".tmp")
     final = os.path.join(directory, name)
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
 
-    flat, treedef = _flatten_with_paths(tree)
-    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(flat)}
-    npz_path = os.path.join(tmp, "arrays.npz")
-    np.savez(npz_path, **arrays)
+    with atomic_dir(final) as tmp:
+        flat, treedef = _flatten_with_paths(tree)
+        arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(flat)}
+        npz_path = os.path.join(tmp, "arrays.npz")
+        np.savez(npz_path, **arrays)
 
-    with open(npz_path, "rb") as f:
-        digest = hashlib.sha256(f.read()).hexdigest()
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(flat),
+            "dtypes": [str(np.asarray(x).dtype) for x in flat],
+            "shapes": [list(np.asarray(x).shape) for x in flat],
+            "sha256": file_sha256(npz_path),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
 
-    manifest = {
-        "step": step,
-        "treedef": str(treedef),
-        "n_leaves": len(flat),
-        "dtypes": [str(np.asarray(x).dtype) for x in flat],
-        "shapes": [list(np.asarray(x).shape) for x in flat],
-        "sha256": digest,
-        "extra": extra or {},
-    }
-    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
-        f.write(msgpack.packb(manifest))
-
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)                       # atomic on POSIX
-    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
-        f.write(name)
-    os.replace(os.path.join(directory, "LATEST.tmp"),
-               os.path.join(directory, "LATEST"))
-
+    write_pointer(directory, "LATEST", name)
     _gc_old(directory, keep)
     return final
 
@@ -120,9 +144,7 @@ def restore_checkpoint(directory: str, like: PyTree,
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
     npz_path = os.path.join(path, "arrays.npz")
-    with open(npz_path, "rb") as f:
-        digest = hashlib.sha256(f.read()).hexdigest()
-    if digest != manifest["sha256"]:
+    if file_sha256(npz_path) != manifest["sha256"]:
         raise IOError(f"checkpoint {path} failed integrity check")
 
     data = np.load(npz_path)

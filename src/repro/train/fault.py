@@ -1,16 +1,18 @@
-"""Fault tolerance: supervised step loop with checkpoint/restart.
+"""Training-side fault tolerance: supervised step loop with
+checkpoint/restart.
 
-On a real cluster the failure signals are coordinator heartbeats /
-preemption notices; in this container we exercise the identical control
-flow with injected failures, which is what the restart logic actually has
-to survive:
+The supervisor primitives (:class:`SimulatedNodeFailure`,
+:class:`PreemptionSignal`, :class:`FailureInjector`, backoff) are shared
+with the serving engine and live in :mod:`repro.fault`; this module owns
+the *training* recovery loop:
 
-* ``FailureInjector`` raises ``SimulatedNodeFailure`` at configured steps
-  (tests also inject at *checkpoint-write* time to verify atomicity);
 * ``supervised_run`` catches failures, restores the last checkpoint
   (params/opt/LC state + data cursor) and resumes, with bounded restarts
   and exponential backoff;
 * ``PreemptionSignal`` triggers a save-and-exit (SIGTERM-style handling).
+
+The serving analogue — engine snapshot/restore with typed request
+outcomes — is ``repro.engine.snapshot.supervised_serve``.
 
 Straggler mitigation is structural (DESIGN §9): prefetch depth ≥ 2,
 C step fused into the jitted program, pod-axis gradient compression.
@@ -19,32 +21,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Iterator, Optional, Set
+from typing import Any, Callable, Dict, Iterator, Optional
 
+from repro.fault import (FailureInjector, PreemptionSignal,  # noqa: F401
+                         SimulatedNodeFailure, backoff_delay)
 from repro.train import checkpoint as ckpt
-
-
-class SimulatedNodeFailure(RuntimeError):
-    pass
-
-
-class PreemptionSignal(Exception):
-    pass
-
-
-@dataclasses.dataclass
-class FailureInjector:
-    fail_at_steps: Set[int] = dataclasses.field(default_factory=set)
-    preempt_at: Optional[int] = None
-    _fired: Set[int] = dataclasses.field(default_factory=set)
-
-    def check(self, step: int):
-        if step in self.fail_at_steps and step not in self._fired:
-            self._fired.add(step)
-            raise SimulatedNodeFailure(f"injected failure at step {step}")
-        if self.preempt_at is not None and step == self.preempt_at:
-            self.preempt_at = None
-            raise PreemptionSignal(f"preempted at step {step}")
 
 
 @dataclasses.dataclass
@@ -102,8 +83,9 @@ def supervised_run(
             restarts += 1
             if restarts > cfg.max_restarts:
                 raise
-            if cfg.backoff_s:
-                time.sleep(min(cfg.backoff_s * 2 ** (restarts - 1), 60.0))
+            delay = backoff_delay(restarts, cfg.backoff_s)
+            if delay:
+                time.sleep(delay)
             last = ckpt.latest_step(cfg.ckpt_dir)
             if last is None:
                 # no checkpoint yet — restart from scratch

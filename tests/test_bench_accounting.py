@@ -89,7 +89,8 @@ def test_engine_throughput_rows(bench_json):
     the equal-HBM budget it compared under."""
     for expect in ("engine_throughput_dense",
                    "engine_throughput_K2_packed",
-                   "engine_throughput_K16_packed"):
+                   "engine_throughput_K16_packed",
+                   "engine_throughput_faulted"):
         assert expect in bench_json, f"bench row {expect} disappeared"
         derived = bench_json[expect]["derived"]
         m = _TPS_RE.search(derived)
@@ -101,3 +102,7 @@ def test_engine_throughput_rows(bench_json):
         assert "equal-HBM" in derived
         if "packed" in expect:
             assert "B/weight idx" in derived
+        if "faulted" in expect:
+            # the fault-tolerance cost row must state its injected rate
+            # and what the supervisor did
+            assert "faults=" in derived and "restarts" in derived

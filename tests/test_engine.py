@@ -16,8 +16,8 @@ import numpy as np
 import pytest
 
 from helpers import mixed_cfg, pack_model
-from repro.engine import (Engine, PagePool, Request, SlotScheduler,
-                          greedy_generate, truncate_at_eos)
+from repro.engine import (Engine, Outcome, PagePool, Request,
+                          SlotScheduler, greedy_generate, truncate_at_eos)
 
 
 @functools.lru_cache(maxsize=None)
@@ -309,19 +309,89 @@ def test_slot_scheduler_admit_evict_tracking():
 
 
 def test_engine_rejects_oversized_request_and_tiny_pool():
+    # rejections are *typed outcomes*, not exceptions: submit never
+    # raises, never reserves pages, and records the reason
     cfg, params = _mixed(16, "packed")
     p16 = _prompts(cfg.vocab, 1, 16)
     eng = Engine(params, cfg, n_slots=1, page_size=8, max_seq=24)
-    with pytest.raises(ValueError):
-        eng.submit(Request(rid=0, prompt=p16[0], max_new_tokens=100))
+    out = eng.submit(Request(rid=0, prompt=p16[0], max_new_tokens=100))
+    assert out is Outcome.REJECTED_TOO_LARGE
+    assert eng.results[0].outcome is Outcome.REJECTED_TOO_LARGE
+    assert "max_seq" in eng.results[0].detail
+    assert eng.pool.used_pages == 0 and not eng.sched.has_work()
     # a request that fits max_seq but can never fit the pool must be
     # rejected up front (it would otherwise preempt-cycle forever)
     eng2 = Engine(params, cfg, n_slots=1, page_size=8, max_seq=24,
                   n_pages=2)
-    with pytest.raises(ValueError):
-        eng2.submit(Request(rid=0, prompt=p16[0], max_new_tokens=8))
-    # pool smaller than one prompt: same loud rejection, not a hang
+    out2 = eng2.submit(Request(rid=0, prompt=p16[0], max_new_tokens=8))
+    assert out2 is Outcome.REJECTED_TOO_LARGE
+    assert "pool" in eng2.results[0].detail
+    # pool smaller than one prompt: same typed rejection, not a hang,
+    # and run() completes returning no streams
     eng3 = Engine(params, cfg, n_slots=1, page_size=8, max_seq=24,
                   n_pages=1)
-    with pytest.raises(ValueError):
-        eng3.run([Request(rid=0, prompt=p16[0], max_new_tokens=2)])
+    outs = eng3.run([Request(rid=0, prompt=p16[0], max_new_tokens=2)])
+    assert outs == {}
+    assert eng3.results[0].outcome is Outcome.REJECTED_TOO_LARGE
+    assert eng3.stats.rejected == 1
+
+
+def test_engine_backpressure_and_cancel():
+    cfg, params = _mixed(16, "packed")
+    prompts = _prompts(cfg.vocab, 5, 8)
+    eng = Engine(params, cfg, n_slots=1, page_size=8, max_seq=16,
+                 queue_limit=2)
+    reqs = [Request(rid=r, prompt=prompts[r], max_new_tokens=4)
+            for r in range(5)]
+    outcomes = [eng.submit(r) for r in reqs]
+    # slot admission happens inside step(), so the limit bounds the
+    # whole backlog: 2 queued, 3 shed with a typed outcome
+    assert outcomes[:2] == [None, None]
+    assert all(o is Outcome.REJECTED_BACKPRESSURE for o in outcomes[2:])
+    # cancel one queued request before it ever runs
+    assert eng.cancel(1)
+    assert eng.results[1].outcome is Outcome.CANCELLED
+    assert not eng.cancel(99)          # unknown rid
+    outs = eng.run()
+    assert sorted(outs) == [0]
+    assert eng.results[0].outcome is Outcome.FINISHED
+    assert eng.stats.cancelled == 1 and eng.stats.rejected == 3
+    # every submitted rid has exactly one typed outcome
+    assert sorted(eng.results) == [0, 1, 2, 3, 4]
+
+
+def test_engine_deadline_exceeded_typed():
+    cfg, params = _mixed(16, "packed")
+    prompts = _prompts(cfg.vocab, 2, 8)
+    eng = Engine(params, cfg, n_slots=2, page_size=8, max_seq=64)
+    eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=40,
+                       deadline_steps=4))
+    eng.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=4))
+    outs = eng.run()
+    # the tight-deadline request expires mid-stream with partial tokens
+    # and freed pages; its neighbor finishes untouched
+    assert sorted(outs) == [1]
+    res = eng.results[0]
+    assert res.outcome is Outcome.DEADLINE_EXCEEDED
+    assert 0 < res.tokens.size < 40
+    assert eng.results[1].outcome is Outcome.FINISHED
+    assert eng.pool.used_pages == 0
+    assert eng.stats.deadline_expired == 1
+
+
+def test_engine_max_steps_returns_partials():
+    cfg, params = _mixed(16, "packed")
+    prompts = _prompts(cfg.vocab, 2, 8)
+    eng = Engine(params, cfg, n_slots=2, page_size=8, max_seq=64)
+    reqs = [Request(rid=r, prompt=prompts[r], max_new_tokens=30)
+            for r in range(2)]
+    outs = eng.run(reqs, max_steps=6)
+    # overrun no longer throws away completed work: stragglers fail
+    # typed with their partial prefix attached
+    assert outs == {}                  # nothing finished in 6 steps
+    for r in range(2):
+        res = eng.results[r]
+        assert res.outcome is Outcome.FAILED
+        assert "max_steps" in res.detail
+        assert res.tokens.size > 0
+    assert not eng.sched.has_work() and eng.pool.used_pages == 0

@@ -147,3 +147,116 @@ def test_register_scheme_decorator_extends_registry():
             schemes.register_scheme(name)(factory)
     finally:
         schemes._REGISTRY.pop(name, None)
+
+
+# ---------------------------------------------------------------------------
+# artifact integrity: v2 manifest verification + typed ArtifactError
+# ---------------------------------------------------------------------------
+
+def _packed_artifact(tmp_path):
+    params = _toy_params(jax.random.PRNGKey(4))
+    plan = CompressionPlan.parse("adaptive:4")
+    qspec = plan.build_qspec(params)
+    state = plan.init(jax.random.PRNGKey(5), params, qspec)
+    packed = plan.pack(params, state, qspec)
+    packed.save(str(tmp_path))
+    return packed
+
+
+def test_artifact_manifest_v2_integrity_records(tmp_path):
+    import json
+    import os
+    _packed_artifact(tmp_path)
+    with open(os.path.join(str(tmp_path), "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 2
+    data = np.load(os.path.join(str(tmp_path), "arrays.npz"))
+    # one integrity record per npz key, with totals
+    assert sorted(man["arrays"]) == sorted(data.files)
+    assert man["n_arrays"] == len(data.files)
+    assert man["total_elements"] == sum(int(data[k].size)
+                                        for k in data.files)
+    for key, rec in man["arrays"].items():
+        assert len(rec["sha256"]) == 64
+        assert rec["dtype"] == str(data[key].dtype)
+        assert rec["shape"] == list(data[key].shape)
+    # clean round trip still verifies
+    PackedModel.load(str(tmp_path))
+
+
+def test_artifact_corruption_names_bad_leaf(tmp_path):
+    import json
+    import os
+    from repro.core import ArtifactError
+    _packed_artifact(tmp_path)
+    with open(os.path.join(str(tmp_path), "manifest.json")) as f:
+        man = json.load(f)
+    # flip one element of one array and re-zip: sha mismatch must name
+    # the leaf that owns the corrupted key
+    data = dict(np.load(os.path.join(str(tmp_path), "arrays.npz")))
+    key = sorted(k for k in data if k.startswith("p"))[0]
+    arr = data[key].copy()
+    arr.view(np.uint8).flat[0] ^= 1    # single flipped bit, any dtype
+    data[key] = arr
+    np.savez(os.path.join(str(tmp_path), "arrays.npz"), **data)
+    owner = man["packed"][0]["path"]
+    with pytest.raises(ArtifactError, match="integrity"):
+        PackedModel.load(str(tmp_path))
+    with pytest.raises(ArtifactError, match=key):
+        PackedModel.load(str(tmp_path))
+    try:
+        PackedModel.load(str(tmp_path))
+    except ArtifactError as e:
+        assert owner in str(e)
+
+
+def test_artifact_truncation_and_missing_pieces(tmp_path):
+    import os
+    from repro.core import ArtifactError
+    _packed_artifact(tmp_path)
+    # drop an array: typed error naming the missing key
+    data = dict(np.load(os.path.join(str(tmp_path), "arrays.npz")))
+    dropped = sorted(data)[0]
+    data.pop(dropped)
+    np.savez(os.path.join(str(tmp_path), "arrays.npz"), **data)
+    with pytest.raises(ArtifactError, match="truncated|missing|holds"):
+        PackedModel.load(str(tmp_path))
+    # unreadable zip
+    with open(os.path.join(str(tmp_path), "arrays.npz"), "wb") as f:
+        f.write(b"not a zip")
+    with pytest.raises(ArtifactError, match="unreadable"):
+        PackedModel.load(str(tmp_path))
+    # absent files
+    os.remove(os.path.join(str(tmp_path), "arrays.npz"))
+    with pytest.raises(ArtifactError, match="arrays"):
+        PackedModel.load(str(tmp_path))
+    os.remove(os.path.join(str(tmp_path), "manifest.json"))
+    with pytest.raises(ArtifactError, match="manifest"):
+        PackedModel.load(str(tmp_path))
+
+
+def test_artifact_v1_loads_with_warning(tmp_path):
+    import json
+    import os
+    pm = _packed_artifact(tmp_path)
+    man_path = os.path.join(str(tmp_path), "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    # rewrite as a pre-integrity version-1 manifest (the committed
+    # golden fixtures have this shape)
+    man["version"] = 1
+    for k in ("arrays", "n_arrays", "total_elements"):
+        man.pop(k)
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    with pytest.warns(UserWarning, match="version-1"):
+        loaded = PackedModel.load(str(tmp_path))
+    for path, leaf in pm.packed.items():
+        np.testing.assert_array_equal(loaded.packed[path].words, leaf.words)
+    # a manifest newer than this reader is refused outright
+    man["version"] = 3
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    from repro.core import ArtifactError
+    with pytest.raises(ArtifactError, match="newer"):
+        PackedModel.load(str(tmp_path))
