@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_call
-from repro.core import compression
+from repro.core import compression, kvquant
 from repro.kernels import dispatch, ops, ref
 
 
@@ -179,6 +179,121 @@ def run():
             f"idx_bytes/weight={bpw:.4f} (== bits_per_index/8 = "
             f"{expect:.4f}{flag}; +{k * 4} B codebook; LM-head shape "
             f"{m5}x{d5}x{v5}; blocks bm={bm} bn={bn} bk={bk})"))
+
+    # -- paged-attention decode (dense + codebook-quantized KV pages) --------
+    # The KV B/token note is measured from the materialized pool arrays
+    # (word bytes per cached token per tensor — codebooks amortize per
+    # page and are quoted separately), and must equal kv_bits/8 ·
+    # head_dim · n_kv — the eq.-14 activation accounting
+    # tests/test_bench_accounting.py enforces on every such row.  Dense
+    # rows report the same identity at kv_bits=32 (4 B/scalar).  head_dim
+    # is a multiple of every lane count so rows pack with no ragged tail;
+    # token tiles come from dispatch._PAGED_BLOCK_TABLE (the committed
+    # winners this bench measures).
+    def _kv_note(actual_bpt, bits_eff, hd, nkv, page, tile, cb_b):
+        expect = bits_eff / 8 * hd * nkv
+        flag = "" if abs(actual_bpt - expect) < 1e-9 else " MISMATCH"
+        return (f"kv_bytes/token={actual_bpt:g} (== kv_bits/8*head_dim*"
+                f"n_kv = {expect:g}{flag}; kv_bits={bits_eff} "
+                f"head_dim={hd} n_kv={nkv}; +{cb_b} B codebook/page; "
+                f"page={page} tile={tile})")
+
+    bq, hq, kvh, hd6, page6, npg6 = 4, 4, 2, 32, 8, 3
+    pp1 = bq * npg6 + 1                         # pool pages incl. trash
+    kp = jax.random.normal(jax.random.fold_in(key, 400),
+                           (pp1, page6, kvh, hd6), jnp.float32)
+    vp = jax.random.normal(jax.random.fold_in(key, 401), kp.shape)
+    q6 = jax.random.normal(jax.random.fold_in(key, 402),
+                           (bq, 1, hq, hd6), jnp.float32)
+    tbl6 = jnp.asarray(rng.permutation(np.arange(1, pp1)
+                                       ).reshape(bq, npg6), jnp.int32)
+    pos6 = jnp.asarray([20, 13, 7, 2], jnp.int32)
+    alive6 = jnp.asarray([True, True, True, False])
+    scale6 = hd6 ** -0.5
+
+    tile = dispatch.paged_token_tile("gqa", kvh * hd6, page6, 0)
+    note = _kv_note(kvh * hd6 * 4, 32, hd6, kvh, page6, tile, 0)
+    us = time_call(jax.jit(lambda *a: ref.paged_attention_ref(
+        *a, softcap=None, scale=scale6)), q6, kp, vp, tbl6, pos6, alive6,
+        warmup=2, iters=5)
+    rows.append(("paged_attention_gqa_ref_dense", us,
+                 f"{note}; jnp gather+softmax oracle"))
+    us = time_call(lambda *a: ops.paged_attention(
+        *a, softcap=None, scale=scale6, token_tile=tile, interpret=True),
+        q6, kp, vp, tbl6, pos6, alive6, warmup=1, iters=2)
+    rows.append(("paged_attention_gqa_interp_dense", us,
+                 f"{note}; scalar-prefetch fused kernel, interpret-mode"))
+
+    def _quantize_pool(pool, bits):
+        grp = pool.reshape(pool.shape[0], 1, -1)
+        cb = kvquant.fit_codebooks(grp, bits)
+        idx = kvquant.assign_codebook(grp, cb).reshape(pool.shape)
+        return kvquant.pack_rows_jnp(idx, bits), cb
+
+    for bits in (2, 4, 8):
+        kw, kcb = _quantize_pool(kp, bits)
+        vw, vcb = _quantize_pool(vp, bits)
+        tile = dispatch.paged_token_tile("gqa", kvh * hd6, page6, bits)
+        bpt = kw[0].nbytes / page6               # words/token/tensor
+        cb_b = kcb[0].nbytes
+        note = _kv_note(bpt, bits, hd6, kvh, page6, tile, cb_b)
+        if bits == 4:
+            us = time_call(jax.jit(lambda *a: ref.paged_attention_quant_ref(
+                *a, bits=4, head_dim=hd6, softcap=None, scale=scale6)),
+                q6, kw, vw, kcb, vcb, tbl6, pos6, alive6,
+                warmup=2, iters=5)
+            rows.append(("paged_attention_gqa_ref_kvq4", us,
+                         f"{note}; dequant-pages oracle"))
+        us = time_call(lambda *a: ops.paged_attention_quant(
+            *a, bits=bits, head_dim=hd6, softcap=None, scale=scale6,
+            token_tile=tile, interpret=True),
+            q6, kw, vw, kcb, vcb, tbl6, pos6, alive6, warmup=1, iters=2)
+        rows.append((f"paged_attention_gqa_interp_kvq{bits}", us,
+                     f"{note}; in-kernel shift+mask dequant, "
+                     f"interpret-mode"))
+
+    # absorbed-MLA latent pages: one "head" of kv_lora + rope_dim feats
+    lat7, rd7 = 32, 16
+    cp = jax.random.normal(jax.random.fold_in(key, 410),
+                           (pp1, page6, lat7), jnp.float32)
+    rp = jax.random.normal(jax.random.fold_in(key, 411),
+                           (pp1, page6, rd7), jnp.float32)
+    qe = jax.random.normal(jax.random.fold_in(key, 412),
+                           (bq, 1, hq, lat7), jnp.float32)
+    qr = jax.random.normal(jax.random.fold_in(key, 413),
+                           (bq, 1, hq, rd7), jnp.float32)
+    scale7 = (lat7 + rd7) ** -0.5
+    tile = dispatch.paged_token_tile("mla", lat7 + rd7, page6, 0)
+    note = _kv_note((lat7 + rd7) * 4, 32, lat7 + rd7, 1, page6, tile, 0)
+    us = time_call(lambda *a: ops.mla_paged_attention(
+        *a, scale=scale7, token_tile=tile, interpret=True),
+        qe, qr, cp, rp, tbl6, pos6, alive6, warmup=1, iters=2)
+    rows.append(("paged_attention_mla_interp_dense", us,
+                 f"{note}; latent pages, interpret-mode"))
+
+    cw, ccb = _quantize_pool(cp, 4)
+    rw, rcb = _quantize_pool(rp, 4)
+    tile = dispatch.paged_token_tile("mla", lat7 + rd7, page6, 4)
+    bpt = (cw[0].nbytes + rw[0].nbytes) / page6
+    note = _kv_note(bpt, 4, lat7 + rd7, 1, page6, tile,
+                    ccb[0].nbytes + rcb[0].nbytes)
+    us = time_call(lambda *a: ops.mla_paged_attention_quant(
+        *a, bits=4, kv_lora=lat7, rope_dim=rd7, scale=scale7,
+        token_tile=tile, interpret=True),
+        qe, qr, cw, rw, ccb, rcb, tbl6, pos6, alive6, warmup=1, iters=2)
+    rows.append(("paged_attention_mla_interp_kvq4", us,
+                 f"{note}; quantized latent pages, interpret-mode"))
+
+    # standalone page gather (the non-fused slot view)
+    us = time_call(jax.jit(ref.gather_pages_ref), kp, tbl6, alive6,
+                   warmup=2, iters=5)
+    rows.append(("page_gather_ref_dense", us,
+                 f"alive-masked table gather; pool {pp1}x{page6}x"
+                 f"{kvh}x{hd6}"))
+    us = time_call(lambda *a: ops.page_gather(*a, interpret=True),
+                   kp, tbl6, alive6, warmup=1, iters=2)
+    rows.append(("page_gather_interp_dense", us,
+                 "scalar-prefetch page DMA, interpret-mode"))
 
     # -- kmeans assign -------------------------------------------------------
     p = 1 << 20

@@ -27,9 +27,14 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 # single-compile, short-lived processes.
 export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_cpu_parallel_codegen_split_count=1"
 
-# Cross-route differential matrix first — the serving-layout invariant
-# ({dense, uint8, packed} × {forward, prefill, decode} × K × dtype must
-# stay bit-exact; tests/test_differential.py + golden artifacts) — then
+# Differential matrices first — the serving-layout invariant ({dense,
+# uint8, packed} × {forward, prefill, decode} × K × dtype bit-exact;
+# tests/test_differential.py + golden artifacts) and the paged-KV
+# invariant ({dense KV, quantized KV} × {gqa, mla} × K: quant refs ==
+# dense refs on dequantized pools bit-exactly, engine streams == the
+# one-shot oracle at kv_bits=0; tests/test_paged_attention.py) — both
+# before any engine smoke below, so a KV-cache regression fails the
+# build at the kernel oracle, not in an end-to-end stream diff.  Then
 # the rest of tier-1.  With extra pytest args, fall back to one plain
 # invocation so -k/--lf/-m filters keep applying to everything.
 # Mosaic-only tests carry the `tpu` marker and auto-skip on CPU (run
@@ -38,10 +43,12 @@ if [ "$#" -gt 0 ]; then
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 else
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
-        tests/test_differential.py tests/test_golden_fixtures.py
+        tests/test_differential.py tests/test_golden_fixtures.py \
+        tests/test_paged_attention.py
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
         --ignore=tests/test_differential.py \
-        --ignore=tests/test_golden_fixtures.py
+        --ignore=tests/test_golden_fixtures.py \
+        --ignore=tests/test_paged_attention.py
 fi
 
 # Full-model packed-serving smoke: the mixed attention+MLP+MoE+SSM stack

@@ -14,11 +14,17 @@ human table (``launch.report.audit_table``):
    backend-independent, and CI has no TPU) and assert each packed leaf's
    only HBM input is its uint32 word operand at ``bits_per_index(K)/8``
    bytes/weight;
-3. **recompile** — drive a fresh engine through admission / chunked
+3. **kv-operand-missing / kv-dead-operand / kv-dense-input** — compile
+   the quantized-KV engine's fused decode (``kv_bits=4``) and assert the
+   KV pages reach it as live uint32 word pools with no dense-width float
+   KV parameter riding along (eq. 14 extended to activation bytes);
+4. **recompile** — drive a fresh engine through admission / chunked
    prefill / completion / page-pressure preemption after a warmup run
    and assert zero jit-cache growth;
-4. **vmem-blocks** — lint every block config reachable from the
-   autotune surface (VMEM footprint, lane divisibility) without Mosaic.
+5. **vmem-blocks** — lint every block config reachable from the
+   autotune surface (VMEM footprint, lane divisibility) without Mosaic —
+   the packed-matmul tables *and* every committed
+   ``_PAGED_BLOCK_TABLE`` token tile.
 
 Violations matching ``allowlist.json`` (packaged default, or
 ``--allowlist``) are reported but don't fail the gate; anything else
@@ -59,6 +65,11 @@ def load_allowlist(path: Optional[str] = None) -> List[Dict[str, str]]:
         if not e.get("reason"):
             raise ValueError(f"allowlist entry {e} has no reason — "
                              f"document the exception or remove it")
+        if not re.search(r"\b(PR|ISSUE)[ -]?\d+\b", e["reason"]):
+            raise ValueError(
+                f"allowlist entry for {e.get('subject')!r}: the reason "
+                f"must name the PR/issue that blessed the exception "
+                f"(e.g. 'PR 6'), got: {e['reason']!r}")
     return entries
 
 
@@ -114,6 +125,28 @@ def _serve_entries(sp, cfg):
     return entries
 
 
+def _kvq_entry(sp, cfg, kv_bits: int = 4):
+    """(name, (fn, args), kv_cfg) for the quantized-KV engine's fused
+    decode+sample entry — the graph the KV-page operand check compiles.
+    ``kv_cfg`` is the engine's config with ``kv_bits`` applied."""
+    import jax.numpy as jnp
+
+    from repro.engine.engine import Engine, _decode_and_sample
+
+    eng = Engine(sp, cfg, n_slots=2, page_size=8, max_seq=32,
+                 kv_bits=kv_bits)
+    kcfg = eng.cfg
+    b = eng.n_slots
+    args = (sp, eng.caches, jnp.asarray(eng.pool.table),
+            jnp.zeros((b, 1), jnp.int32), jnp.zeros((b,), jnp.int32),
+            jnp.zeros((b,), bool), jnp.zeros((b,), jnp.float32),
+            jnp.zeros((b,), jnp.int32), jnp.zeros((b, 2), jnp.uint32),
+            jnp.zeros((b,), bool))
+    fn = (lambda p, c, pt, t, pos, al, tm, tk, ky, po: _decode_and_sample(
+        p, kcfg, c, pt, t, pos, al, tm, tk, ky, po))
+    return f"engine_decode_sample_kvq{kv_bits}", (fn, args), kcfg
+
+
 def run_audit(packed_dir: str, config: Optional[str] = None,
               allowlist_path: Optional[str] = None,
               skip: Optional[List[str]] = None) -> Dict[str, Any]:
@@ -163,6 +196,21 @@ def run_audit(packed_dir: str, config: Optional[str] = None,
                     "float_input_bytes": res["float_input_bytes"],
                 }
                 violations.extend(res["violations"])
+            # KV pages at kv_bits width: the quantized-KV engine's decode
+            # must keep every packed *weight* leaf AND read the KV pools
+            # as live uint32 words with no dense-width float KV input.
+            name, (fn, args), kcfg = _kvq_entry(sp, cfg)
+            res = H.audit_entry_hbm(fn, args, prot, entry=name)
+            kv = H.audit_kv_page_operands(fn, args, kcfg, entry=name)
+            hbm_entries[name] = {
+                "rows": res["rows"],
+                "packed_input_bytes": res["packed_input_bytes"],
+                "float_input_bytes": res["float_input_bytes"],
+                "kv_rows": kv["rows"],
+                "kv_word_input_bytes": kv["kv_word_input_bytes"],
+            }
+            violations.extend(res["violations"])
+            violations.extend(kv["violations"])
         report["checks"]["hbm"] = hbm_entries
 
     if "recompile" not in skip:
@@ -177,11 +225,15 @@ def run_audit(packed_dir: str, config: Optional[str] = None,
 
     if "vmem" not in skip:
         res = V.audit_block_space(prot)
+        pres = V.audit_paged_block_space()
         report["checks"]["vmem"] = {
-            "configs_checked": len(res["rows"]),
-            "warnings": [w for r in res["rows"] for w in r["warnings"]],
+            "configs_checked": len(res["rows"]) + len(pres["rows"]),
+            "paged_configs_checked": len(pres["rows"]),
+            "warnings": [w for r in res["rows"] + pres["rows"]
+                         for w in r["warnings"]],
         }
         violations.extend(res["violations"])
+        violations.extend(pres["violations"])
 
     active, allowed = split_allowed(violations,
                                     load_allowlist(allowlist_path))

@@ -29,6 +29,7 @@ from typing import Any, Dict, List, Sequence
 import jax
 import numpy as np
 
+from repro.core import kvquant
 from repro.core.compression import bits_per_index
 from repro.launch import hlo_analysis
 
@@ -133,3 +134,94 @@ def audit_entry_hbm(fn, args: Sequence[Any], protected: Dict[str, dict],
     return {"entry": entry, "rows": rows, "violations": violations,
             "packed_input_bytes": packed_bytes,
             "float_input_bytes": float_bytes}
+
+
+def _kv_dense_shapes(shape, cfg):
+    """Dense-widened shape(s) a uint32 KV word pool stands in for.
+
+    GQA word pools are ``[P+1, page, KV, Wd]`` → dense ``[..., head_dim]``;
+    MLA latent pools are ``[P+1, page, Wd]`` where ``Wd`` identifies the
+    tensor (``words_per(kv_lora)`` vs ``words_per(rope_dim)``).
+    """
+    bits = cfg.kv_bits
+    if len(shape) == 4:
+        return [tuple(shape[:3]) + (cfg.head_dim,)]
+    wd = shape[-1]
+    mla_dims = ((cfg.mla.kv_lora, cfg.mla.rope_dim) if cfg.mla is not None
+                else ())
+    outs = [tuple(shape[:2]) + (d,) for d in mla_dims
+            if d and kvquant.words_per(d, bits) == wd]
+    return outs or [tuple(shape[:2]) + (wd * kvquant.kv_lanes(bits),)]
+
+
+def audit_kv_page_operands(fn, args: Sequence[Any], cfg, *,
+                           entry: str = "entry") -> Dict[str, Any]:
+    """Eq.-14 on activations: prove the compiled decode entry reads KV
+    pages at ``kv_bits``-width.
+
+    With ``cfg.kv_bits > 0`` the cache tree's KV pools are bit-packed
+    uint32 word tensors (``[P+1, page, KV, Wd]`` for GQA, ``[P+1, page,
+    Wd]`` for MLA latents — ndim ≥ 3, which disambiguates them from the
+    uint32 ``[B, 2]`` sampling keys).  Per word pool this asserts:
+
+    * the entry parameter is **live** (a dead word operand means the
+      graph sourced KV some other way);
+    * **no float parameter** of the pool's dense-widened shape exists —
+      the regression where a dense KV pool rides along at full width.
+
+    Zero word pools in the argument tree while ``kv_bits`` is set is
+    itself a violation (the engine silently fell back to dense pages).
+    """
+    text = jax.jit(fn).lower(*args).compile().as_text()
+    params = hlo_analysis.entry_parameters(text, on_unknown="raise")
+    paths = _leaf_paths(args)
+    if len(params) != len(paths):
+        raise RuntimeError(
+            f"{entry}: HLO entry has {len(params)} parameters but the "
+            f"argument tree has {len(paths)} leaves")
+    flat = jax.tree_util.tree_flatten(tuple(args))[0]
+
+    rows: List[Dict[str, Any]] = []
+    violations: List[Dict[str, str]] = []
+    dense_shapes: Dict[tuple, str] = {}
+    word_bytes = 0.0
+    for i, (leaf, prm) in enumerate(zip(flat, params)):
+        if (getattr(leaf, "dtype", None) != np.uint32
+                or getattr(leaf, "ndim", 0) < 3):
+            continue
+        for ds in _kv_dense_shapes(leaf.shape, cfg):
+            dense_shapes[ds] = paths[i]
+        dense_b = int(np.prod(leaf.shape[:-1])) * (
+            leaf.shape[-1] * kvquant.kv_lanes(cfg.kv_bits)
+            if leaf.ndim == 3 else cfg.head_dim) * 4
+        rows.append({"path": paths[i], "entry": entry,
+                     "param_index": prm["index"],
+                     "hlo_dtype": prm["dtype"], "hlo_shape": prm["shape"],
+                     "hbm_bytes": prm["bytes"], "dense_bytes": dense_b,
+                     "bits": cfg.kv_bits, "uses": prm["uses"]})
+        word_bytes += prm["bytes"]
+        if prm["uses"] == 0:
+            violations.append({
+                "check": "kv-dead-operand", "subject": paths[i],
+                "detail": f"{entry}: uint32 KV word pool is an unused "
+                          f"entry parameter — the graph is not reading "
+                          f"the quantized pages"})
+    if cfg.kv_bits and not rows:
+        violations.append({
+            "check": "kv-operand-missing", "subject": entry,
+            "detail": f"{entry}: kv_bits={cfg.kv_bits} but no uint32 KV "
+                      f"word pool reaches the compiled entry — dense "
+                      f"pages are serving instead"})
+    for i, prm in enumerate(params):
+        if not prm["dtype"].startswith(("f", "bf")):
+            continue
+        hit = dense_shapes.get(tuple(prm["shape"]))
+        if hit is not None:
+            violations.append({
+                "check": "kv-dense-input", "subject": hit,
+                "detail": f"{entry}: float parameter {prm['index']} "
+                          f"{prm['dtype']}{list(prm['shape'])} matches "
+                          f"this word pool's dense KV shape — a "
+                          f"full-width KV read rides along ({paths[i]})"})
+    return {"entry": entry, "rows": rows, "violations": violations,
+            "kv_word_input_bytes": word_bytes}

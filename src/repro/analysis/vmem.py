@@ -27,6 +27,7 @@ from __future__ import annotations
 
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
+from repro.core import kvquant
 from repro.core.compression import PackedLayout, bits_per_index
 from repro.kernels import dispatch
 
@@ -38,6 +39,15 @@ VMEM_BUDGET = int(0.75 * VMEM_BYTES)
 SERVE_M = (1, 8, 64, 256)
 
 KINDS = ("packed_matmul", "packed_matmul_t", "gather")
+
+PAGED_KINDS = ("gqa", "mla", "gather")
+
+# Upper bound on the query-side floats resident per grid step of a paged
+# decode kernel: q block + out block + the m/l/acc online-softmax
+# scratch.  Covers ≤128 query heads × ≤512 per-head features (hd for
+# gqa, kv_lora for absorbed MLA) — far beyond the committed configs, and
+# still <2 MiB against the budget.
+PAGED_Q_SIDE_FLOATS = 128 * 512
 
 
 def estimate_vmem_bytes(kind: str, bm: int, bn: int, bk: int, bits: int,
@@ -200,3 +210,113 @@ def block_table_entries() -> Dict[Tuple[int, int, int, int],
                                   Tuple[int, int, int]]:
     """Re-export of the dispatch autotune table (audit CLI convenience)."""
     return dispatch.packed_block_table()
+
+
+# ---------------------------------------------------------------------------
+# Paged-attention / page-gather route (dispatch._PAGED_BLOCK_TABLE)
+# ---------------------------------------------------------------------------
+
+def estimate_paged_vmem_bytes(kind: str, feat: int, page_size: int,
+                              token_tile: int, bits: int, *,
+                              dequant: str = "lut") -> int:
+    """Per-grid-step VMEM bytes a paged kernel asks Mosaic to fit.
+
+    Mirrors the BlockSpecs in ``kernels/paged_attention.py``: per step
+    one ``token_tile``-token KV tile per cached tensor is DMA'd (×2 for
+    double buffering) — dense f32 rows, or packed uint32 words plus the
+    per-page codebooks when ``bits`` — and the quant kernel bodies
+    create the unpacked index tile + the dequantized f32 tile (``lut``)
+    or the [*, K] one-hot (``onehot``).  The query side (q/out blocks +
+    m/l/acc online-softmax scratch) is bounded by
+    :data:`PAGED_Q_SIDE_FLOATS` rather than threaded per-config — it is
+    token-tile independent and small against the budget.
+    """
+    f32 = u32 = i32 = 4
+    bt = token_tile
+    n_tensors = 1 if kind == "gather" else 2      # gather: one pool
+    if bits:
+        lanes = kvquant.kv_lanes(bits)
+        k = kvquant.kv_entries(bits)
+        # per-(token, head) rows pack independently; ceil over the whole
+        # feature row is a faithful upper bound for the committed shapes
+        words = -(-feat // lanes)
+        kv_tile = bt * words * u32 + k * f32      # word tile + codebook
+        body = n_tensors * (bt * feat * i32       # unpacked index tile
+                            + bt * feat * f32)    # dequantized KV tile
+        if dequant == "onehot":
+            body += n_tensors * bt * feat * k * f32
+    else:
+        kv_tile = bt * feat * f32
+        body = 0
+    dma = n_tensors * kv_tile
+    if kind == "gather":
+        dma += page_size * feat * f32             # whole-page out block
+        q_side = 0
+    else:
+        # logits + probs tiles ([heads, bt], heads ≤ 128) and the
+        # query-side blocks/scratch upper bound
+        body += 2 * 128 * bt * f32
+        q_side = 7 * PAGED_Q_SIDE_FLOATS * f32    # q, out (×2 ea) + m/l/acc
+    return 2 * dma + body + q_side
+
+
+def validate_paged_block_config(kind: str, feat: int, page_size: int,
+                                token_tile: int, bits: int, *,
+                                dequant: str = "lut",
+                                budget: int = VMEM_BUDGET
+                                ) -> Dict[str, Any]:
+    """Statically lint one paged-route token-tile config; same contract
+    as :func:`validate_block_config` — ``errors`` are what the ops layer
+    rejects (non-divisor tiles) or Mosaic cannot fit."""
+    errors: List[str] = []
+    warnings: List[str] = []
+    if kind not in PAGED_KINDS:
+        errors.append(f"kind={kind!r}; choose from {PAGED_KINDS}")
+        return {"ok": False, "errors": errors, "warnings": warnings,
+                "vmem_bytes": 0}
+    if bits and bits not in kvquant.KV_BITS_CHOICES:
+        errors.append(f"kv_bits={bits} not in {kvquant.KV_BITS_CHOICES}")
+        return {"ok": False, "errors": errors, "warnings": warnings,
+                "vmem_bytes": 0}
+    if token_tile < 1:
+        errors.append(f"non-positive token_tile {token_tile}")
+    elif page_size % token_tile:
+        errors.append(f"token_tile={token_tile} does not divide "
+                      f"page_size={page_size} — the kernels' grid "
+                      f"(pages × tiles/page) would drop tokens")
+    if feat % 128:
+        warnings.append(f"feat={feat} not 128-lane aligned — Mosaic pads "
+                        f"the KV tile's trailing dim")
+    vmem = estimate_paged_vmem_bytes(kind, feat, page_size,
+                                     max(token_tile, 1), bits,
+                                     dequant=dequant)
+    if vmem > budget:
+        errors.append(f"~{vmem / 2**20:.1f} MiB/step exceeds the "
+                      f"{budget / 2**20:.1f} MiB VMEM budget "
+                      f"(core has {VMEM_BYTES / 2**20:.0f} MiB)")
+    elif vmem > 0.8 * budget:
+        warnings.append(f"~{vmem / 2**20:.1f} MiB/step is within 20% of "
+                        f"the {budget / 2**20:.1f} MiB VMEM budget")
+    return {"ok": not errors, "errors": errors, "warnings": warnings,
+            "vmem_bytes": vmem}
+
+
+def audit_paged_block_space(dequant: str = "lut") -> Dict[str, Any]:
+    """Sweep every committed ``dispatch._PAGED_BLOCK_TABLE`` entry — the
+    paged-route analogue of :func:`audit_block_space`.  A bad token tile
+    otherwise only fails at Mosaic compile time on a TPU."""
+    rows: List[Dict[str, Any]] = []
+    violations: List[Dict[str, str]] = []
+    for (kind, feat, page, bits), tile in sorted(
+            dispatch.paged_block_table().items()):
+        source = f"paged_table[{kind},{feat},{page},{bits}]"
+        res = validate_paged_block_config(kind, feat, page, tile, bits,
+                                          dequant=dequant)
+        rows.append({"kind": kind, "feat": feat, "page_size": page,
+                     "bits": bits, "token_tile": tile, "source": source,
+                     **res})
+        for err in res["errors"]:
+            violations.append({
+                "check": "vmem-blocks", "subject": source,
+                "detail": f"paged {kind} token_tile={tile}: {err}"})
+    return {"rows": rows, "violations": violations}

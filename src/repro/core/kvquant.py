@@ -1,0 +1,164 @@
+"""Codebook quantization of KV-cache pages (paper eq. 14 on activations).
+
+The paper's C-step machinery is agnostic to *which* tensor it
+compresses: a KV page is just another weight matrix whose distortion-
+vs-bytes trade-off eq. 14 accounts for.  This module holds the pure-jnp
+primitives the paged serving stack shares:
+
+* **fit** — per-group adaptive codebooks learned at page-write time by
+  the in-tree exact 1-D k-means (``core.kmeans``), quantile-seeded so
+  the fit is deterministic (no RNG in the serving path);
+* **assign/dequant** — eq.-11 nearest-codebook assignment
+  (``quant_ops.fixed_codebook_assign``) and its LUT inverse;
+* **pack** — a jit-friendly twin of ``compression.pack_rows`` so the
+  engine can bit-pack indices *inside* the decode step (the host numpy
+  packer only serves artifact build time);
+* **byte accounting** — eq.-14 page/token byte math with KV bits as a
+  free variable (what ``bench_engine`` and ``launch/report.py`` quote).
+
+Grouping modes (``kv_cb_mode``):
+
+* ``"page"`` — one codebook per page per tensor (K and V separate):
+  cheapest metadata, coarsest fit;
+* ``"head"`` — one codebook per (page, kv-head): n_kv× the metadata,
+  tracks per-head scale differences (GQA K heads after RoPE span very
+  different ranges than V heads).
+
+Layout contract: indices pack along the trailing feature axis in the
+``pack_rows`` little-endian no-straddle layout, so the in-kernel unpack
+is the shared ``kernels/unpack.py`` shift+mask and the jnp inverse is
+``compression.unpack_rows`` — the same micro-library the weight path
+uses.  ``bits ∈ {2, 4, 8}`` (divisors of 32; K = 2**bits codebook
+entries, ``bits == bits_per_index(K)`` exactly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans_fit, quantile_init
+
+Array = jax.Array
+
+KV_BITS_CHOICES = (2, 4, 8)
+# k-means iterations per page-write fit.  Pages are tiny (≤ a few
+# hundred scalars) and quantile seeding is already near-optimal in 1-D,
+# so a short budget converges; the fit runs inside the jitted decode
+# step, so this is a static trip count.
+KV_FIT_ITERS = 8
+
+
+def check_kv_bits(bits: int) -> int:
+    if bits not in KV_BITS_CHOICES:
+        raise ValueError(f"kv_bits={bits}; choose one of {KV_BITS_CHOICES} "
+                         f"(0 disables KV quantization)")
+    return bits
+
+
+def kv_entries(bits: int) -> int:
+    return 1 << bits
+
+
+def kv_lanes(bits: int) -> int:
+    return 32 // bits
+
+
+def words_per(d: int, bits: int) -> int:
+    """uint32 words per packed feature row of true width ``d``."""
+    return -(-d // kv_lanes(bits))
+
+
+def pack_rows_jnp(idx: Array, bits: int) -> Array:
+    """jnp twin of ``compression.pack_rows`` over the trailing axis.
+
+    [..., D] int assignments (< 2**bits) → [..., ⌈D/lanes⌉] uint32,
+    lane l of word w holding index w·lanes+l at bit offset l·bits —
+    bit-identical to the host packer, invertible by
+    ``compression.unpack_rows`` / ``kernels.unpack.unpack_words_axis1``.
+    """
+    lanes = kv_lanes(bits)
+    d = idx.shape[-1]
+    pad = (-d) % lanes
+    w = idx.astype(jnp.uint32)
+    if pad:
+        w = jnp.pad(w, [(0, 0)] * (w.ndim - 1) + [(0, pad)])
+    w = w.reshape(w.shape[:-1] + (-1, lanes))
+    shifts = jnp.arange(lanes, dtype=jnp.uint32) * jnp.uint32(bits)
+    # lanes occupy disjoint bit fields, so the sum is exactly the OR
+    return jnp.sum(w << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def fit_codebooks(vals: Array, bits: int, iters: int = KV_FIT_ITERS
+                  ) -> Array:
+    """[..., G, N] values → [..., G, K] sorted f32 codebooks.
+
+    Deterministic: quantile seeding + exact 1-D k-means (no RNG).
+    K > N is fine — empty clusters keep their centroids (the decode
+    first-write fit sees one token row per group).
+    """
+    k = kv_entries(check_kv_bits(bits))
+    lead = vals.shape[:-1]
+    flat = vals.reshape((-1, vals.shape[-1])).astype(jnp.float32)
+
+    def fit_one(row):
+        return kmeans_fit(row, quantile_init(row, k), iters=iters).codebook
+
+    cbs = jax.vmap(fit_one)(flat)
+    return cbs.reshape(lead + (k,))
+
+
+def assign_codebook(vals: Array, cbs: Array) -> Array:
+    """[..., G, N] values + [..., G, K] sorted codebooks → int32 indices.
+
+    Eq.-11 midpoint assignment in f32 — the same rule the stored pages
+    are reconstructed against, so storage is idempotent:
+    ``assign(dequant(assign(v)))) == assign(v)``.
+    """
+    mids = 0.5 * (cbs[..., 1:] + cbs[..., :-1]).astype(jnp.float32)
+    v = vals.astype(jnp.float32)
+
+    def one(row, m):
+        return jnp.searchsorted(m, row, side="right").astype(jnp.int32)
+
+    lead = vals.shape[:-1]
+    flat_v = v.reshape((-1, v.shape[-1]))
+    flat_m = jnp.broadcast_to(mids, lead + mids.shape[-1:]).reshape(
+        (-1, mids.shape[-1]))
+    idx = jax.vmap(one)(flat_v, flat_m)
+    return idx.reshape(vals.shape)
+
+
+def dequant_codebook(idx: Array, cbs: Array) -> Array:
+    """int32 indices [..., G, N] + codebooks [..., G, K] → values.
+
+    Pure LUT gather; output dtype is the codebook's.
+    """
+    cb_b = jnp.broadcast_to(cbs, idx.shape[:-1] + cbs.shape[-1:])
+    return jnp.take_along_axis(cb_b, idx, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# eq.-14 byte accounting with KV bits as the free variable
+
+
+def kv_bytes_per_token(bits: int, head_dim: int, n_kv: int) -> float:
+    """HBM bytes per token per cached tensor (K or V) at ``bits``.
+
+    The invariant ``bench_kernels`` rows quote and
+    ``test_bench_accounting`` asserts: bits/8 × head_dim × n_kv.
+    """
+    return bits / 8.0 * head_dim * n_kv
+
+
+def quant_page_bytes(page_size: int, feat: int, bits: int, n_cb: int,
+                     itemsize: int = 4) -> int:
+    """Stored bytes of one quantized page of ``feat`` features/token:
+    packed words + ``n_cb`` per-page codebooks of K = 2**bits entries."""
+    check_kv_bits(bits)
+    word_bytes = page_size * words_per(feat, bits) * 4
+    cb_bytes = n_cb * kv_entries(bits) * itemsize
+    return word_bytes + cb_bytes
+
+
+def dense_page_bytes(page_size: int, feat: int, itemsize: int = 4) -> int:
+    return page_size * feat * itemsize

@@ -22,7 +22,8 @@ queued ones.
 """
 from repro.engine.chaos import FaultEvent, FaultPlan
 from repro.engine.engine import Engine, EngineStats
-from repro.engine.kvcache import PagePool
+from repro.engine.kvcache import (PagePool, equal_hbm_slots,
+                                  kv_page_footprint, mla_page_footprint)
 from repro.engine.oneshot import greedy_generate, truncate_at_eos
 from repro.engine.outcomes import Outcome, RequestResult
 from repro.engine.sampling import sample_tokens, slot_key
@@ -36,4 +37,5 @@ __all__ = ["Engine", "EngineStats", "PagePool", "Request", "SlotScheduler",
            "slot_key", "Outcome", "RequestResult", "FaultEvent",
            "FaultPlan", "SnapshotError", "ServeReport",
            "ServeSupervisorConfig", "save_snapshot", "restore_into",
-           "supervised_serve"]
+           "supervised_serve", "kv_page_footprint", "mla_page_footprint",
+           "equal_hbm_slots"]

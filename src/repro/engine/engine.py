@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import kvquant
 from repro.engine import sampling
 from repro.engine.kvcache import PagePool
 from repro.engine.oneshot import jit_prefill
@@ -186,8 +187,21 @@ class Engine:
                  token_budget: Optional[int] = None,
                  prefill_chunk: int = 64, dtype=None, mesh=None,
                  queue_limit: Optional[int] = None,
-                 max_preemptions: int = 8):
+                 max_preemptions: int = 8, kv_bits: int = 0,
+                 kv_cb_mode: str = "page"):
         self.params = params
+        if kv_bits:
+            kvquant.check_kv_bits(kv_bits)
+            if kv_cb_mode not in ("page", "head"):
+                raise ValueError(f"kv_cb_mode={kv_cb_mode!r}; "
+                                 f"choose 'page' or 'head'")
+            # ride the knobs on the (static, hashable) config so the
+            # shared decode jit keys on them; kv_bits == 0 leaves cfg
+            # untouched and the default jit cache entries intact
+            cfg = dataclasses.replace(cfg, kv_bits=kv_bits,
+                                      kv_cb_mode=kv_cb_mode)
+        self.kv_bits = kv_bits
+        self.kv_cb_mode = kv_cb_mode
         self.cfg = cfg
         self.n_slots = n_slots
         self.page_size = page_size

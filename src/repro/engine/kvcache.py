@@ -16,6 +16,55 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import kvquant
+
+
+def kv_page_footprint(page_size: int, n_kv: int, head_dim: int,
+                      kv_bits: int = 0, kv_cb_mode: str = "page",
+                      itemsize: int = 4) -> int:
+    """Stored HBM bytes of ONE page of ONE cached tensor (K or V).
+
+    Dense pages store ``page·n_kv·head_dim`` scalars; quantized pages
+    store bit-packed uint32 words (one row per (token, kv-head)) plus
+    the per-page codebooks — the eq.-14 byte accounting with KV bits as
+    the free variable.  ``bench_engine``'s equal-HBM rows and
+    ``launch/report.py`` both quote this function.
+    """
+    if not kv_bits:
+        return n_kv * kvquant.dense_page_bytes(page_size, head_dim,
+                                               itemsize)
+    kvquant.check_kv_bits(kv_bits)
+    n_cb = n_kv if kv_cb_mode == "head" else 1
+    word_bytes = page_size * n_kv * kvquant.words_per(head_dim,
+                                                      kv_bits) * 4
+    return word_bytes + n_cb * kvquant.kv_entries(kv_bits) * itemsize
+
+
+def mla_page_footprint(page_size: int, kv_lora: int, rope_dim: int,
+                       kv_bits: int = 0, itemsize: int = 4) -> int:
+    """Stored HBM bytes of ONE latent page (c_kv + k_rope tensors)."""
+    if not kv_bits:
+        return (kvquant.dense_page_bytes(page_size, kv_lora, itemsize)
+                + kvquant.dense_page_bytes(page_size, rope_dim, itemsize))
+    kvquant.check_kv_bits(kv_bits)
+    return (kvquant.quant_page_bytes(page_size, kv_lora, kv_bits, 1,
+                                     itemsize)
+            + kvquant.quant_page_bytes(page_size, rope_dim, kv_bits, 1,
+                                       itemsize))
+
+
+def equal_hbm_slots(n_slots: int, page_size: int, n_kv: int, head_dim: int,
+                    kv_bits: int, kv_cb_mode: str = "page",
+                    itemsize: int = 4) -> int:
+    """How many slots fit in the HBM that ``n_slots`` dense-KV slots
+    occupy, once pages quantize to ``kv_bits`` (slots scale with the
+    page-byte ratio; pages per slot are geometry-fixed)."""
+    dense = kv_page_footprint(page_size, n_kv, head_dim, 0,
+                              itemsize=itemsize)
+    quant = kv_page_footprint(page_size, n_kv, head_dim, kv_bits,
+                              kv_cb_mode, itemsize)
+    return max(n_slots, n_slots * dense // quant)
+
 
 class PagePool:
     """Host-side page allocator for ``n_slots`` batch slots.

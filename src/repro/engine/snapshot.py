@@ -116,6 +116,7 @@ def save_snapshot(eng, directory: str, keep: int = 2) -> str:
             "token_budget": eng.token_budget,
             "prefill_chunk": eng.prefill_chunk,
             "dtype": str(eng.dtype),
+            "kv_bits": eng.kv_bits, "kv_cb_mode": eng.kv_cb_mode,
         },
         "stats": dataclasses.asdict(eng.stats),
         "admit_seq": int(eng.sched._admit_seq),
@@ -193,7 +194,8 @@ def restore_into(eng, directory: str) -> int:
     mine = {"n_slots": eng.n_slots, "page_size": eng.page_size,
             "max_seq": eng.max_seq, "n_pages": eng.pool.n_pages,
             "token_budget": eng.token_budget,
-            "prefill_chunk": eng.prefill_chunk, "dtype": str(eng.dtype)}
+            "prefill_chunk": eng.prefill_chunk, "dtype": str(eng.dtype),
+            "kv_bits": eng.kv_bits, "kv_cb_mode": eng.kv_cb_mode}
     if geo != mine:
         diff = {k: (geo.get(k), mine[k]) for k in mine
                 if geo.get(k) != mine[k]}

@@ -148,6 +148,179 @@ def packed_block_sizes_t(m: int, d: int, n_out: int, bits: int, order: str
     return bm, bn, bk
 
 
+# ---------------------------------------------------------------------------
+# Paged-attention route block autotune
+# ---------------------------------------------------------------------------
+
+# Exact-shape entries (kind, feat, page_size, kv_bits) → token_tile, the
+# number of KV tokens DMA'd per grid step (must divide page_size).
+# ``feat`` is the per-token feature count of the tiled operand
+# (n_kv·head_dim for gqa; kv_lora + rope_dim for mla; the flattened
+# trailing dims for gather).  kv_bits=0 = dense pages.  Seeded from the
+# bench/engine shapes; extend by measuring sweeps with
+# ``REPRO_PAGED_BLOCK`` and recording winners here (BENCH_kernels.json
+# tracks the timings).
+_PAGED_BLOCK_TABLE: Dict[Tuple[str, int, int, int], int] = {
+    # bench/engine config: n_kv=2 · head_dim=12, page_size=8
+    ("gqa", 24, 8, 0): 8,
+    ("gqa", 24, 8, 2): 8,
+    ("gqa", 24, 8, 4): 8,
+    ("gqa", 24, 8, 8): 8,
+    ("gather", 24, 8, 0): 8,
+    # kernel-bench GQA config: n_kv=2 · head_dim=32, page_size=8 (hd a
+    # multiple of every lane count, so word rows pack without a ragged
+    # tail and the bench's B/token invariant is exact)
+    ("gqa", 64, 8, 0): 8,
+    ("gqa", 64, 8, 2): 8,
+    ("gqa", 64, 8, 4): 8,
+    ("gqa", 64, 8, 8): 8,
+    ("gather", 64, 8, 0): 8,
+    # MLA bench config: kv_lora=32 + rope_dim=16, page_size=8
+    ("mla", 48, 8, 0): 8,
+    ("mla", 48, 8, 2): 8,
+    ("mla", 48, 8, 4): 8,
+    ("mla", 48, 8, 8): 8,
+    # production-ish GQA shape: n_kv=8 · head_dim=128, page_size=16 —
+    # half-page tiles keep the dense KV tile ≤ 32 KiB so double-buffered
+    # DMA fits comfortably beside the accumulator scratch
+    ("gqa", 1024, 16, 0): 8,
+    ("gqa", 1024, 16, 4): 16,
+}
+
+
+def paged_block_table() -> Dict[Tuple[str, int, int, int], int]:
+    """The exact-shape paged-attention autotune entries (copy) — public
+    for the same reason as :func:`packed_block_table`: the vmem lint
+    checks every committed entry at audit time."""
+    return dict(_PAGED_BLOCK_TABLE)
+
+
+def paged_token_tile(kind: str, feat: int, page_size: int, kv_bits: int
+                     ) -> int:
+    """Token tile for a paged-attention/page-gather kernel at this shape.
+
+    Priority: ``REPRO_PAGED_BLOCK=<tile>`` env override → exact table
+    hit → full page (the pools are built with small pages, so one page
+    per grid step is the roofline default).  Always clamped to a
+    divisor of ``page_size``.
+    """
+    env = os.environ.get("REPRO_PAGED_BLOCK")
+    if env:
+        try:
+            tile = int(env)
+        except ValueError as e:
+            raise ValueError(f"REPRO_PAGED_BLOCK={env!r}; expected an int "
+                             f"token tile") from e
+    else:
+        tile = _PAGED_BLOCK_TABLE.get((kind, feat, page_size, kv_bits),
+                                      page_size)
+    tile = min(tile, page_size)
+    while page_size % tile:
+        tile -= 1
+    return tile
+
+
+def paged_attention(q: Array, k_pool: Array, v_pool: Array,
+                    page_table: Array, pos: Array, alive: Array, *,
+                    softcap: Optional[float] = None, scale: float,
+                    backend: Optional[str] = None) -> Array:
+    """Paged GQA decode over dense KV pages: q [B,1,H,hd] + pools
+    [P+1, page, KV, hd] → [B, 1, H·hd].
+
+    ``ref`` (CPU serving default): the jnp gather + masked-softmax math
+    that used to live inline in ``models.attention`` — bit-identical to
+    it.  Pallas backends: the fused scalar-prefetch online-softmax
+    kernel (``kernels.paged_attention``), allclose vs ref."""
+    b = backend or default_backend()
+    if b == "ref":
+        return ref.paged_attention_ref(q, k_pool, v_pool, page_table, pos,
+                                       alive, softcap=softcap, scale=scale)
+    page, kv, hd = k_pool.shape[1], k_pool.shape[2], k_pool.shape[3]
+    tile = paged_token_tile("gqa", kv * hd, page, 0)
+    out = ops.paged_attention(q, k_pool, v_pool, page_table, pos, alive,
+                              softcap=softcap, scale=scale, token_tile=tile,
+                              interpret=(b == "pallas_interpret"))
+    return out.astype(k_pool.dtype)
+
+
+def paged_attention_quant(q: Array, k_words: Array, v_words: Array,
+                          k_cb: Array, v_cb: Array, page_table: Array,
+                          pos: Array, alive: Array, *, bits: int,
+                          head_dim: int, softcap: Optional[float] = None,
+                          scale: float,
+                          backend: Optional[str] = None) -> Array:
+    """Paged GQA decode over codebook-quantized KV pages (kv_bits/8 B per
+    cached scalar): words [P+1, page, KV, Wd] uint32 + per-page codebooks
+    [P+1, Gcb, K] → [B, 1, H·hd]."""
+    b = backend or default_backend()
+    if b == "ref":
+        return ref.paged_attention_quant_ref(
+            q, k_words, v_words, k_cb, v_cb, page_table, pos, alive,
+            bits=bits, head_dim=head_dim, softcap=softcap, scale=scale)
+    page, kv = k_words.shape[1], k_words.shape[2]
+    tile = paged_token_tile("gqa", kv * head_dim, page, bits)
+    out = ops.paged_attention_quant(
+        q, k_words, v_words, k_cb, v_cb, page_table, pos, alive, bits=bits,
+        head_dim=head_dim, softcap=softcap, scale=scale, token_tile=tile,
+        dequant=default_dequant(), interpret=(b == "pallas_interpret"))
+    return out.astype(k_cb.dtype)
+
+
+def mla_paged_attention(q_eff: Array, q_rope: Array, c_pool: Array,
+                        r_pool: Array, page_table: Array, pos: Array,
+                        alive: Array, *, scale: float,
+                        backend: Optional[str] = None) -> Array:
+    """Absorbed-MLA paged decode over dense latent pages → latent context
+    [B, 1, H, kv_lora]."""
+    b = backend or default_backend()
+    if b == "ref":
+        return ref.mla_paged_attention_ref(q_eff, q_rope, c_pool, r_pool,
+                                           page_table, pos, alive,
+                                           scale=scale)
+    page = c_pool.shape[1]
+    feat = c_pool.shape[2] + r_pool.shape[2]
+    tile = paged_token_tile("mla", feat, page, 0)
+    out = ops.mla_paged_attention(q_eff, q_rope, c_pool, r_pool, page_table,
+                                  pos, alive, scale=scale, token_tile=tile,
+                                  interpret=(b == "pallas_interpret"))
+    return out.astype(c_pool.dtype)
+
+
+def mla_paged_attention_quant(q_eff: Array, q_rope: Array, c_words: Array,
+                              r_words: Array, c_cb: Array, r_cb: Array,
+                              page_table: Array, pos: Array, alive: Array,
+                              *, bits: int, kv_lora: int, rope_dim: int,
+                              scale: float,
+                              backend: Optional[str] = None) -> Array:
+    """Absorbed-MLA paged decode over quantized latent pages."""
+    b = backend or default_backend()
+    if b == "ref":
+        return ref.mla_paged_attention_quant_ref(
+            q_eff, q_rope, c_words, r_words, c_cb, r_cb, page_table, pos,
+            alive, bits=bits, kv_lora=kv_lora, rope_dim=rope_dim,
+            scale=scale)
+    page = c_words.shape[1]
+    tile = paged_token_tile("mla", kv_lora + rope_dim, page, bits)
+    out = ops.mla_paged_attention_quant(
+        q_eff, q_rope, c_words, r_words, c_cb, r_cb, page_table, pos,
+        alive, bits=bits, kv_lora=kv_lora, rope_dim=rope_dim, scale=scale,
+        token_tile=tile, dequant=default_dequant(),
+        interpret=(b == "pallas_interpret"))
+    return out.astype(c_cb.dtype)
+
+
+def page_gather(pool: Array, page_table: Array, alive: Array, *,
+                backend: Optional[str] = None) -> Array:
+    """Per-slot logical KV view [B, max_pages·page, ...] with dead slots
+    masked to the trash page — the standalone gather (the fused decode
+    kernels above subsume it on the hot path)."""
+    b = backend or default_backend()
+    if b == "ref":
+        return ref.gather_pages_ref(pool, page_table, alive)
+    return ops.page_gather(pool, page_table, alive,
+                           interpret=(b == "pallas_interpret"))
+
+
 def codebook_matmul(x: Array, idx: Array, codebook: Array, *,
                     backend: Optional[str] = None,
                     bm: int = 128, bn: int = 128, bk: int = 512) -> Array:

@@ -18,6 +18,10 @@ from repro.kernels.codebook_matmul_packed_t import (
     codebook_matmul_packed_t_pallas)
 from repro.kernels.fixed_quant import fixed_quant_pallas
 from repro.kernels.kmeans_assign import kmeans_assign_pallas
+from repro.kernels.paged_attention import (
+    mla_paged_attention_pallas, mla_paged_attention_quant_pallas,
+    page_gather_pallas, paged_attention_pallas,
+    paged_attention_quant_pallas)
 from repro.kernels.quantized_gather import quantized_gather_pallas
 
 
@@ -118,6 +122,106 @@ def quantized_gather(tokens: jax.Array, pidx: jax.Array,
     per gathered weight (see quantized_gather.py)."""
     return _quantized_gather_jit(tokens, pidx, codebook, d, dequant,
                                  _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("softcap", "scale", "token_tile",
+                                    "interpret"))
+def _paged_attention_jit(q, k_pool, v_pool, page_table, pos, alive, softcap,
+                         scale, token_tile, interpret):
+    return paged_attention_pallas(q, k_pool, v_pool, page_table, pos, alive,
+                                  softcap=softcap, scale=scale,
+                                  token_tile=token_tile, interpret=interpret)
+
+
+def paged_attention(q, k_pool, v_pool, page_table, pos, alive, *,
+                    softcap=None, scale, token_tile=None,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Fused page-gather + online-softmax GQA decode (paged_attention.py)."""
+    return _paged_attention_jit(q, k_pool, v_pool, page_table, pos, alive,
+                                softcap, scale, token_tile,
+                                _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "head_dim", "softcap", "scale",
+                                    "token_tile", "dequant", "interpret"))
+def _paged_attention_quant_jit(q, k_words, v_words, k_cb, v_cb, page_table,
+                               pos, alive, bits, head_dim, softcap, scale,
+                               token_tile, dequant, interpret):
+    return paged_attention_quant_pallas(
+        q, k_words, v_words, k_cb, v_cb, page_table, pos, alive, bits=bits,
+        head_dim=head_dim, softcap=softcap, scale=scale,
+        token_tile=token_tile, dequant=dequant, interpret=interpret)
+
+
+def paged_attention_quant(q, k_words, v_words, k_cb, v_cb, page_table, pos,
+                          alive, *, bits, head_dim, softcap=None, scale,
+                          token_tile=None, dequant: str = "lut",
+                          interpret: Optional[bool] = None) -> jax.Array:
+    """GQA decode over codebook-quantized KV pages: kv_bits/8 B per cached
+    scalar of HBM traffic, dequant in VMEM (paged_attention.py)."""
+    return _paged_attention_quant_jit(q, k_words, v_words, k_cb, v_cb,
+                                      page_table, pos, alive, bits, head_dim,
+                                      softcap, scale, token_tile, dequant,
+                                      _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "token_tile", "interpret"))
+def _mla_paged_attention_jit(q_eff, q_rope, c_pool, r_pool, page_table, pos,
+                             alive, scale, token_tile, interpret):
+    return mla_paged_attention_pallas(q_eff, q_rope, c_pool, r_pool,
+                                      page_table, pos, alive, scale=scale,
+                                      token_tile=token_tile,
+                                      interpret=interpret)
+
+
+def mla_paged_attention(q_eff, q_rope, c_pool, r_pool, page_table, pos,
+                        alive, *, scale, token_tile=None,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """Fused absorbed-MLA paged decode → latent context [B,1,H,kv_lora]."""
+    return _mla_paged_attention_jit(q_eff, q_rope, c_pool, r_pool,
+                                    page_table, pos, alive, scale,
+                                    token_tile, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "kv_lora", "rope_dim", "scale",
+                                    "token_tile", "dequant", "interpret"))
+def _mla_paged_attention_quant_jit(q_eff, q_rope, c_words, r_words, c_cb,
+                                   r_cb, page_table, pos, alive, bits,
+                                   kv_lora, rope_dim, scale, token_tile,
+                                   dequant, interpret):
+    return mla_paged_attention_quant_pallas(
+        q_eff, q_rope, c_words, r_words, c_cb, r_cb, page_table, pos, alive,
+        bits=bits, kv_lora=kv_lora, rope_dim=rope_dim, scale=scale,
+        token_tile=token_tile, dequant=dequant, interpret=interpret)
+
+
+def mla_paged_attention_quant(q_eff, q_rope, c_words, r_words, c_cb, r_cb,
+                              page_table, pos, alive, *, bits, kv_lora,
+                              rope_dim, scale, token_tile=None,
+                              dequant: str = "lut",
+                              interpret: Optional[bool] = None) -> jax.Array:
+    """Absorbed-MLA decode over codebook-quantized latent pages."""
+    return _mla_paged_attention_quant_jit(
+        q_eff, q_rope, c_words, r_words, c_cb, r_cb, page_table, pos, alive,
+        bits, kv_lora, rope_dim, scale, token_tile,
+        dequant, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _page_gather_jit(pool, page_table, alive, interpret):
+    return page_gather_pallas(pool, page_table, alive, interpret=interpret)
+
+
+def page_gather(pool, page_table, alive,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Scalar-prefetch page gather: [P+1, page, ...] pool → per-slot
+    logical view [B, max_pages·page, ...] (paged_attention.py)."""
+    return _page_gather_jit(pool, page_table, alive,
+                            _auto_interpret(interpret))
 
 
 @functools.partial(jax.jit,

@@ -78,3 +78,132 @@ def fixed_quant_ref(w: jax.Array, mode: str, pow2_c: int = 4,
     else:
         q = quant_ops.pow2_quantize(ws, pow2_c)
     return (q * scale).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged-attention decode family (engine KV path).
+#
+# These are verbatim moves of the jnp math that used to live inline in
+# ``models.attention`` (``_gather_slots`` / ``_slot_attention`` / the MLA
+# absorbed-decode einsums) — models now reaches them through
+# ``kernels.dispatch`` so the Pallas route and this CPU route share one
+# call site.  The einsum strings / dtypes / op order must not change:
+# the engine's bit-exact streams and the golden fixtures pin them.
+
+NEG_INF = -1e30
+
+
+def _softcap(x, cap):
+    # local twin of models.layers.softcap — kernels must not import models
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x / cap)).astype(x.dtype)
+
+
+def gather_pages_ref(pool: jax.Array, page_table: jax.Array,
+                     alive: jax.Array) -> jax.Array:
+    """[P+1, page, ...] pool → per-slot logical view [B, max_pages·page, ...].
+
+    Dead slots' table rows are masked to the trash page (page 0) *before*
+    the gather, so a stalled/empty slot contributes one repeated page to
+    the gather footprint instead of max_pages arbitrary live pages.
+    """
+    b, npg = page_table.shape
+    table = jnp.where(alive[:, None], page_table, 0)
+    g = pool[table]                            # [B, max_pages, page, ...]
+    return g.reshape((b, npg * pool.shape[1]) + pool.shape[2:])
+
+
+def _paged_softmax_gqa(q, ck, cv, valid, *, softcap, scale):
+    """q [B,1,H,hd]; ck/cv [B,cap,KV,hd]; valid [B,cap] → [B,1,H·hd]."""
+    b, _, h, hd = q.shape
+    kv = ck.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, 1, kv, rep, hd)
+    logits = jnp.einsum("bqkrd,bskd->bkrqs", qg, ck,
+                        preferred_element_type=jnp.float32) * scale
+    logits = _softcap(logits, softcap)
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    attn = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkrqs,bskd->bkrqd", attn.astype(cv.dtype), cv)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, 1, h * hd)
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, pos, alive, *,
+                        softcap=None, scale):
+    """Dense-KV paged GQA decode: gather through the page table, mask,
+    softmax-attend.  q [B,1,H,hd]; pools [P+1, page, KV, hd]."""
+    gk = gather_pages_ref(k_pool, page_table, alive)
+    gv = gather_pages_ref(v_pool, page_table, alive)
+    cap = gk.shape[1]
+    valid = (jnp.arange(cap)[None, :] <= pos[:, None]) & alive[:, None]
+    return _paged_softmax_gqa(q, gk, gv, valid, softcap=softcap, scale=scale)
+
+
+def dequant_pages_ref(words, cbs, page_table, alive, d: int, bits: int):
+    """Gather + dequantize quantized pages to the dense logical view.
+
+    words [P+1, page, ..., Wd] uint32 (pack_rows layout over the trailing
+    feature axis); cbs [P+1, Gcb, K] with Gcb ∈ {1, group-axis size};
+    returns [B, max_pages·page, ..., d] in the codebook dtype.
+    """
+    from repro.core.compression import unpack_rows
+
+    b, npg = page_table.shape
+    table = jnp.where(alive[:, None], page_table, 0)
+    w = words[table]                           # [B, npg, page, ..., Wd]
+    idx = unpack_rows(w, d, 1 << bits)         # [B, npg, page, ..., d]
+    cb = cbs[table]                            # [B, npg, Gcb, K]
+    # broadcast the per-page codebooks over the page axis (and over the
+    # group axis when Gcb == 1 — the "page" grouping mode)
+    cb = cb.reshape(cb.shape[:2] + (1,) * (idx.ndim - cb.ndim)
+                    + cb.shape[2:])
+    cb_b = jnp.broadcast_to(cb, idx.shape[:-1] + cb.shape[-1:])
+    vals = jnp.take_along_axis(cb_b, idx, axis=-1)
+    return vals.reshape((b, npg * words.shape[1]) + vals.shape[3:])
+
+
+def paged_attention_quant_ref(q, k_words, v_words, k_cb, v_cb, page_table,
+                              pos, alive, *, bits, head_dim,
+                              softcap=None, scale):
+    """Quantized-KV paged GQA decode: the gathered pages dequantize
+    through their stored per-page codebooks, then the attention math is
+    identical to the dense route (so at matching dequantized values the
+    two are bit-exact)."""
+    gk = dequant_pages_ref(k_words, k_cb, page_table, alive, head_dim, bits)
+    gv = dequant_pages_ref(v_words, v_cb, page_table, alive, head_dim, bits)
+    cap = gk.shape[1]
+    valid = (jnp.arange(cap)[None, :] <= pos[:, None]) & alive[:, None]
+    return _paged_softmax_gqa(q, gk, gv, valid, softcap=softcap, scale=scale)
+
+
+def _paged_softmax_mla(q_eff, q_rope, gkv, grope, valid, *, scale):
+    """q_eff [B,1,H,l]; q_rope [B,1,H,r]; gkv [B,cap,l]; grope [B,cap,r]."""
+    logits = (jnp.einsum("bqhl,bsl->bhqs", q_eff, gkv) +
+              jnp.einsum("bqhd,bsd->bhqs", q_rope, grope))
+    logits = logits.astype(jnp.float32) * scale
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    attn = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqs,bsl->bqhl", attn.astype(gkv.dtype), gkv)
+
+
+def mla_paged_attention_ref(q_eff, q_rope, c_pool, r_pool, page_table, pos,
+                            alive, *, scale):
+    """Dense absorbed-MLA paged decode → latent context [B,1,H,kv_lora]."""
+    gkv = gather_pages_ref(c_pool, page_table, alive)
+    grope = gather_pages_ref(r_pool, page_table, alive)
+    cap = gkv.shape[1]
+    valid = (jnp.arange(cap)[None, :] <= pos[:, None]) & alive[:, None]
+    return _paged_softmax_mla(q_eff, q_rope, gkv, grope, valid, scale=scale)
+
+
+def mla_paged_attention_quant_ref(q_eff, q_rope, c_words, r_words, c_cb,
+                                  r_cb, page_table, pos, alive, *, bits,
+                                  kv_lora, rope_dim, scale):
+    """Quantized absorbed-MLA paged decode (per-page codebooks)."""
+    gkv = dequant_pages_ref(c_words, c_cb, page_table, alive, kv_lora, bits)
+    grope = dequant_pages_ref(r_words, r_cb, page_table, alive, rope_dim,
+                              bits)
+    cap = gkv.shape[1]
+    valid = (jnp.arange(cap)[None, :] <= pos[:, None]) & alive[:, None]
+    return _paged_softmax_mla(q_eff, q_rope, gkv, grope, valid, scale=scale)

@@ -107,6 +107,36 @@ def packed_report(directory: str) -> None:
               f"| {r['reason'] or '-'} |")
 
 
+def kv_report(page_size: int, n_kv: int, head_dim: int, n_slots: int,
+              max_seq: int, cb_mode: str = "page") -> None:
+    """Eq.-14 byte accounting extended to activations: page-pool sizing
+    with KV bits as the free variable (what ``--kv-bits`` on
+    ``launch/serve.py`` buys at fixed HBM)."""
+    from repro.core import kvquant
+    from repro.engine.kvcache import equal_hbm_slots, kv_page_footprint
+
+    pages_per_slot = -(-max_seq // page_size)
+    print(f"## §KV quantization — eq. 14 on activations "
+          f"(page={page_size}, n_kv={n_kv}, head_dim={head_dim}, "
+          f"cb_mode={cb_mode})\n")
+    print("| kv_bits | B/page (K or V) | B/token/tensor | ratio | "
+          f"slots @ equal HBM (dense={n_slots}) |")
+    print("|---|---|---|---|---|")
+    dense_fp = kv_page_footprint(page_size, n_kv, head_dim, 0)
+    for bits in (0,) + kvquant.KV_BITS_CHOICES:
+        fp = kv_page_footprint(page_size, n_kv, head_dim, bits, cb_mode)
+        bpt = (kvquant.kv_bytes_per_token(bits, head_dim, n_kv) if bits
+               else 4.0 * head_dim * n_kv)
+        slots = (equal_hbm_slots(n_slots, page_size, n_kv, head_dim,
+                                 bits, cb_mode) if bits else n_slots)
+        print(f"| {bits or 'dense'} | {fp} | {bpt:g} "
+              f"| {dense_fp / fp:.2f}x | {slots} |")
+    print(f"\n(pages/slot = ceil(max_seq/page) = {pages_per_slot}; "
+          "quantized pages carry packed uint32 index words + per-page "
+          "codebooks, so the ratio is below the raw 32/bits bound — "
+          "codebook overhead amortizes with page_size·head_dim)")
+
+
 def audit_table(report: dict) -> str:
     """Human rendering of an ``repro.analysis.audit`` report (the
     AUDIT.json payload, or a path to one)."""
@@ -174,7 +204,20 @@ def main():
     ap.add_argument("--audit", default=None, metavar="AUDIT_JSON",
                     help="render the human table for an AUDIT.json "
                          "written by `python -m repro.analysis.audit`")
+    ap.add_argument("--kv", action="store_true",
+                    help="print the KV-quantization page-pool sizing "
+                         "table (eq. 14 on activation bytes)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-kv", type=int, default=8)
+    ap.add_argument("--head-dim", type=int, default=128)
+    ap.add_argument("--n-slots", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=4096)
+    ap.add_argument("--kv-cb", choices=("page", "head"), default="page")
     args = ap.parse_args()
+    if args.kv:
+        kv_report(args.page_size, args.n_kv, args.head_dim, args.n_slots,
+                  args.max_seq, args.kv_cb)
+        return
     if args.audit:
         print(audit_table(args.audit))
         return

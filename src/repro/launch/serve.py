@@ -128,6 +128,14 @@ def main():
                     help="page-pool size (default: slots × max pages)")
     ap.add_argument("--token-budget", type=int, default=None,
                     help="per-step token budget (decode + chunked prefill)")
+    ap.add_argument("--kv-bits", type=int, default=0,
+                    choices=(0, 2, 4, 8),
+                    help="codebook-quantize KV pages to this many bits "
+                         "(0 = dense pages); kv_bits/8 B per cached "
+                         "scalar of decode HBM traffic")
+    ap.add_argument("--kv-cb", default="page", choices=("page", "head"),
+                    help="KV codebook grouping: one per page, or one per "
+                         "(page, kv-head) — finer fit, n_kv× metadata")
     ap.add_argument("--vary-gen", action="store_true",
                     help="stagger request gen lengths (engine mode)")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -194,7 +202,8 @@ def main():
                       page_size=args.page_size,
                       max_seq=args.prompt_len + args.gen_len,
                       n_pages=args.pages, token_budget=args.token_budget,
-                      mesh=mesh, queue_limit=args.queue_limit)
+                      mesh=mesh, queue_limit=args.queue_limit,
+                      kv_bits=args.kv_bits, kv_cb_mode=args.kv_cb)
 
     with mesh:
         if args.snapshot_dir:

@@ -24,6 +24,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import kvquant
+from repro.kernels import dispatch
 from repro.models.layers import apply_rope, softcap
 from repro.models.qleaf import qmatmul, qweight
 from repro.models.sharding_ctx import constrain
@@ -442,11 +444,16 @@ def _write_slot(pool: Array, page_table: Array, pos: Array, alive: Array,
                                               mode="drop")
 
 
-def _gather_slots(pool: Array, page_table: Array) -> Array:
-    """Logical KV view per slot: [B, max_pages·page, ...]."""
-    b, npg = page_table.shape
-    g = pool[page_table]                       # [B, max_pages, page, ...]
-    return g.reshape((b, npg * pool.shape[1]) + pool.shape[2:])
+def _gather_slots(pool: Array, page_table: Array, alive: Array) -> Array:
+    """Logical KV view per slot: [B, max_pages·page, ...].
+
+    Dead slots' table rows are masked to the trash page *before* the
+    gather (dispatch routes to ``kernels.ref.gather_pages_ref`` on CPU or
+    the scalar-prefetch Pallas gather on TPU), so a stalled/empty slot
+    contributes one repeated trash page instead of ``max_pages``
+    arbitrary live pages to the gather footprint.
+    """
+    return dispatch.page_gather(pool, page_table, alive)
 
 
 def _slot_attention(q, ck, cv, valid, *, n_heads, n_kv, head_dim,
@@ -483,15 +490,162 @@ def gqa_decode_paged(p, x_t, cache: PagedKVCache, page_table, pos, alive, *,
 
     ck = _write_slot(cache.k, page_table, pos, alive, k[:, 0], page_size)
     cv = _write_slot(cache.v, page_table, pos, alive, v[:, 0], page_size)
-    gk = _gather_slots(ck, page_table)
-    gv = _gather_slots(cv, page_table)
-    cap = gk.shape[1]
-    valid = (jnp.arange(cap)[None, :] <= posb) & alive[:, None]
     scale = query_scale if query_scale is not None else head_dim ** -0.5
-    o = _slot_attention(q, gk, gv, valid, n_heads=n_heads, n_kv=n_kv,
-                        head_dim=head_dim, attn_softcap=attn_softcap,
-                        scale=scale)
+    # fused page-gather + online-softmax decode; the CPU ref route is the
+    # verbatim former _gather_slots/_slot_attention math (bit-identical)
+    o = dispatch.paged_attention(q, ck, cv, page_table, pos, alive,
+                                 softcap=attn_softcap, scale=scale)
     return qmatmul(p, "wo", o), PagedKVCache(k=ck, v=cv)
+
+
+# --- codebook-quantized paged KV (kv_bits ∈ {2,4,8}) -----------------------
+#
+# Pages store bit-packed codebook indices (``core.kvquant`` pack_rows
+# layout) plus per-page codebooks fit at write time.  Freeze-on-first-
+# write: the codebook of a page is fit exactly once — by the prefill
+# commit (over the whole zero-padded page) or by the decode step that
+# writes the page's first cell — and every later in-page write assigns
+# against the frozen codebook.  Storage is therefore a pure function of
+# the written values (replay/restore deterministic), and the stored
+# dequantized value equals ``cb[assign(v, cb)]`` exactly.
+
+
+class QuantPagedKVCache(NamedTuple):
+    k_words: Array    # [n_pages + 1, page, KV, Wd] uint32 packed indices
+    v_words: Array
+    k_cb: Array       # [n_pages + 1, Gcb, K]; Gcb = n_kv ("head") | 1 ("page")
+    v_cb: Array
+
+
+class QuantPagedMLACache(NamedTuple):
+    c_words: Array    # [n_pages + 1, page, ⌈kv_lora/lanes⌉] uint32
+    r_words: Array    # [n_pages + 1, page, ⌈rope_dim/lanes⌉] uint32
+    c_cb: Array       # [n_pages + 1, 1, K]  (latent pages: per-page cbs)
+    r_cb: Array
+
+
+def init_quant_paged_kv_cache(n_pages, page_size, n_kv, head_dim, bits,
+                              cb_mode, dtype):
+    wd = kvquant.words_per(head_dim, kvquant.check_kv_bits(bits))
+    gcb = n_kv if cb_mode == "head" else 1
+    zw = jnp.zeros((n_pages + 1, page_size, n_kv, wd), jnp.uint32)
+    zc = jnp.zeros((n_pages + 1, gcb, kvquant.kv_entries(bits)), dtype)
+    return QuantPagedKVCache(k_words=zw, v_words=zw, k_cb=zc, v_cb=zc)
+
+
+def init_quant_paged_mla_cache(n_pages, page_size, kv_lora, rope_dim, bits,
+                               dtype):
+    k = kvquant.kv_entries(kvquant.check_kv_bits(bits))
+    return QuantPagedMLACache(
+        c_words=jnp.zeros(
+            (n_pages + 1, page_size, kvquant.words_per(kv_lora, bits)),
+            jnp.uint32),
+        r_words=jnp.zeros(
+            (n_pages + 1, page_size, kvquant.words_per(rope_dim, bits)),
+            jnp.uint32),
+        c_cb=jnp.zeros((n_pages + 1, 1, k), dtype),
+        r_cb=jnp.zeros((n_pages + 1, 1, k), dtype))
+
+
+def _quant_groups(new: Array, cb_mode: str) -> Array:
+    """Reshape one token's write row to [B, Gcb, N] codebook groups."""
+    if new.ndim == 2:                  # MLA latent/rope row: per-page cb
+        return new[:, None, :]
+    b, kv, hd = new.shape
+    if cb_mode == "head":
+        return new                     # one cb per kv head
+    return new.reshape(b, 1, kv * hd)  # one cb per page
+
+
+def _write_slot_quant(words: Array, cbs: Array, page_table: Array,
+                      pos: Array, alive: Array, new: Array, page_size: int,
+                      bits: int, cb_mode: str):
+    """Quantizing twin of ``_write_slot``: fit-or-reuse the page codebook,
+    assign, bit-pack, scatter.
+
+    words [P+1, page, (KV,) Wd]; cbs [P+1, Gcb, K]; new [B, (KV,) d].
+    A slot writing offset 0 of a page fits that page's codebook from its
+    token row and freezes it; offsets > 0 assign against the frozen one.
+    Dead slots write the trash page (page 0) and never refit its cb.
+    """
+    b = new.shape[0]
+    npg = page_table.shape[1]
+    pg = jnp.clip(pos // page_size, 0, npg - 1)
+    phys = page_table[jnp.arange(b), pg]
+    phys = jnp.where(alive, phys, 0)
+    off = pos % page_size
+    is_first = (off == 0) & alive
+
+    grp = _quant_groups(new, cb_mode)              # [B, Gcb, N]
+    cb_new = kvquant.fit_codebooks(grp, bits).astype(cbs.dtype)
+    cb = jnp.where(is_first[:, None, None], cb_new, cbs[phys])
+    idx = kvquant.assign_codebook(grp, cb)
+    wrow = kvquant.pack_rows_jnp(idx.reshape(new.shape), bits)
+    return (words.at[phys, off].set(wrow, mode="drop"),
+            cbs.at[phys].set(cb, mode="drop"))
+
+
+def gqa_decode_paged_quant(p, x_t, cache: QuantPagedKVCache, page_table,
+                           pos, alive, *, n_heads, n_kv, head_dim,
+                           page_size, kv_bits, kv_cb_mode="page",
+                           attn_softcap=None, rope_theta=10000.0,
+                           query_scale=None):
+    """``gqa_decode_paged`` over codebook-quantized KV pages.
+
+    The written token is quantized *before* it is attended, so what the
+    kernel reads is exactly what the cache stores — the differential
+    oracle is the dense route over the dequantized pools, bit-exact.
+    """
+    q, k, v = _qkv(p, x_t, n_heads, n_kv, head_dim)
+    posb = pos[:, None]
+    q = apply_rope(q, posb, rope_theta)
+    k = apply_rope(k, posb, rope_theta)
+
+    kw, kcb = _write_slot_quant(cache.k_words, cache.k_cb, page_table, pos,
+                                alive, k[:, 0], page_size, kv_bits,
+                                kv_cb_mode)
+    vw, vcb = _write_slot_quant(cache.v_words, cache.v_cb, page_table, pos,
+                                alive, v[:, 0], page_size, kv_bits,
+                                kv_cb_mode)
+    scale = query_scale if query_scale is not None else head_dim ** -0.5
+    o = dispatch.paged_attention_quant(
+        q, kw, vw, kcb, vcb, page_table, pos, alive, bits=kv_bits,
+        head_dim=head_dim, softcap=attn_softcap, scale=scale)
+    return (qmatmul(p, "wo", o),
+            QuantPagedKVCache(k_words=kw, v_words=vw, k_cb=kcb, v_cb=vcb))
+
+
+def mla_decode_paged_quant(p, x_t, cache: QuantPagedMLACache, page_table,
+                           pos, alive, *, n_heads, kv_lora, rope_dim,
+                           nope_dim, v_dim, page_size, kv_bits,
+                           rope_theta=10000.0):
+    """Absorbed MLA decode over codebook-quantized latent pages."""
+    from repro.models.layers import rms_norm
+    b = x_t.shape[0]
+    posb = pos[:, None]
+    q_nope, q_rope = _mla_q(p, x_t, n_heads, nope_dim, rope_dim, posb,
+                            rope_theta)
+    dkv = qmatmul(p, "w_dkv", x_t)
+    c_kv_t = rms_norm(dkv[..., :kv_lora], p["kv_norm_scale"])
+    k_rope_t = apply_rope(dkv[..., None, kv_lora:], posb, rope_theta)[:, :, 0]
+
+    cw, ccb = _write_slot_quant(cache.c_words, cache.c_cb, page_table, pos,
+                                alive, c_kv_t[:, 0], page_size, kv_bits,
+                                "page")
+    rw, rcb = _write_slot_quant(cache.r_words, cache.r_cb, page_table, pos,
+                                alive, k_rope_t[:, 0], page_size, kv_bits,
+                                "page")
+
+    w_uk = qweight(p, "w_uk").reshape(kv_lora, n_heads, nope_dim)
+    q_eff = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_uk)
+    ctx = dispatch.mla_paged_attention_quant(
+        q_eff, q_rope, cw, rw, ccb, rcb, page_table, pos, alive,
+        bits=kv_bits, kv_lora=kv_lora, rope_dim=rope_dim,
+        scale=(nope_dim + rope_dim) ** -0.5)
+    w_uv = qweight(p, "w_uv").reshape(kv_lora, n_heads, v_dim)
+    o = jnp.einsum("bqhl,lhd->bqhd", ctx, w_uv).reshape(b, 1, n_heads * v_dim)
+    return (qmatmul(p, "wo", o),
+            QuantPagedMLACache(c_words=cw, r_words=rw, c_cb=ccb, r_cb=rcb))
 
 
 def gqa_decode_ring_slots(p, x_t, cache: KVCache, pos, alive, *, n_heads,
@@ -543,19 +697,14 @@ def mla_decode_paged(p, x_t, cache: PagedMLACache, page_table, pos, alive, *,
                       page_size)
     krope = _write_slot(cache.k_rope, page_table, pos, alive, k_rope_t[:, 0],
                         page_size)
-    gkv = _gather_slots(ckv, page_table)       # [B, cap, kv_lora]
-    grope = _gather_slots(krope, page_table)   # [B, cap, rope_dim]
 
     w_uk = qweight(p, "w_uk").reshape(kv_lora, n_heads, nope_dim)
     q_eff = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_uk)
-    logits = (jnp.einsum("bqhl,bsl->bhqs", q_eff, gkv) +
-              jnp.einsum("bqhd,bsd->bhqs", q_rope, grope))
-    logits = logits.astype(jnp.float32) * (nope_dim + rope_dim) ** -0.5
-    cap = gkv.shape[1]
-    valid = (jnp.arange(cap)[None, :] <= posb) & alive[:, None]
-    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
-    attn = jax.nn.softmax(logits, axis=-1)
-    ctx = jnp.einsum("bhqs,bsl->bqhl", attn.astype(gkv.dtype), gkv)
+    # fused absorbed-MLA paged decode (the ref route is the verbatim
+    # former gather + latent-softmax einsum chain, bit-identical)
+    ctx = dispatch.mla_paged_attention(
+        q_eff, q_rope, ckv, krope, page_table, pos, alive,
+        scale=(nope_dim + rope_dim) ** -0.5)
     w_uv = qweight(p, "w_uv").reshape(kv_lora, n_heads, v_dim)
     o = jnp.einsum("bqhl,lhd->bqhd", ctx, w_uv).reshape(b, 1, n_heads * v_dim)
     return qmatmul(p, "wo", o), PagedMLACache(c_kv=ckv, k_rope=krope)

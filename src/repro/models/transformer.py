@@ -22,6 +22,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import kvquant
 from repro.models import attention as attn
 from repro.models import layers as L
 from repro.models import moe as moe_mod
@@ -111,6 +112,11 @@ class ModelConfig:
     vlm_patches: int = 0
     q_chunk: int = 1024
     kv_chunk: int = 1024
+    # codebook-quantized paged KV cache (serving): 0 = dense pages,
+    # else bits ∈ {2,4,8}; kv_cb_mode ∈ {"page","head"} picks one
+    # codebook per page or per (page, kv-head) — see core.kvquant.
+    kv_bits: int = 0
+    kv_cb_mode: str = "page"
     remat: bool = True
     remat_policy: str = "full"     # full (save nothing) | dots (save dot outs)
     attn_unroll: bool = False      # triangular causal schedule (nq ≤ 8)
@@ -469,13 +475,22 @@ def decode_step(params, cfg: ModelConfig, caches, tokens_t: Array, pos):
 def _init_layer_paged_cache(kind: LayerKind, cfg: ModelConfig, n_slots: int,
                             n_pages: int, page_size: int, dtype):
     if kind.mixer == "gqa":
+        if cfg.kv_bits:
+            return attn.init_quant_paged_kv_cache(
+                n_pages, page_size, cfg.n_kv, cfg.head_dim, cfg.kv_bits,
+                cfg.kv_cb_mode, dtype)
         return attn.init_paged_kv_cache(n_pages, page_size, cfg.n_kv,
                                         cfg.head_dim, dtype)
     if kind.mixer == "gqa_local":
+        # ring buffers stay dense: constant-size per-slot state, no pages
         return attn.init_kv_cache(n_slots, cfg.window or n_pages * page_size,
                                   cfg.n_kv, cfg.head_dim, dtype)
     if kind.mixer == "mla":
         m = cfg.mla
+        if cfg.kv_bits:
+            return attn.init_quant_paged_mla_cache(
+                n_pages, page_size, m.kv_lora, m.rope_dim, cfg.kv_bits,
+                dtype)
         return attn.init_paged_mla_cache(n_pages, page_size, m.kv_lora,
                                          m.rope_dim, dtype)
     if kind.mixer == "ssm":
@@ -504,20 +519,65 @@ def init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
     return tuple(caches)
 
 
-def _write_layer_prefill(kind: LayerKind, paged, fentry, slot: int,
-                         pages: Array, page_size: int):
+def _write_layer_prefill(kind: LayerKind, cfg: ModelConfig, paged, fentry,
+                         slot: int, pages: Array, page_size: int):
     """Commit one layer's batch-1 prefill cache entry into the paged /
     per-slot layout (leaves keep their leading [G] group dim)."""
     if kind.mixer in ("gqa", "mla"):
-        def scatter(pool, val):                      # val [G, 1, S, ...]
+        def paginate(val):                           # val [G, 1, S, ...]
             v = val[:, 0]
             g, s = v.shape[0], v.shape[1]
             n_full = pages.shape[0] * page_size
             pad = [(0, 0)] * v.ndim
             pad[1] = (0, n_full - s)
-            v = jnp.pad(v, pad).reshape(
+            return jnp.pad(v, pad).reshape(
                 (g, pages.shape[0], page_size) + v.shape[2:])
-            return pool.at[:, pages].set(v.astype(pool.dtype))
+
+        def scatter(pool, val):
+            return pool.at[:, pages].set(paginate(val).astype(pool.dtype))
+
+        def scatter_quant(words_pool, cb_pool, val, cb_mode):
+            # Fit each committed page's codebook over the whole
+            # (zero-padded) page, assign, bit-pack, scatter words + cbs.
+            # This freezes the page cb; later in-page decode writes
+            # assign against it (see attention._write_slot_quant).
+            v = paginate(val)              # [G, npr, page, (KV,) feat]
+            if v.ndim == 5:
+                g, npr, pgs, kv, hd = v.shape
+                if cb_mode == "head":
+                    grp = v.transpose(0, 1, 3, 2, 4).reshape(
+                        g, npr, kv, pgs * hd)
+                else:
+                    grp = v.reshape(g, npr, 1, pgs * kv * hd)
+            else:
+                g, npr, pgs, d = v.shape
+                grp = v.reshape(g, npr, 1, pgs * d)
+            cb = kvquant.fit_codebooks(grp, cfg.kv_bits).astype(
+                cb_pool.dtype)
+            idx = kvquant.assign_codebook(grp, cb)
+            if v.ndim == 5 and cb_mode == "head":
+                idx = idx.reshape(g, npr, kv, pgs, hd).transpose(
+                    0, 1, 3, 2, 4)
+            else:
+                idx = idx.reshape(v.shape)
+            words = kvquant.pack_rows_jnp(idx, cfg.kv_bits)
+            return (words_pool.at[:, pages].set(words),
+                    cb_pool.at[:, pages].set(cb))
+
+        if isinstance(paged, attn.QuantPagedKVCache):
+            kw, kcb = scatter_quant(paged.k_words, paged.k_cb, fentry.k,
+                                    cfg.kv_cb_mode)
+            vw, vcb = scatter_quant(paged.v_words, paged.v_cb, fentry.v,
+                                    cfg.kv_cb_mode)
+            return attn.QuantPagedKVCache(k_words=kw, v_words=vw,
+                                          k_cb=kcb, v_cb=vcb)
+        if isinstance(paged, attn.QuantPagedMLACache):
+            cw, ccb = scatter_quant(paged.c_words, paged.c_cb,
+                                    fentry.c_kv, "page")
+            rw, rcb = scatter_quant(paged.r_words, paged.r_cb,
+                                    fentry.k_rope, "page")
+            return attn.QuantPagedMLACache(c_words=cw, r_words=rw,
+                                           c_cb=ccb, r_cb=rcb)
         if kind.mixer == "gqa":
             return attn.PagedKVCache(k=scatter(paged.k, fentry.k),
                                      v=scatter(paged.v, fentry.v))
@@ -550,8 +610,8 @@ def write_prefill_to_slot(cfg: ModelConfig, paged_caches, prefill_caches,
         ns = {}
         for pi, kind in enumerate(spec.pattern):
             ns[f"pos{pi}"] = _write_layer_prefill(
-                kind, pstack[f"pos{pi}"], fstack[f"pos{pi}"], slot, pages,
-                page_size)
+                kind, cfg, pstack[f"pos{pi}"], fstack[f"pos{pi}"], slot,
+                pages, page_size)
         out.append(ns)
     return tuple(out)
 
@@ -568,6 +628,14 @@ def _gate_slot_cache(new, old, alive: Array):
 def _apply_mixer_decode_slots(kind, p, x_t, cache, page_table, pos, alive,
                               cfg):
     if kind.mixer == "gqa":
+        if isinstance(cache, attn.QuantPagedKVCache):
+            page_size = cache.k_words.shape[1]
+            return attn.gqa_decode_paged_quant(
+                p, x_t, cache, page_table, pos, alive, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv, head_dim=cfg.head_dim, page_size=page_size,
+                kv_bits=cfg.kv_bits, kv_cb_mode=cfg.kv_cb_mode,
+                attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+                query_scale=cfg.query_scale)
         page_size = cache.k.shape[1]
         return attn.gqa_decode_paged(
             p, x_t, cache, page_table, pos, alive, n_heads=cfg.n_heads,
@@ -583,6 +651,13 @@ def _apply_mixer_decode_slots(kind, p, x_t, cache, page_table, pos, alive,
         return out, _gate_slot_cache(c, cache, alive)
     if kind.mixer == "mla":
         m = cfg.mla
+        if isinstance(cache, attn.QuantPagedMLACache):
+            page_size = cache.c_words.shape[1]
+            return attn.mla_decode_paged_quant(
+                p, x_t, cache, page_table, pos, alive, n_heads=cfg.n_heads,
+                kv_lora=m.kv_lora, rope_dim=m.rope_dim, nope_dim=m.nope_dim,
+                v_dim=m.v_dim, page_size=page_size, kv_bits=cfg.kv_bits,
+                rope_theta=cfg.rope_theta)
         page_size = cache.c_kv.shape[1]
         return attn.mla_decode_paged(
             p, x_t, cache, page_table, pos, alive, n_heads=cfg.n_heads,

@@ -265,7 +265,8 @@ def test_golden_fixture_audits_clean(fixture, skip):
     assert report["violations"] == []
     hbm = report["checks"]["hbm"]
     assert set(hbm) == {"forward", "prefill", "decode_step_slots",
-                        "engine_decode_sample"}
+                        "engine_decode_sample",
+                        "engine_decode_sample_kvq4"}
     for entry, res in hbm.items():
         assert res["rows"], entry
         for row in res["rows"]:
@@ -276,6 +277,16 @@ def test_golden_fixture_audits_clean(fixture, skip):
     n_leaves = len(report["protected_leaves"])
     for entry, res in hbm.items():
         assert len(res["rows"]) == n_leaves, entry
+    # the KV-page operand check engaged: the quantized-KV decode reads
+    # live uint32 word pools (zero unexplained dense-width KV reads —
+    # those would be violations, asserted empty above)
+    kvq = hbm["engine_decode_sample_kvq4"]
+    assert kvq["kv_rows"] and kvq["kv_word_input_bytes"] > 0
+    for row in kvq["kv_rows"]:
+        assert row["uses"] >= 1, row
+        assert row["hbm_bytes"] < row["dense_bytes"], row
+    # the paged autotune table is swept by the vmem lint
+    assert report["checks"]["vmem"]["paged_configs_checked"] >= 1
     if "recompile" not in skip:
         ev = report["checks"]["recompile"]["events"]
         assert ev["preemptions"] >= 1 and ev["finished"] >= 3

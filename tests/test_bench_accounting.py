@@ -78,6 +78,43 @@ def test_uint8_oracle_rows_report_one_byte(bench_json):
             assert "idx_bytes/weight=1.0" in row["derived"]
 
 
+_KVT_RE = re.compile(
+    r"kv_bytes/token=([0-9.]+) \(== kv_bits/8\*head_dim\*n_kv = "
+    r"([0-9.]+)[^;]*; kv_bits=(\d+) head_dim=(\d+) n_kv=(\d+)")
+
+
+def test_paged_attention_rows_report_kv_bytes_per_token(bench_json):
+    """Every ``paged_attention_*`` row's KV traffic accounting (measured
+    from the materialized pool arrays) must equal kv_bits/8 · head_dim ·
+    n_kv — eq. 14 extended to activation bytes (dense rows state the
+    same identity at kv_bits=32)."""
+    rows = {n: r for n, r in bench_json.items()
+            if n.startswith("paged_attention_")}
+    for expect in ("paged_attention_gqa_ref_dense",
+                   "paged_attention_gqa_interp_dense",
+                   "paged_attention_gqa_ref_kvq4",
+                   "paged_attention_gqa_interp_kvq2",
+                   "paged_attention_gqa_interp_kvq4",
+                   "paged_attention_gqa_interp_kvq8",
+                   "paged_attention_mla_interp_dense",
+                   "paged_attention_mla_interp_kvq4"):
+        assert expect in rows, f"bench row {expect} disappeared"
+    for name, row in rows.items():
+        derived = row["derived"]
+        assert "MISMATCH" not in derived, f"{name}: {derived}"
+        m = _KVT_RE.search(derived)
+        assert m, f"{name}: no kv_bytes/token accounting in {derived!r}"
+        actual, stated = float(m.group(1)), float(m.group(2))
+        bits, hd, nkv = (int(m.group(i)) for i in (3, 4, 5))
+        assert actual == pytest.approx(stated, abs=1e-9), \
+            f"{name}: {actual} != stated {stated}"
+        assert actual == pytest.approx(bits / 8 * hd * nkv, abs=1e-9), \
+            f"{name}: {actual} B/token != {bits}/8*{hd}*{nkv}"
+        assert "tile=" in derived, f"{name}: no committed token tile"
+    # the standalone page-gather kernel rides with its own rows
+    assert any(n.startswith("page_gather") for n in bench_json)
+
+
 _TPS_RE = re.compile(
     r"tok/s=([0-9.]+) one_shot=([0-9.]+) \(x([0-9.]+)\); "
     r"occupancy=([0-9.]+) page_util=([0-9.]+) peak=([0-9.]+)")
@@ -106,3 +143,45 @@ def test_engine_throughput_rows(bench_json):
             # the fault-tolerance cost row must state its injected rate
             # and what the supervisor did
             assert "faults=" in derived and "restarts" in derived
+
+
+_KVQ_RE = re.compile(
+    r"tok/s=([0-9.]+) dense=([0-9.]+) \(x([0-9.]+)\); "
+    r"occupancy=([0-9.]+) page_util=([0-9.]+) peak=([0-9.]+); "
+    r"equal-HBM: kv_bits=(\d+) slots=(\d+)/(\d+) \(x([0-9.]+) capacity"
+    r"[^)]*\) page_bytes=(\d+) dense=(\d+)")
+
+
+def test_engine_kvq_rows(bench_json):
+    """The quantized-KV engine cells must state the equal-HBM slot
+    capacity at each width, with page bytes matching
+    ``engine.kvcache.kv_page_footprint`` — and 4-bit KV must afford
+    ≥1.5× the dense baseline's concurrent slots (the PR's acceptance
+    bar; kvq8's codebook overhead may honestly show no gain)."""
+    from repro.engine.kvcache import kv_page_footprint
+
+    for bits in (2, 4, 8):
+        name = f"engine_throughput_kvq{bits}"
+        assert name in bench_json, f"bench row {name} disappeared"
+        derived = bench_json[name]["derived"]
+        m = _KVQ_RE.search(derived)
+        assert m, f"{name}: no equal-HBM accounting in {derived!r}"
+        (tps, dense_tps, ratio, occ, util, peak) = map(
+            float, m.groups()[:6])
+        kv_bits, slots, dense_slots = (int(m.group(i)) for i in (7, 8, 9))
+        cap_ratio = float(m.group(10))
+        page_b, dense_b = int(m.group(11)), int(m.group(12))
+        assert kv_bits == bits
+        assert tps > 0 and dense_tps > 0
+        assert ratio == pytest.approx(tps / dense_tps, rel=0.05)
+        assert 0 < occ <= 1 and 0 <= util <= 1 and 0 < peak <= 1
+        assert cap_ratio == pytest.approx(slots / dense_slots, abs=0.01)
+        # page bytes re-derived independently (bench cfg geometry:
+        # page_size=8, n_kv=2, head_dim=12)
+        assert page_b == kv_page_footprint(8, 2, 12, bits, "page")
+        assert dense_b == kv_page_footprint(8, 2, 12, 0)
+        assert slots == max(dense_slots,
+                            dense_slots * dense_b // page_b)
+        if bits == 4:
+            assert slots / dense_slots >= 1.5, \
+                f"4-bit KV affords only {slots}/{dense_slots} slots"

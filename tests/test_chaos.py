@@ -210,6 +210,44 @@ def test_snapshot_kill_restore_mid_stream_bit_exact(tmp_path):
     assert eng2.pool.used_pages == 0 and eng2.pool.seized == 0
 
 
+def test_snapshot_kill_restore_quantized_pages_bit_exact(tmp_path):
+    """Kill-and-restore with codebook-quantized KV pages live: the word
+    pools AND the frozen per-page codebooks round-trip through the
+    snapshot, so the restored engine's stream is bit-identical to an
+    uninterrupted quantized run (freeze-on-first-write makes storage a
+    pure function of the written values — nothing to re-fit)."""
+    cfg, params = _mixed(16, "packed")
+    reqs = _workload(cfg, n=4, gen=10)
+    kvq = dict(kv_bits=4, kv_cb_mode="page")
+    want = Engine(params, cfg, n_pages=8, **_GEO, **kvq).run(list(reqs))
+
+    eng = Engine(params, cfg, n_pages=8, **_GEO, **kvq)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(7):                     # quantized pages in flight
+        eng.step()
+    assert eng.sched.has_work()
+    save_snapshot(eng, str(tmp_path))
+
+    eng2 = Engine(params, cfg, n_pages=8, **_GEO, **kvq)
+    step = restore_into(eng2, str(tmp_path))
+    assert step == 7
+    # the restored cache really is the quantized layout (uint32 words)
+    kv_leaves = [x for x in jax.tree_util.tree_leaves(eng2.caches)
+                 if hasattr(x, "dtype") and x.dtype == np.uint32
+                 and x.ndim >= 3]
+    assert kv_leaves, "restored engine lost its quantized KV word pools"
+    while eng2.sched.has_work():
+        eng2.step()
+    assert sorted(eng2.outputs) == sorted(want)
+    for rid in want:
+        np.testing.assert_array_equal(
+            eng2.outputs[rid], want[rid],
+            err_msg=f"request {rid}: restored kvq stream != uninterrupted")
+        assert eng2.results[rid].outcome is Outcome.FINISHED
+    assert eng2.pool.used_pages == 0 and eng2.pool.seized == 0
+
+
 def test_snapshot_corruption_rejected_and_survived(tmp_path):
     cfg, params = _mixed(16, "packed")
     reqs = _workload(cfg, n=2, gen=6)
