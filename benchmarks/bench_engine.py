@@ -260,6 +260,60 @@ def _bench_cell_faulted(name, params, cfg, weight_note):
     return (name, dt_e * 1e6, derived)
 
 
+def _bench_cell_long_prompt(params, cfg):
+    """Blockwise-prefill scaling row: per-chunk step latency and
+    per-chunk kernel VMEM across growing prompt lengths at a fixed
+    ``prefill_chunk``.  Both must be ~flat in prompt length — the old
+    engine re-ran the *whole* prompt through one ``jit_prefill`` at
+    commit, so this row would have scaled linearly (and its peak
+    activation footprint with it).  Geometry (``max_seq``, page count)
+    is held at the longest prompt for every length so the per-chunk
+    attend view is identical and only the prompt length varies."""
+    from repro.analysis.vmem import estimate_prefill_vmem_bytes
+    from repro.kernels.dispatch import prefill_token_tile
+
+    chunk, page_size, gen = 16, 8, 2
+    lens = (32, 64) if FAST else (32, 128)
+    max_seq = max(lens) + gen
+    pages_per_slot = -(-max_seq // page_size)
+
+    def timed(prompt_len):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(13), (prompt_len,), 0, cfg.vocab))
+        n_chunks = -(-prompt_len // chunk)
+
+        def drive():
+            eng = Engine(params, cfg, n_slots=1, page_size=page_size,
+                         max_seq=max_seq, n_pages=pages_per_slot,
+                         prefill_chunk=chunk, token_budget=chunk)
+            eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=gen))
+            t0 = time.perf_counter()
+            for _ in range(n_chunks):
+                eng.step()
+            dt = time.perf_counter() - t0
+            assert eng.stats.prefill_calls == n_chunks, \
+                (eng.stats.prefill_calls, n_chunks)
+            while eng.sched.has_work():
+                eng.step()
+            return dt / n_chunks
+
+        drive()                                     # warm compiles
+        return drive(), n_chunks
+
+    cells = [(s,) + timed(s) for s in lens]
+    tile = prefill_token_tile("dense", cfg.head_dim)
+    vmem_b = estimate_prefill_vmem_bytes("dense", cfg.head_dim, tile)
+    (s0, us0, _), (s1, us1, _) = cells[0], cells[-1]
+    derived = ("us/chunk " +
+               " ".join(f"S={s}->{u * 1e6:.0f} ({n} chunks)"
+                        for s, u, n in cells) +
+               f" (x{us1 / us0:.2f} across x{s1 // s0} prompt len); "
+               f"chunk={chunk} vmem/chunk={vmem_b} B (dense tile={tile}, "
+               f"flat in S); budget bounds compute: no step forwards "
+               f"more than {chunk} prompt tokens")
+    return ("engine_prefill_long_prompt", cells[-1][1] * 1e6, derived)
+
+
 def run():
     rows = []
     cfg = _cfg()
@@ -285,6 +339,8 @@ def run():
     # width affords (vs the dense-KV 4-slot baseline)
     for kv_bits in (2, 4, 8):
         rows.append(_bench_cell_kvq(params, cfg, kv_bits, dense_tps))
+    # blockwise-prefill scaling: per-chunk latency/VMEM flat in prompt len
+    rows.append(_bench_cell_long_prompt(params, cfg))
     return rows
 
 

@@ -5,7 +5,8 @@ artifact directory and emits machine-readable ``AUDIT.json`` plus a
 human table (``launch.report.audit_table``):
 
 1. **dense-inflation** — trace ``forward`` / ``prefill`` /
-   ``decode_step_slots`` / the engine's fused decode+sample step with the
+   ``decode_step_slots`` / the engine's fused decode+sample step / the
+   engine's blockwise prefill chunk (``prefill_chunk_slots``) with the
    *pallas* kernel backend pinned (tracing is abstract eval — no Mosaic,
    runs on CPU) and walk the jaxpr for codebook gathers that rebuild a
    packed leaf's dense weight;
@@ -24,7 +25,7 @@ human table (``launch.report.audit_table``):
 5. **vmem-blocks** — lint every block config reachable from the
    autotune surface (VMEM footprint, lane divisibility) without Mosaic —
    the packed-matmul tables *and* every committed
-   ``_PAGED_BLOCK_TABLE`` token tile.
+   ``_PAGED_BLOCK_TABLE`` / ``_PREFILL_BLOCK_TABLE`` token tile.
 
 Violations matching ``allowlist.json`` (packaged default, or
 ``--allowlist``) are reported but don't fail the gate; anything else
@@ -122,6 +123,13 @@ def _serve_entries(sp, cfg):
         lambda p, c, pt, t, pos, al, tm, tk, ky, po: _decode_and_sample(
             p, cfg, c, pt, t, pos, al, tm, tk, ky, po),
         (sp,) + dec + sample)
+    # the engine's blockwise-prefill device call: one chunk of new
+    # prompt tokens forwarded into one slot's pages + carry rows
+    entries["engine_prefill_chunk"] = (
+        lambda p, c, pt, t, sl, st0: T.prefill_chunk_slots(
+            p, cfg, c, pt, t, sl, st0),
+        (sp, caches, table, toks, jnp.zeros((), jnp.int32),
+         jnp.zeros((), jnp.int32)))
     return entries
 
 
@@ -226,14 +234,17 @@ def run_audit(packed_dir: str, config: Optional[str] = None,
     if "vmem" not in skip:
         res = V.audit_block_space(prot)
         pres = V.audit_paged_block_space()
+        fres = V.audit_prefill_block_space()
+        all_rows = res["rows"] + pres["rows"] + fres["rows"]
         report["checks"]["vmem"] = {
-            "configs_checked": len(res["rows"]) + len(pres["rows"]),
+            "configs_checked": len(all_rows),
             "paged_configs_checked": len(pres["rows"]),
-            "warnings": [w for r in res["rows"] + pres["rows"]
-                         for w in r["warnings"]],
+            "prefill_configs_checked": len(fres["rows"]),
+            "warnings": [w for r in all_rows for w in r["warnings"]],
         }
         violations.extend(res["violations"])
         violations.extend(pres["violations"])
+        violations.extend(fres["violations"])
 
     active, allowed = split_allowed(violations,
                                     load_allowlist(allowlist_path))

@@ -5,8 +5,8 @@ preemption never retrace a device call — dead slots are masked, slot
 indices stay traced, prefill shapes depend only on the prompt length.
 ``test_engine`` used to assert this ad hoc on the decode cache alone;
 this module promotes it into a reusable analyzer covering **every**
-device call the step loop makes (decode+sample, prefill, prefill-sample,
-page commit) and ships a canned scenario —
+device call the step loop makes (decode+sample, blockwise prefill
+chunks, prefill-sample) and ships a canned scenario —
 :func:`audit_engine_recompiles` — that the audit CLI runs against an
 artifact: warm up the shared jit caches, then drive a fresh engine
 through admission, chunked prefill, completion AND page-pressure

@@ -320,3 +320,118 @@ def audit_paged_block_space(dequant: str = "lut") -> Dict[str, Any]:
                 "check": "vmem-blocks", "subject": source,
                 "detail": f"paged {kind} token_tile={tile}: {err}"})
     return {"rows": rows, "violations": violations}
+
+
+# ---------------------------------------------------------------------------
+# Blockwise-prefill route (dispatch._PREFILL_BLOCK_TABLE)
+# ---------------------------------------------------------------------------
+
+PREFILL_KINDS = ("dense", "quant")
+
+# Bounds on the chunk-side operands of the blockwise-prefill kernel:
+# every committed path partitions prompts into blocks of ≤ 64 new tokens
+# (``transformer.DEFAULT_PREFILL_BLOCK`` and the engine's default
+# ``prefill_chunk``), and the committed configs stay ≤ 32 query heads.
+# The q/out blocks and the online-softmax scratch scale with these, not
+# with the prompt length — that flatness is the kernel's whole point,
+# and the estimate below proves it per table entry.
+PREFILL_CHUNK_BOUND = 64
+PREFILL_HEADS_BOUND = 32
+
+
+def estimate_prefill_vmem_bytes(kind: str, feat: int, token_tile: int,
+                                bits: int = 0, *,
+                                dequant: str = "lut") -> int:
+    """Per-grid-step VMEM bytes a blockwise-prefill kernel asks Mosaic
+    to fit.
+
+    Mirrors the BlockSpecs in ``kernels/blockwise_prefill.py``: per step
+    one ``token_tile`` K tile and one V tile are DMA'd (×2 double
+    buffering) — dense rows, or packed uint32 words plus a single page's
+    codebooks when ``bits`` — while the q/out blocks and the m/l/acc
+    flash scratch are chunk-sized and bounded by
+    :data:`PREFILL_CHUNK_BOUND` × :data:`PREFILL_HEADS_BOUND` (worst
+    case ``rep == 1``: every query head has its own KV head).  Prompt
+    length never appears: the footprint is flat in S.
+    """
+    f32 = u32 = i32 = 4
+    bt = token_tile
+    c, h = PREFILL_CHUNK_BOUND, PREFILL_HEADS_BOUND
+    kv = h
+    if kind == "quant" and bits:
+        lanes = kvquant.kv_lanes(bits)
+        kent = kvquant.kv_entries(bits)
+        words = -(-feat // lanes)
+        kv_tile = bt * kv * words * u32 + kent * f32
+        # unpack index tile + dequantized f32 tile, for K and for V
+        body = 2 * bt * kv * feat * (i32 + f32)
+        if dequant == "onehot":
+            body += 2 * bt * kv * feat * kent * f32
+    else:
+        kv_tile = bt * kv * feat * f32
+        body = 0
+    dma = 2 * kv_tile                        # K tile + V tile
+    q_out = 2 * 2 * c * h * feat * f32       # q and out blocks, ×2 buffered
+    scratch = h * c * (2 + feat) * f32       # m/l/acc online-softmax carry
+    return 2 * dma + body + q_out + scratch
+
+
+def validate_prefill_block_config(kind: str, feat: int, token_tile: int,
+                                  bits: int = 0, *, dequant: str = "lut",
+                                  budget: int = VMEM_BUDGET
+                                  ) -> Dict[str, Any]:
+    """Statically lint one blockwise-prefill token-tile entry; same
+    contract as :func:`validate_paged_block_config`.  The quant route
+    clamps tiles to page-size divisors at dispatch time, so divisibility
+    is not an error here — only footprint and basic hygiene are."""
+    errors: List[str] = []
+    warnings: List[str] = []
+    if kind not in PREFILL_KINDS:
+        errors.append(f"kind={kind!r}; choose from {PREFILL_KINDS}")
+        return {"ok": False, "errors": errors, "warnings": warnings,
+                "vmem_bytes": 0}
+    if bits and bits not in kvquant.KV_BITS_CHOICES:
+        errors.append(f"kv_bits={bits} not in {kvquant.KV_BITS_CHOICES}")
+        return {"ok": False, "errors": errors, "warnings": warnings,
+                "vmem_bytes": 0}
+    if token_tile < 1:
+        errors.append(f"non-positive token_tile {token_tile}")
+    elif token_tile % 8:
+        warnings.append(f"token_tile={token_tile} not a multiple of the "
+                        f"f32 sublane tile (8) — Mosaic pads the KV tile")
+    if feat % 128:
+        warnings.append(f"feat={feat} not 128-lane aligned — Mosaic pads "
+                        f"the KV tile's trailing dim")
+    vmem = estimate_prefill_vmem_bytes(kind, feat, max(token_tile, 1),
+                                       bits, dequant=dequant)
+    if vmem > budget:
+        errors.append(f"~{vmem / 2**20:.1f} MiB/step exceeds the "
+                      f"{budget / 2**20:.1f} MiB VMEM budget "
+                      f"(core has {VMEM_BYTES / 2**20:.0f} MiB)")
+    elif vmem > 0.8 * budget:
+        warnings.append(f"~{vmem / 2**20:.1f} MiB/step is within 20% of "
+                        f"the {budget / 2**20:.1f} MiB VMEM budget")
+    return {"ok": not errors, "errors": errors, "warnings": warnings,
+            "vmem_bytes": vmem}
+
+
+def audit_prefill_block_space(dequant: str = "lut") -> Dict[str, Any]:
+    """Sweep every committed ``dispatch._PREFILL_BLOCK_TABLE`` entry —
+    quant entries at every supported ``kv_bits`` (the table doesn't key
+    on bits; the worst case must still fit)."""
+    rows: List[Dict[str, Any]] = []
+    violations: List[Dict[str, str]] = []
+    for (kind, feat), tile in sorted(dispatch.prefill_block_table().items()):
+        source = f"prefill_table[{kind},{feat}]"
+        sweep = kvquant.KV_BITS_CHOICES if kind == "quant" else (0,)
+        for bits in sweep:
+            res = validate_prefill_block_config(kind, feat, tile, bits,
+                                                dequant=dequant)
+            rows.append({"kind": kind, "feat": feat, "bits": bits,
+                         "token_tile": tile, "source": source, **res})
+            for err in res["errors"]:
+                violations.append({
+                    "check": "vmem-blocks", "subject": source,
+                    "detail": f"prefill {kind} token_tile={tile} "
+                              f"(bits={bits}): {err}"})
+    return {"rows": rows, "violations": violations}

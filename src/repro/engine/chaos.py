@@ -14,7 +14,11 @@ engine step:
 * ``kill_restore`` — snapshot → tear the engine down → restore, mid
   stream (the bit-exactness acceptance gate);
 * ``preempt``      — raise :class:`~repro.fault.PreemptionSignal`
-  (save-and-exit, then in-process resume).
+  (save-and-exit, then in-process resume);
+* ``prefill_kill`` — a ``kill_restore`` that waits until some slot is
+  *mid-prefill* (0 < progress < prompt_len), so the snapshot must
+  round-trip partially-written KV pages and the per-layer block-carry
+  state of an in-flight blockwise prefill.
 
 Every event fires **at most once** per plan object (the ``_fired`` set
 lives on the plan, which outlives engine restarts) — a restored run
@@ -33,7 +37,8 @@ import numpy as np
 
 from repro.fault import PreemptionSignal, SimulatedNodeFailure
 
-KINDS = ("decode_fail", "poison", "pressure", "kill_restore", "preempt")
+KINDS = ("decode_fail", "poison", "pressure", "kill_restore", "preempt",
+         "prefill_kill")
 
 
 @dataclasses.dataclass
@@ -139,6 +144,16 @@ class FaultPlan:
             elif ev.kind == "kill_restore":
                 # hand control back immediately: later due events fire
                 # on the next poll, against the restored engine
+                self._fired.add(idx)
+                return "kill_restore"
+            elif ev.kind == "prefill_kill":
+                # stays pending until a slot is partway through its
+                # block sequence (short prompts may never get there —
+                # the event then simply never fires)
+                if not any(s is not None and not s.prefilled
+                           and 0 < s.prefill_progress
+                           for s in eng.sched.slots):
+                    continue
                 self._fired.add(idx)
                 return "kill_restore"
             elif ev.kind == "decode_fail":

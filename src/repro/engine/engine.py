@@ -7,13 +7,16 @@ Each :meth:`Engine.step` mixes, under a per-step token budget:
    admission/eviction never recompiles);
 2. **admission** — queued requests move into free slots once their
    prompt's pages can be reserved from the pool;
-3. **chunked prefill** — admitted prompts consume leftover budget in
-   chunks across steps; when a prompt is fully scheduled, one batch-1
-   ``prefill`` call runs and its KV is scattered into the slot's pages.
-   (The compute is a single full-prompt call — the same call the
-   one-shot oracle makes — so engine token streams are exactly the
-   one-shot streams; the budget governs *scheduling*, i.e. how much
-   prompt work each step admits next to ongoing decodes.)
+3. **blockwise prefill** — each admitted prompt advances at most ONE
+   block of ≤ ``effective_chunk`` new tokens per step, paid out of the
+   leftover budget.  The block *is* the compute: an incremental forward
+   over just those tokens whose K/V lands directly in the slot's pages
+   (quantized when ``kv_bits > 0``) with per-layer recurrent / window
+   carries riding in the slot's cache rows — so the budget bounds
+   device work, and no engine step runs a forward over more than
+   ``effective_chunk`` prompt tokens.  The one-shot oracle runs the
+   same blockwise computation (``transformer.prefill`` with the same
+   block), so engine token streams are exactly the one-shot streams.
 
 A finished slot's pages return to the pool immediately (a queued short
 request reuses a long one's pages without waiting for the batch).  If
@@ -48,12 +51,11 @@ import numpy as np
 from repro.core import kvquant
 from repro.engine import sampling
 from repro.engine.kvcache import PagePool
-from repro.engine.oneshot import jit_prefill
 from repro.engine.outcomes import Outcome, RequestResult
 from repro.engine.scheduler import Request, SlotScheduler
 from repro.models.transformer import (ModelConfig, decode_step_slots,
                                       init_paged_cache,
-                                      write_prefill_to_slot)
+                                      prefill_chunk_slots)
 
 
 def _decode_and_sample(params, cfg, caches, page_table, tokens_t, pos,
@@ -77,14 +79,13 @@ def _decode_and_sample(params, cfg, caches, page_table, tokens_t, pos,
 # module-level jits shared by every Engine instance: constructing an
 # engine (or several, as the bench does) never recompiles a step that a
 # previous instance with the same config/shapes already compiled.
-# Prefill is oneshot.jit_prefill — one cache for the oracle AND the
-# engine (their prefill calls must be the same computation anyway for
-# stream parity).
 _DECODE = jax.jit(_decode_and_sample, static_argnums=1)
 _SAMPLE = jax.jit(sampling.sample_and_flag)
-# slot stays traced (it is only an index), so admitting into slot 63
-# reuses slot 0's compiled scatter
-_COMMIT = jax.jit(write_prefill_to_slot, static_argnums=(0, 5))
+# slot and start stay traced (they are only indices), so block 7 of a
+# long prompt in slot 63 reuses the compile of block 0 in slot 0; only
+# distinct block widths (the full chunk plus each prompt's remainder)
+# trace anew
+_CHUNK = jax.jit(prefill_chunk_slots, static_argnums=1)
 
 
 def _activation_dtype(params):
@@ -104,8 +105,9 @@ def _activation_dtype(params):
 class EngineStats:
     steps: int = 0
     decode_tokens: int = 0
-    prefill_tokens: int = 0        # prompt tokens scheduled (chunked)
-    prefill_calls: int = 0
+    prefill_tokens: int = 0        # prompt tokens actually computed
+    prefill_calls: int = 0         # block forwards run (>= 1 per prompt)
+    prefill_samples: int = 0       # first tokens sampled at final blocks
     admitted: int = 0
     finished: int = 0
     delivered_tokens: int = 0      # tokens in finished outputs (excludes
@@ -124,10 +126,11 @@ class EngineStats:
 
     @property
     def generated_tokens(self) -> int:
-        """Tokens *computed* (every prefill call emits the request's
-        first token) — exceeds delivered_tokens when preemptions
-        discarded work."""
-        return self.decode_tokens + self.prefill_calls
+        """Tokens *sampled*: decode steps plus the first token each
+        completed prefill emits.  A multi-block prefill samples exactly
+        once, so this never double-counts block forwards; it exceeds
+        delivered_tokens when preemptions discarded work."""
+        return self.decode_tokens + self.prefill_samples
 
     def summary(self) -> dict:
         steps = max(self.steps, 1)
@@ -216,6 +219,11 @@ class Engine:
                              else n_slots + self.prefill_chunk)
         if self.token_budget < 1:
             raise ValueError("token_budget must be >= 1")
+        # the block size every prefill forward actually uses: the fixed
+        # partition must fit inside a fresh step's budget, or a long
+        # prompt could never schedule its first block
+        self.effective_chunk = max(1, min(self.prefill_chunk,
+                                          self.token_budget))
         self.queue_limit = (None if queue_limit is None
                             else max(int(queue_limit), 1))
         self.max_preemptions = int(max_preemptions)
@@ -232,7 +240,7 @@ class Engine:
             self.caches = jax.tree_util.tree_map(jax.device_put,
                                                  self.caches, sh)
         self._decode = _DECODE
-        self._prefill = jit_prefill
+        self._chunk = _CHUNK
         self._sample = _SAMPLE
         self._zero_key = np.zeros((2,), np.uint32)
         self._no_poison = np.zeros((n_slots,), bool)
@@ -332,9 +340,8 @@ class Engine:
         / preemption never trigger a retrace."""
         return {
             "decode": int(self._decode._cache_size()),
-            "prefill": int(self._prefill._cache_size()),
+            "prefill_chunk": int(self._chunk._cache_size()),
             "sample": int(self._sample._cache_size()),
-            "commit": int(_COMMIT._cache_size()),
         }
 
     def run(self, requests: Optional[List[Request]] = None,
@@ -399,19 +406,20 @@ class Engine:
             st.admitted += 1
             info["admitted"] += 1
 
-        # 3) chunked prefill under the leftover budget
+        # 3) blockwise prefill under the leftover budget: each prefilling
+        #    slot advances at most one block per step, and only when the
+        #    leftover budget covers the whole block.  Block boundaries
+        #    depend only on (prompt_len, effective_chunk) — never on this
+        #    step's leftover — so a preempted or restored request replays
+        #    the exact same block sequence (and jit cache entries).
         for i in self.sched.prefilling_ids():
-            if budget <= 0:
-                break
             s = self.sched.slots[i]
-            chunk = min(budget, self.prefill_chunk,
-                        s.req.prompt_len - s.prefill_progress)
-            s.prefill_progress += chunk
-            budget -= chunk
-            st.prefill_tokens += chunk
-            info["prefill_tokens"] += chunk
-            if s.prefill_progress >= s.req.prompt_len:
-                self._commit_prefill(i, s, info)
+            blk = min(self.effective_chunk,
+                      s.req.prompt_len - s.prefill_progress)
+            if blk > budget:
+                continue
+            self._prefill_block(i, s, blk, info)
+            budget -= blk
 
         util = self.pool.utilization()
         st.page_util_sum += util
@@ -526,26 +534,37 @@ class Engine:
         self.stats.failed += 1
         info["quarantined"] += 1
 
-    def _commit_prefill(self, i, s, info):
-        """The bit-exact full-prompt prefill call + page scatter."""
-        prompt = jnp.asarray(s.req.prompt[None, :], jnp.int32)
-        logits, pcaches = self._prefill(self.params, self.cfg, prompt,
-                                        last_logits_only=True)
-        pages = jnp.asarray(self.pool.pages_of(i), jnp.int32)
-        self.caches = _COMMIT(self.cfg, self.caches, pcaches, i, pages,
-                              self.page_size)
+    def _prefill_block(self, i, s, blk, info):
+        """One incremental forward over the slot's next ``blk`` prompt
+        tokens: the block's K/V lands in the slot's pages inside the
+        call (quantized when ``kv_bits > 0``) and per-layer recurrent /
+        window carries ride in the slot's cache rows.  On the final
+        block the request's first token is sampled from the block's
+        last-position logits — the same row the one-shot oracle's
+        blockwise prefill produces, so streams stay bit-exact."""
+        start = s.prefill_progress
+        tok = jnp.asarray(s.req.prompt[None, start:start + blk], jnp.int32)
+        logits, self.caches = self._chunk(
+            self.params, self.cfg, self.caches, self._page_table(), tok,
+            jnp.asarray(i, jnp.int32), jnp.asarray(start, jnp.int32))
+        s.prefill_progress += blk
+        self.stats.prefill_calls += 1
+        self.stats.prefill_tokens += blk
+        info["prefill_tokens"] += blk
+        if s.prefill_progress < s.req.prompt_len:
+            return
         key = (np.asarray(sampling.slot_key(s.req.seed, 0))
                if s.req.temperature > 0 else self._zero_key)
-        tok, bad = self._sample(
+        tok0, bad = self._sample(
             logits[:, -1], jnp.asarray([s.req.temperature], jnp.float32),
             jnp.asarray([s.req.top_k], jnp.int32),
             jnp.asarray(key[None, :]))
-        self.stats.prefill_calls += 1
+        self.stats.prefill_samples += 1
         s.prefilled = True
         if bool(np.asarray(bad)[0]):
             self._quarantine(i, info)
             return
-        s.out.append(int(np.asarray(tok)[0]))
+        s.out.append(int(np.asarray(tok0)[0]))
         if s.finished():
             self._finish(i, info)
 

@@ -97,9 +97,13 @@ class PagePool:
 
     @property
     def used_pages(self) -> int:
-        return self.n_pages - len(self._free)
+        """Pages owned by live slots.  Seized pages are *withheld*, not
+        used — they report via :attr:`seized`, so a pressure spike never
+        inflates utilization into looking like real KV residency."""
+        return self.n_pages - len(self._free) - len(self._seized)
 
     def utilization(self) -> float:
+        """Fraction of the pool owned by live slots (excludes seized)."""
         return self.used_pages / max(self.n_pages, 1)
 
     def pages_of(self, slot: int):

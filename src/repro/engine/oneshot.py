@@ -21,10 +21,11 @@ Array = jax.Array
 
 # module-level jits: every greedy_generate call (and bench iteration)
 # shares one trace/compile cache per (config, shape) instead of
-# recompiling per invocation.  jit_prefill is also the engine's prefill
-# entry point — one cache for oracle and engine.
+# recompiling per invocation.  ``block`` picks the blockwise-prefill
+# partition — engine differential tests pass the engine's effective
+# prefill chunk so oracle and engine run the same block sequence.
 jit_prefill = jax.jit(prefill, static_argnums=1,
-                      static_argnames=("last_logits_only",))
+                      static_argnames=("last_logits_only", "block"))
 _STEP = jax.jit(decode_step, static_argnums=1)
 
 
@@ -42,18 +43,20 @@ def grow_caches(caches, prompt_len: int, gen_len: int):
 
 
 def greedy_generate(params, cfg: ModelConfig, prompts: Array, gen_len: int,
-                    collect_logits: bool = False
+                    collect_logits: bool = False,
+                    block: Optional[int] = None
                     ) -> Tuple[Array, Optional[Array]]:
     """Lockstep greedy generation for a same-length prompt batch.
 
     prompts [B, S] int32 → (tokens [B, gen_len] int32, and — when
     ``collect_logits`` — the per-step last-position logits
     [B, gen_len, V] f32).  Token 0 comes from the prefill logits; each
-    decode step feeds the previous token at position S + t.
+    decode step feeds the previous token at position S + t.  ``block``:
+    blockwise-prefill partition (see ``transformer.prefill``).
     """
     b, prompt_len = prompts.shape
     logits0, caches = jit_prefill(params, cfg, prompts,
-                                  last_logits_only=True)
+                                  last_logits_only=True, block=block)
     caches = grow_caches(caches, prompt_len, gen_len)
     tok = jnp.argmax(logits0[:, -1], -1)[:, None].astype(jnp.int32)
     toks = [tok]

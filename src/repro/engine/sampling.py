@@ -24,8 +24,14 @@ def _sample_one(logits: Array, temp: Array, top_k: Array, key: Array):
     v = logits.shape[-1]
     t = jnp.maximum(temp, 1e-6)
     k = jnp.where(top_k <= 0, v, jnp.clip(top_k, 1, v))
-    cutoff = jnp.take(jnp.sort(logits)[::-1], k - 1)
-    masked = jnp.where(logits >= cutoff, logits, -jnp.inf)
+    # rank by (logit desc, vocab index asc) — argsort is stable, so ties
+    # at the cutoff break toward the lower token id and exactly k
+    # candidates survive; a `logits >= cutoff` mask would keep every
+    # token tied with the k-th and silently widen the nucleus
+    order = jnp.argsort(-logits)
+    ranks = jnp.zeros((v,), jnp.int32).at[order].set(
+        jnp.arange(v, dtype=jnp.int32))
+    masked = jnp.where(ranks < k, logits, -jnp.inf)
     return jax.random.categorical(key, masked / t).astype(jnp.int32)
 
 

@@ -77,7 +77,7 @@ class SlotState:
     def __init__(self, req: Request, admit_seq: int):
         self.req = req
         self.admit_seq = admit_seq
-        self.prefill_progress = 0      # prompt tokens scheduled so far
+        self.prefill_progress = 0      # prompt tokens computed so far
         self.prefilled = False
         self.out: List[int] = []       # generated tokens (first from prefill)
 

@@ -12,6 +12,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.blockwise_prefill import (
+    blockwise_prefill_pallas, blockwise_prefill_quant_pallas)
 from repro.kernels.codebook_matmul import codebook_matmul_pallas
 from repro.kernels.codebook_matmul_packed import codebook_matmul_packed_pallas
 from repro.kernels.codebook_matmul_packed_t import (
@@ -209,6 +211,55 @@ def mla_paged_attention_quant(q_eff, q_rope, c_words, r_words, c_cb, r_cb,
         q_eff, q_rope, c_words, r_words, c_cb, r_cb, page_table, pos, alive,
         bits, kv_lora, rope_dim, scale, token_tile,
         dequant, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "softcap", "scale",
+                                    "token_tile", "interpret"))
+def _blockwise_prefill_jit(q, k, v, q_pos, k_pos, window, softcap, scale,
+                           token_tile, interpret):
+    return blockwise_prefill_pallas(q, k, v, q_pos, k_pos, window=window,
+                                    softcap=softcap, scale=scale,
+                                    token_tile=token_tile,
+                                    interpret=interpret)
+
+
+def blockwise_prefill(q, k, v, q_pos, k_pos, *, window=None, softcap=None,
+                      scale, token_tile,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """Chunked-prompt prefill attention: C new queries vs. an S-row K/V
+    view, online-softmax per K/V tile (blockwise_prefill.py)."""
+    return _blockwise_prefill_jit(q, k, v, q_pos, k_pos, window, softcap,
+                                  scale, token_tile,
+                                  _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("page_size", "bits", "head_dim",
+                                    "window", "softcap", "scale",
+                                    "token_tile", "dequant", "interpret"))
+def _blockwise_prefill_quant_jit(q, k_words, v_words, k_cb, v_cb, q_pos,
+                                 k_pos, page_size, bits, head_dim, window,
+                                 softcap, scale, token_tile, dequant,
+                                 interpret):
+    return blockwise_prefill_quant_pallas(
+        q, k_words, v_words, k_cb, v_cb, q_pos, k_pos, page_size=page_size,
+        bits=bits, head_dim=head_dim, window=window, softcap=softcap,
+        scale=scale, token_tile=token_tile, dequant=dequant,
+        interpret=interpret)
+
+
+def blockwise_prefill_quant(q, k_words, v_words, k_cb, v_cb, q_pos, k_pos,
+                            *, page_size, bits, head_dim, window=None,
+                            softcap=None, scale, token_tile,
+                            dequant: str = "lut",
+                            interpret: Optional[bool] = None) -> jax.Array:
+    """Chunked-prompt prefill over codebook-quantized KV pages: kv_bits/8
+    B per cached scalar of HBM traffic (blockwise_prefill.py)."""
+    return _blockwise_prefill_quant_jit(
+        q, k_words, v_words, k_cb, v_cb, q_pos, k_pos, page_size, bits,
+        head_dim, window, softcap, scale, token_tile, dequant,
+        _auto_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

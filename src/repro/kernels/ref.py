@@ -207,3 +207,108 @@ def mla_paged_attention_quant_ref(q_eff, q_rope, c_words, r_words, c_cb,
     cap = gkv.shape[1]
     valid = (jnp.arange(cap)[None, :] <= pos[:, None]) & alive[:, None]
     return _paged_softmax_mla(q_eff, q_rope, gkv, grope, valid, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise prefill family (chunked-prompt path, PR 9).
+#
+# One prompt chunk of C query tokens attends over a stored K/V view of S
+# rows (paged-pool gather on the engine side, the growing prefill buffer
+# on the one-shot oracle side) with an online-softmax recurrence over
+# ``token_tile``-row K/V tiles — the flash-style accumulation the Pallas
+# kernel (``kernels.blockwise_prefill``) implements tile-for-tile, so the
+# two agree and per-tile VMEM is flat in S.
+#
+# Positions are 1-D (shared across the batch): q_pos [C], k_pos [S].  A
+# view row is visible to query q iff ``k_pos <= q_pos`` (and inside the
+# sliding window when set) — invalid rows (future positions, another
+# slot's ring leftovers, tile padding carrying the POS_SENTINEL) carry
+# finite garbage values that are masked to exact +0 probability, so a
+# tile of entirely-invalid rows is a bitwise no-op in the recurrence.
+# That property is what makes engine-vs-oracle streams bit-equal: both
+# sides see identical tiles over the *valid* prefix and arbitrarily many
+# masked tails.
+
+POS_SENTINEL = 1 << 30          # k_pos value that is never visible
+
+
+def blockwise_prefill_ref(q, k, v, q_pos, k_pos, *, window=None,
+                          softcap=None, scale, token_tile):
+    """q [B,C,H,hd]; k [B,S,KV,hd]; v [B,S,KV,vd]; q_pos [C]; k_pos [S]
+    int32, with S a multiple of ``token_tile`` (the dispatch route pads
+    with sentinel-position rows).  Returns [B,C,H,vd] f32."""
+    b, c, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    assert s % token_tile == 0, (s, token_tile)
+    nt = s // token_tile
+    rep = h // kv
+    qg = q.astype(jnp.float32).reshape(b, c, kv, rep, hd)
+    kt = k.reshape(b, nt, token_tile, kv, hd).transpose(1, 0, 2, 3, 4)
+    vt = v.reshape(b, nt, token_tile, kv, vd).transpose(1, 0, 2, 3, 4)
+    pt = k_pos.reshape(nt, token_tile)
+
+    def tile_step(carry, xs):
+        m, l, acc = carry
+        ki, vi, kpos = xs
+        logits = jnp.einsum("bqkrd,bskd->bkrqs", qg,
+                            ki.astype(jnp.float32),
+                            preferred_element_type=jnp.float32) * scale
+        logits = _softcap(logits, softcap)
+        ok = kpos[None, :] <= q_pos[:, None]
+        if window is not None:
+            ok &= (q_pos[:, None] - kpos[None, :]) < window
+        ok = ok[None, None, None, :, :]              # [1,1,1,C,T]
+        logits = jnp.where(ok, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.where(ok, jnp.exp(logits - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkrqs,bskd->bkrqd", p, vi.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, rep, c), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, rep, c), jnp.float32)
+    a0 = jnp.zeros((b, kv, rep, c, vd), jnp.float32)
+    (_, l, acc), _ = jax.lax.scan(tile_step, (m0, l0, a0), (kt, vt, pt))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, c, h, vd)
+
+
+def dequant_view_ref(words, cbs, d: int, bits: int, page_size: int):
+    """Dequantize a *pre-gathered* quantized-page view.
+
+    words [B, S, ..., Wd] uint32 (S = n_pages·page_size, rows in logical
+    order); cbs [B, n_pages, Gcb, K] per-page codebooks.  Same unpack +
+    per-page broadcast + take as :func:`dequant_pages_ref` (which gathers
+    from the physical pool itself), so values are bit-identical to the
+    decode path's view.
+    """
+    from repro.core.compression import unpack_rows
+
+    b, s = words.shape[:2]
+    npg = cbs.shape[1]
+    idx = unpack_rows(words, d, 1 << bits)         # [B, S, ..., d]
+    idx = idx.reshape((b, npg, page_size) + idx.shape[2:])
+    cb = cbs.reshape(cbs.shape[:2] + (1,) * (idx.ndim - cbs.ndim)
+                     + cbs.shape[2:])
+    cb_b = jnp.broadcast_to(cb, idx.shape[:-1] + cb.shape[-1:])
+    vals = jnp.take_along_axis(cb_b, idx, axis=-1)
+    return vals.reshape((b, s) + vals.shape[3:])
+
+
+def blockwise_prefill_quant_ref(q, k_words, v_words, k_cb, v_cb, q_pos,
+                                k_pos, *, page_size, bits, head_dim,
+                                window=None, softcap=None, scale,
+                                token_tile):
+    """Blockwise prefill over a quantized-page K/V view: dequantize the
+    gathered words through their per-page codebooks, then the identical
+    dense recurrence (the Pallas kernel dequantizes tile-by-tile in VMEM
+    instead — a pure gather, so values match)."""
+    gk = dequant_view_ref(k_words, k_cb, head_dim, bits, page_size)
+    gv = dequant_view_ref(v_words, v_cb, head_dim, bits, page_size)
+    return blockwise_prefill_ref(q, gk, gv, q_pos, k_pos, window=window,
+                                 softcap=softcap, scale=scale,
+                                 token_tile=token_tile)

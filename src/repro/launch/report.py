@@ -171,8 +171,9 @@ def audit_table(report: dict) -> str:
                      f"{ev['admitted']} admitted, {ev['finished']} "
                      f"finished, {ev['preemptions']} preempted: "
                      f"0 new jit entries "
-                     f"(decode={ct['decode']}, prefill={ct['prefill']}, "
-                     f"sample={ct['sample']}, commit={ct['commit']})\n")
+                     + "("
+                     + ", ".join(f"{k}={v}" for k, v in sorted(ct.items()))
+                     + ")\n")
     vm = report.get("checks", {}).get("vmem")
     if vm:
         lines.append(f"### VMEM / block lint — {vm['configs_checked']} "

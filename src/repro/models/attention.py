@@ -648,6 +648,304 @@ def mla_decode_paged_quant(p, x_t, cache: QuantPagedMLACache, page_table,
             QuantPagedMLACache(c_words=cw, r_words=rw, c_cb=ccb, r_cb=rcb))
 
 
+# ---------------------------------------------------------------------------
+# Blockwise prefill (chunked-prompt path, PR 9)
+#
+# Each engine prefill step runs ONE block of ≤ prefill_chunk new prompt
+# tokens through these functions: project + rope the block, write its
+# K/V straight into the slot's pages (quantizing token-by-token when
+# kv_bits > 0 — the same freeze-on-first-write protocol as decode, so
+# pages are a pure function of the written values, independent of the
+# block partition), then attend the block's queries over the slot's
+# *stored* K/V view via ``dispatch.blockwise_prefill_attention`` — the
+# write-then-attend order makes what is attended exactly what the cache
+# holds.  The one-shot oracle runs the same per-block functions over
+# growing buffers; because view rows carry their positions and invisible
+# rows mask to exact zero probability, the engine's fixed-capacity page
+# view and the oracle's growing view are bit-identical per block.
+# ---------------------------------------------------------------------------
+
+
+def _write_block_slot(pool: Array, page_table: Array, start, alive: Array,
+                      new: Array, page_size: int) -> Array:
+    """Blockwise twin of ``_write_slot``: scatter ``c`` consecutive
+    entries per slot starting at logical position ``start``.
+
+    pool [P+1, page, ...]; page_table [B, npg]; start scalar or [B];
+    new [B, c, ...].  Dead slots write the trash page."""
+    b, c = new.shape[0], new.shape[1]
+    npg = page_table.shape[1]
+    start = jnp.broadcast_to(jnp.asarray(start), (b,))
+    t = start[:, None] + jnp.arange(c)[None, :]            # [B, c]
+    pg = jnp.clip(t // page_size, 0, npg - 1)
+    phys = page_table[jnp.arange(b)[:, None], pg]
+    phys = jnp.where(alive[:, None], phys, 0)
+    return pool.at[phys, t % page_size].set(new.astype(pool.dtype),
+                                            mode="drop")
+
+
+def _write_block_slot_quant(words: Array, cbs: Array, page_table: Array,
+                            start, alive: Array, new: Array, page_size: int,
+                            bits: int, cb_mode: str):
+    """Blockwise twin of ``_write_slot_quant``: a per-token ``lax.scan``
+    over the block so the freeze-on-first-write codebook protocol is the
+    decode path's, token for token — a page's codebook is fit by whoever
+    writes its offset 0, whether that token arrives in this block, a
+    previous one, or (after restore) a replayed one."""
+    b, c = new.shape[0], new.shape[1]
+    start = jnp.broadcast_to(jnp.asarray(start), (b,))
+
+    def body(carry, xs):
+        w, cb = carry
+        tok, off = xs
+        w, cb = _write_slot_quant(w, cb, page_table, start + off, alive,
+                                  tok, page_size, bits, cb_mode)
+        return (w, cb), None
+
+    toks = jnp.moveaxis(new, 1, 0)                         # [c, B, ...]
+    (w, cb), _ = jax.lax.scan(body, (words, cbs),
+                              (toks, jnp.arange(c)))
+    return w, cb
+
+
+def gqa_prefill_block_paged(p, x, cache: PagedKVCache, page_table, start,
+                            alive, *, n_heads, n_kv, head_dim, page_size,
+                            attn_softcap=None, rope_theta=10000.0,
+                            query_scale=None):
+    """One prompt block of a paged (global-attention) GQA layer.
+
+    x [B,c,D]; start: the block's first logical position (traced OK).
+    Writes the block's K/V into the slot's pages, then attends the block
+    queries over the gathered page view — rows beyond ``start + c`` are
+    future/garbage and mask out causally (row index == position)."""
+    b, c, _ = x.shape
+    q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
+    t = jnp.asarray(start) + jnp.arange(c)                 # [c]
+    q = apply_rope(q, t[None, :], rope_theta)
+    k = apply_rope(k, t[None, :], rope_theta)
+
+    ck = _write_block_slot(cache.k, page_table, start, alive, k, page_size)
+    cv = _write_block_slot(cache.v, page_table, start, alive, v, page_size)
+    view_k = _gather_slots(ck, page_table, alive)          # [B,cap,KV,hd]
+    view_v = _gather_slots(cv, page_table, alive)
+    scale = query_scale if query_scale is not None else head_dim ** -0.5
+    o = dispatch.blockwise_prefill_attention(
+        q, view_k, view_v, t, jnp.arange(view_k.shape[1]),
+        softcap=attn_softcap, scale=scale)
+    return (qmatmul(p, "wo", o.reshape(b, c, n_heads * head_dim)),
+            PagedKVCache(k=ck, v=cv))
+
+
+def gqa_prefill_block_paged_quant(p, x, cache: QuantPagedKVCache,
+                                  page_table, start, alive, *, n_heads,
+                                  n_kv, head_dim, page_size, kv_bits,
+                                  kv_cb_mode="page", attn_softcap=None,
+                                  rope_theta=10000.0, query_scale=None):
+    """``gqa_prefill_block_paged`` over codebook-quantized KV pages: the
+    block's tokens quantize one by one at write time, then the block
+    attends over the stored packed words — what is read is exactly what
+    the cache holds, kv_bits/8 B per cached scalar."""
+    b, c, _ = x.shape
+    q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
+    t = jnp.asarray(start) + jnp.arange(c)
+    q = apply_rope(q, t[None, :], rope_theta)
+    k = apply_rope(k, t[None, :], rope_theta)
+
+    kw, kcb = _write_block_slot_quant(cache.k_words, cache.k_cb, page_table,
+                                      start, alive, k, page_size, kv_bits,
+                                      kv_cb_mode)
+    vw, vcb = _write_block_slot_quant(cache.v_words, cache.v_cb, page_table,
+                                      start, alive, v, page_size, kv_bits,
+                                      kv_cb_mode)
+    masked_tbl = jnp.where(alive[:, None], page_table, 0)
+    kw_view = dispatch.page_gather(kw, page_table, alive)  # [B,cap,KV,Wd]
+    vw_view = dispatch.page_gather(vw, page_table, alive)
+    kcb_view = kcb[masked_tbl]                             # [B,npg,Gcb,K]
+    vcb_view = vcb[masked_tbl]
+    scale = query_scale if query_scale is not None else head_dim ** -0.5
+    o = dispatch.blockwise_prefill_attention_quant(
+        q, kw_view, vw_view, kcb_view, vcb_view, t,
+        jnp.arange(kw_view.shape[1]), page_size=page_size, bits=kv_bits,
+        head_dim=head_dim, softcap=attn_softcap, scale=scale)
+    return (qmatmul(p, "wo", o.reshape(b, c, n_heads * head_dim)),
+            QuantPagedKVCache(k_words=kw, v_words=vw, k_cb=kcb, v_cb=vcb))
+
+
+def _ring_positions(start, cap: int) -> Array:
+    """Position held by each ring slot after ``start`` tokens have been
+    written: slot j holds p = (start-1) - ((start-1 - j) mod cap), or the
+    sentinel when that is negative (slot not yet written)."""
+    j = jnp.arange(cap)
+    pm1 = jnp.asarray(start) - 1
+    pos = pm1 - jnp.mod(pm1 - j, cap)
+    return jnp.where(pos >= 0, pos, dispatch.ref.POS_SENTINEL)
+
+
+def gqa_prefill_block_ring(p, x, cache: KVCache, start, *, n_heads, n_kv,
+                           head_dim, window, attn_softcap=None,
+                           rope_theta=10000.0, query_scale=None):
+    """One prompt block of a sliding-window (ring-buffer) GQA layer.
+
+    The ring (capacity == window) plus the block's fresh K/V form the
+    attended view; ring rows carry their true positions (sentinel when
+    unwritten — stale rows older than the window mask out by the window
+    predicate).  After attending, the last ``min(c, cap)`` tokens land
+    in their ring slots.  Used by both the engine (B=1 slot rows) and
+    the oracle (batched) — batch-row-decoupled."""
+    b, c, _ = x.shape
+    cap = cache.k.shape[1]
+    q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
+    t = jnp.asarray(start) + jnp.arange(c)
+    q = apply_rope(q, t[None, :], rope_theta)
+    k = apply_rope(k, t[None, :], rope_theta)
+
+    view_k = jnp.concatenate([cache.k, k.astype(cache.k.dtype)], axis=1)
+    view_v = jnp.concatenate([cache.v, v.astype(cache.v.dtype)], axis=1)
+    k_pos = jnp.concatenate([_ring_positions(start, cap), t])
+    scale = query_scale if query_scale is not None else head_dim ** -0.5
+    o = dispatch.blockwise_prefill_attention(
+        q, view_k, view_v, t, k_pos, window=window, softcap=attn_softcap,
+        scale=scale)
+
+    j = jnp.arange(cap)
+    end = jnp.asarray(start) + c - 1
+    pos_j = end - jnp.mod(end - j, cap)                    # position slot j
+    take = pos_j >= jnp.asarray(start)                     # written this blk
+    idx = jnp.clip(pos_j - jnp.asarray(start), 0, c - 1)
+    newk = jnp.where(take[None, :, None, None],
+                     k.astype(cache.k.dtype)[:, idx], cache.k)
+    newv = jnp.where(take[None, :, None, None],
+                     v.astype(cache.v.dtype)[:, idx], cache.v)
+    return (qmatmul(p, "wo", o.reshape(b, c, n_heads * head_dim)),
+            KVCache(k=newk, v=newv))
+
+
+def gqa_prefill_block(p, x, buf_k, buf_v, start: int, *, n_heads, n_kv,
+                      head_dim, window=None, attn_softcap=None,
+                      rope_theta=10000.0, query_scale=None):
+    """Oracle-side block step of a global GQA layer: append the block's
+    K/V to the growing buffers ([B, start, KV, hd] → [B, start+c, ...])
+    and attend over the result.  Same per-row math as the engine's page
+    view; extra engine rows are all masked, which is a bitwise no-op."""
+    b, c, _ = x.shape
+    q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
+    t = start + jnp.arange(c)
+    q = apply_rope(q, t[None, :], rope_theta)
+    k = apply_rope(k, t[None, :], rope_theta)
+    bk = jnp.concatenate([buf_k, k.astype(buf_k.dtype)], axis=1)
+    bv = jnp.concatenate([buf_v, v.astype(buf_v.dtype)], axis=1)
+    scale = query_scale if query_scale is not None else head_dim ** -0.5
+    o = dispatch.blockwise_prefill_attention(
+        q, bk, bv, t, jnp.arange(bk.shape[1]), window=window,
+        softcap=attn_softcap, scale=scale)
+    return qmatmul(p, "wo", o.reshape(b, c, n_heads * head_dim)), bk, bv
+
+
+def mla_prefill_block_paged(p, x, cache: PagedMLACache, page_table, start,
+                            alive, *, n_heads, kv_lora, rope_dim, nope_dim,
+                            v_dim, page_size, rope_theta=10000.0):
+    """One prompt block of an MLA layer over the paged latent cache.
+
+    Prefill stays in the *expanded* space: the block's latent rows are
+    written to the slot's pages, the page view is re-expanded through
+    W_UK/W_UV (row-wise matmuls — identical per row regardless of view
+    length), and the block runs the dense blockwise-attention op with
+    per-head keys of width nope+rope and values of width v_dim."""
+    from repro.models.layers import rms_norm
+    b, c, _ = x.shape
+    t = jnp.asarray(start) + jnp.arange(c)
+    q_nope, q_rope = _mla_q(p, x, n_heads, nope_dim, rope_dim, t[None, :],
+                            rope_theta)
+    dkv = qmatmul(p, "w_dkv", x)
+    c_kv = rms_norm(dkv[..., :kv_lora], p["kv_norm_scale"])
+    k_rope = apply_rope(dkv[..., None, kv_lora:], t[None, :],
+                        rope_theta)[:, :, 0]
+
+    ckv = _write_block_slot(cache.c_kv, page_table, start, alive, c_kv,
+                            page_size)
+    krope = _write_block_slot(cache.k_rope, page_table, start, alive,
+                              k_rope, page_size)
+    c_view = _gather_slots(ckv, page_table, alive)         # [B,cap,lora]
+    r_view = _gather_slots(krope, page_table, alive)       # [B,cap,rope]
+    o = _mla_block_attend(p, q_nope, q_rope, c_view, r_view, t,
+                          n_heads=n_heads, nope_dim=nope_dim,
+                          rope_dim=rope_dim, v_dim=v_dim)
+    return (qmatmul(p, "wo", o.reshape(b, c, n_heads * v_dim)),
+            PagedMLACache(c_kv=ckv, k_rope=krope))
+
+
+def _mla_block_attend(p, q_nope, q_rope, c_view, r_view, t, *, n_heads,
+                      nope_dim, rope_dim, v_dim):
+    """Expand a latent view and attend one block's queries over it."""
+    b, s = c_view.shape[0], c_view.shape[1]
+    k_nope = qmatmul(p, "w_uk", c_view).reshape(b, s, n_heads, nope_dim)
+    v = qmatmul(p, "w_uv", c_view).reshape(b, s, n_heads, v_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(r_view[:, :, None, :],
+                                  (b, s, n_heads, rope_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    return dispatch.blockwise_prefill_attention(
+        q, k, v, t, jnp.arange(s), scale=(nope_dim + rope_dim) ** -0.5)
+
+
+def mla_prefill_block_paged_quant(p, x, cache: QuantPagedMLACache,
+                                  page_table, start, alive, *, n_heads,
+                                  kv_lora, rope_dim, nope_dim, v_dim,
+                                  page_size, kv_bits, rope_theta=10000.0):
+    """MLA block prefill over codebook-quantized latent pages: per-token
+    quantizing writes (decode's freeze-on-first-write protocol), then the
+    latent view is dequantized (jnp — the expansion matmuls need dense
+    latents anyway, so there is no fused-quant MLA prefill kernel
+    variant) and re-expanded exactly as the dense path."""
+    from repro.kernels.ref import dequant_view_ref
+    from repro.models.layers import rms_norm
+    b, c, _ = x.shape
+    t = jnp.asarray(start) + jnp.arange(c)
+    q_nope, q_rope = _mla_q(p, x, n_heads, nope_dim, rope_dim, t[None, :],
+                            rope_theta)
+    dkv = qmatmul(p, "w_dkv", x)
+    c_kv = rms_norm(dkv[..., :kv_lora], p["kv_norm_scale"])
+    k_rope = apply_rope(dkv[..., None, kv_lora:], t[None, :],
+                        rope_theta)[:, :, 0]
+
+    cw, ccb = _write_block_slot_quant(cache.c_words, cache.c_cb, page_table,
+                                      start, alive, c_kv, page_size,
+                                      kv_bits, "page")
+    rw, rcb = _write_block_slot_quant(cache.r_words, cache.r_cb, page_table,
+                                      start, alive, k_rope, page_size,
+                                      kv_bits, "page")
+    masked_tbl = jnp.where(alive[:, None], page_table, 0)
+    c_view = dequant_view_ref(dispatch.page_gather(cw, page_table, alive),
+                              ccb[masked_tbl], kv_lora, kv_bits, page_size)
+    r_view = dequant_view_ref(dispatch.page_gather(rw, page_table, alive),
+                              rcb[masked_tbl], rope_dim, kv_bits, page_size)
+    o = _mla_block_attend(p, q_nope, q_rope, c_view.astype(ccb.dtype),
+                          r_view.astype(rcb.dtype), t, n_heads=n_heads,
+                          nope_dim=nope_dim, rope_dim=rope_dim, v_dim=v_dim)
+    return (qmatmul(p, "wo", o.reshape(b, c, n_heads * v_dim)),
+            QuantPagedMLACache(c_words=cw, r_words=rw, c_cb=ccb, r_cb=rcb))
+
+
+def mla_prefill_block(p, x, buf_c, buf_r, start: int, *, n_heads, kv_lora,
+                      rope_dim, nope_dim, v_dim, rope_theta=10000.0):
+    """Oracle-side MLA block step: append the block's latent rows to the
+    growing buffers and attend over the re-expansion of the result."""
+    from repro.models.layers import rms_norm
+    b, c, _ = x.shape
+    t = start + jnp.arange(c)
+    q_nope, q_rope = _mla_q(p, x, n_heads, nope_dim, rope_dim, t[None, :],
+                            rope_theta)
+    dkv = qmatmul(p, "w_dkv", x)
+    c_kv = rms_norm(dkv[..., :kv_lora], p["kv_norm_scale"])
+    k_rope = apply_rope(dkv[..., None, kv_lora:], t[None, :],
+                        rope_theta)[:, :, 0]
+    bc = jnp.concatenate([buf_c, c_kv.astype(buf_c.dtype)], axis=1)
+    br = jnp.concatenate([buf_r, k_rope.astype(buf_r.dtype)], axis=1)
+    o = _mla_block_attend(p, q_nope, q_rope, bc, br, t, n_heads=n_heads,
+                          nope_dim=nope_dim, rope_dim=rope_dim, v_dim=v_dim)
+    return qmatmul(p, "wo", o.reshape(b, c, n_heads * v_dim)), bc, br
+
+
 def gqa_decode_ring_slots(p, x_t, cache: KVCache, pos, alive, *, n_heads,
                           n_kv, head_dim, window, attn_softcap=None,
                           rope_theta=10000.0, query_scale=None):

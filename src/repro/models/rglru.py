@@ -91,6 +91,40 @@ def rglru_forward(p, x, *, width):
     return qmatmul(p, "w_out", y), final_state
 
 
+def rglru_block_forward(p, x, cache, *, width):
+    """One prompt *block* with carried state — the blockwise-prefill
+    step.  x: [B,c,D] + the cache left by the previous blocks →
+    (y [B,c,D], new :class:`RGLRUCache`).
+
+    The conv consumes the carried raw tail (zero tail at block 0 =
+    bitwise :func:`_causal_conv`'s zero pad); the carried recurrent
+    state folds into the first step's additive term — ``b₀ + a₀·h`` —
+    before the associative scan, exactly the decode recurrence for that
+    step.  Batch-row-decoupled throughout."""
+    gate = jax.nn.gelu(qmatmul(p, "w_gate_in", x), approximate=True)
+    rec_raw = qmatmul(p, "w_rec_in", x)
+    wlen = p["conv1d_w"].shape[0]
+    s = rec_raw.shape[1]
+    xp = jnp.concatenate([cache.conv.astype(rec_raw.dtype), rec_raw],
+                         axis=1)                         # [B,c+W-1,W]
+    rec = jnp.zeros_like(rec_raw)
+    for i in range(wlen):
+        rec = rec + xp[:, i:i + s, :] * p["conv1d_w"][i]
+    new_conv = xp[:, s:, :]
+    a, b = _rglru_coeffs(p, rec)
+    b = b.at[:, 0].add(a[:, 0] * cache.state)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b2 + a2 * b1
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (gate.astype(jnp.float32) * h).astype(x.dtype)
+    return qmatmul(p, "w_out", y), RGLRUCache(
+        state=h[:, -1], conv=new_conv.astype(cache.conv.dtype))
+
+
 class RGLRUCache(NamedTuple):
     state: Array     # [B, W] fp32
     conv: Array      # [B, conv_w-1, W]

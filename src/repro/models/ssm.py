@@ -61,11 +61,13 @@ def _causal_conv(x: Array, w: Array) -> Array:
     return out
 
 
-def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int):
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, h0=None):
     """Minimal SSD scan.
 
     x:[B,L,H,P], dt:[B,L,H] (softplus'd), a:[H] (negative),
     b_mat,c_mat:[B,L,N] (ngroups=1, shared across heads).
+    ``h0`` [B,H,P,N] fp32 seeds the cross-chunk recurrence (None →
+    zeros, the from-scratch case — bitwise the old behaviour).
     Returns y:[B,L,H,P] and final state [B,H,P,N].
     """
     bsz, l, h, p = x.shape
@@ -104,7 +106,8 @@ def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int):
         h_new = h_prev * dec[..., None, None] + st
         return h_new, h_prev
 
-    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
     h_final, h_before = jax.lax.scan(
         scan_body, h0,
         (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
@@ -163,6 +166,68 @@ def _conv_step(tail: Array, new: Array, w: Array) -> Tuple[Array, Array]:
     window = jnp.concatenate([tail, new[:, None, :]], axis=1)   # [B,W,C]
     out = jnp.einsum("bwc,wc->bc", window, w)
     return out, window[:, 1:, :]
+
+
+def _conv_tail_apply(tail: Array, x: Array, w: Array
+                     ) -> Tuple[Array, Array]:
+    """Depthwise causal conv over a block with a carried left context:
+    tail [B,W-1,C] (raw pre-conv values of the previous W-1 positions, or
+    zeros at position 0 — then bitwise = :func:`_causal_conv`'s zero
+    pad), x [B,S,C] → (out [B,S,C], new tail [B,W-1,C]).  Handles
+    S < W-1 streaming: the new tail spans the old tail + block."""
+    wlen = w.shape[0]
+    s = x.shape[1]
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)  # [B,S+W-1,C]
+    out = jnp.zeros_like(x)
+    for i in range(wlen):                  # W=4: tiny static unroll
+        out = out + xp[:, i:i + s, :] * w[i]
+    return out, xp[:, s:, :]
+
+
+def ssm_block_forward(p, x, cache: SSMCache, *, d_inner, head_p, state_n,
+                      chunk=256):
+    """One prompt *block* with carried state — the blockwise-prefill
+    step.  x: [B,c,D] (the block's c new tokens) + the cache left by the
+    previous blocks → (y [B,c,D], new cache).
+
+    Semantics: the depthwise convs consume the carried raw tails
+    (:func:`_conv_tail_apply` — at block 0 the zero tails make this
+    bitwise :func:`_causal_conv`), the SSD scan is seeded with the
+    carried [B,H,P,N] state, and the block is zero-padded up to an
+    ``ssm_chunk`` multiple *after* the convs/gates so pad rows carry
+    dt = 0 — zero state contribution, unit decay — and are sliced off.
+    Every op is batch-row-decoupled, so the engine's B=1 stream and the
+    oracle's batched stream agree bitwise given the same partition."""
+    bsz, c, _ = x.shape
+    h = d_inner // head_p
+    z = qmatmul(p, "in_z_w", x)
+    xin, conv_x = _conv_tail_apply(cache.conv_x, qmatmul(p, "in_x_w", x),
+                                   p["conv1d_x_w"])
+    b_mat, conv_b = _conv_tail_apply(cache.conv_b, qmatmul(p, "in_b_w", x),
+                                     p["conv1d_b_w"])
+    c_mat, conv_c = _conv_tail_apply(cache.conv_c, qmatmul(p, "in_c_w", x),
+                                     p["conv1d_c_w"])
+    xin = jax.nn.silu(xin)
+    b_mat = jax.nn.silu(b_mat)
+    c_mat = jax.nn.silu(c_mat)
+    dt = jax.nn.softplus((x @ p["dt_w"]).astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    pad = (-c) % chunk
+    if pad:
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    xh = xin.reshape(bsz, c + pad, h, head_p)
+    y, state = ssd_chunked(xh, dt, a, b_mat, c_mat, chunk, h0=cache.state)
+    y = (y[:, :c] + xh[:, :c] * p["d_skip"][None, None, :, None]
+         .astype(x.dtype)).astype(x.dtype)
+    y = y.reshape(bsz, c, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    return qmatmul(p, "out_proj_w", y), SSMCache(
+        state=state, conv_x=conv_x.astype(cache.conv_x.dtype),
+        conv_b=conv_b.astype(cache.conv_b.dtype),
+        conv_c=conv_c.astype(cache.conv_c.dtype))
 
 
 def ssm_decode(p, x_t, cache: SSMCache, *, d_inner, head_p, state_n):

@@ -22,7 +22,6 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import kvquant
 from repro.models import attention as attn
 from repro.models import layers as L
 from repro.models import moe as moe_mod
@@ -297,16 +296,19 @@ def _apply_stack_full(spec: StackSpec, stack_params, x, positions, cfg):
 # Embedding / head
 # ---------------------------------------------------------------------------
 
-def _embed(params, cfg, tokens, patch_embeds=None):
+def _embed(params, cfg, tokens, patch_embeds=None, positions=None):
     # Dense gather, or dequant-on-gather when the table serves quantized
     # (packed indices → shift+mask → LUT; dispatch.quantized_gather).
+    # ``positions``: global position ids [S] for a mid-prompt block
+    # (blockwise prefill); defaults to arange(S).
     x = Q.qembed(params, "embed_tok", tokens)
     if cfg.emb_scale is not None:
         x = x * jnp.asarray(cfg.emb_scale, x.dtype)
     if cfg.pos_embed == "sinusoidal":
-        s = tokens.shape[1]
-        pos = jnp.arange(s)
-        x = x + L.sinusoidal_positions(pos, cfg.d_model)[None].astype(x.dtype)
+        if positions is None:
+            positions = jnp.arange(tokens.shape[1])
+        x = x + L.sinusoidal_positions(
+            positions, cfg.d_model)[None].astype(x.dtype)
     if cfg.vlm_patches and patch_embeds is not None:
         x = jax.lax.dynamic_update_slice(
             x, patch_embeds.astype(x.dtype), (0, 0, 0))
@@ -519,103 +521,6 @@ def init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
     return tuple(caches)
 
 
-def _write_layer_prefill(kind: LayerKind, cfg: ModelConfig, paged, fentry,
-                         slot: int, pages: Array, page_size: int):
-    """Commit one layer's batch-1 prefill cache entry into the paged /
-    per-slot layout (leaves keep their leading [G] group dim)."""
-    if kind.mixer in ("gqa", "mla"):
-        def paginate(val):                           # val [G, 1, S, ...]
-            v = val[:, 0]
-            g, s = v.shape[0], v.shape[1]
-            n_full = pages.shape[0] * page_size
-            pad = [(0, 0)] * v.ndim
-            pad[1] = (0, n_full - s)
-            return jnp.pad(v, pad).reshape(
-                (g, pages.shape[0], page_size) + v.shape[2:])
-
-        def scatter(pool, val):
-            return pool.at[:, pages].set(paginate(val).astype(pool.dtype))
-
-        def scatter_quant(words_pool, cb_pool, val, cb_mode):
-            # Fit each committed page's codebook over the whole
-            # (zero-padded) page, assign, bit-pack, scatter words + cbs.
-            # This freezes the page cb; later in-page decode writes
-            # assign against it (see attention._write_slot_quant).
-            v = paginate(val)              # [G, npr, page, (KV,) feat]
-            if v.ndim == 5:
-                g, npr, pgs, kv, hd = v.shape
-                if cb_mode == "head":
-                    grp = v.transpose(0, 1, 3, 2, 4).reshape(
-                        g, npr, kv, pgs * hd)
-                else:
-                    grp = v.reshape(g, npr, 1, pgs * kv * hd)
-            else:
-                g, npr, pgs, d = v.shape
-                grp = v.reshape(g, npr, 1, pgs * d)
-            cb = kvquant.fit_codebooks(grp, cfg.kv_bits).astype(
-                cb_pool.dtype)
-            idx = kvquant.assign_codebook(grp, cb)
-            if v.ndim == 5 and cb_mode == "head":
-                idx = idx.reshape(g, npr, kv, pgs, hd).transpose(
-                    0, 1, 3, 2, 4)
-            else:
-                idx = idx.reshape(v.shape)
-            words = kvquant.pack_rows_jnp(idx, cfg.kv_bits)
-            return (words_pool.at[:, pages].set(words),
-                    cb_pool.at[:, pages].set(cb))
-
-        if isinstance(paged, attn.QuantPagedKVCache):
-            kw, kcb = scatter_quant(paged.k_words, paged.k_cb, fentry.k,
-                                    cfg.kv_cb_mode)
-            vw, vcb = scatter_quant(paged.v_words, paged.v_cb, fentry.v,
-                                    cfg.kv_cb_mode)
-            return attn.QuantPagedKVCache(k_words=kw, v_words=vw,
-                                          k_cb=kcb, v_cb=vcb)
-        if isinstance(paged, attn.QuantPagedMLACache):
-            cw, ccb = scatter_quant(paged.c_words, paged.c_cb,
-                                    fentry.c_kv, "page")
-            rw, rcb = scatter_quant(paged.r_words, paged.r_cb,
-                                    fentry.k_rope, "page")
-            return attn.QuantPagedMLACache(c_words=cw, r_words=rw,
-                                           c_cb=ccb, r_cb=rcb)
-        if kind.mixer == "gqa":
-            return attn.PagedKVCache(k=scatter(paged.k, fentry.k),
-                                     v=scatter(paged.v, fentry.v))
-        return attn.PagedMLACache(c_kv=scatter(paged.c_kv, fentry.c_kv),
-                                  k_rope=scatter(paged.k_rope,
-                                                 fentry.k_rope))
-    if kind.mixer == "gqa_local":
-        # the prefill entry is already in ring layout (positions mod cap)
-        cap = fentry.k.shape[2]
-        return attn.KVCache(
-            k=paged.k.at[:, slot, :cap].set(fentry.k[:, 0].astype(
-                paged.k.dtype)),
-            v=paged.v.at[:, slot, :cap].set(fentry.v[:, 0].astype(
-                paged.v.dtype)))
-    # ssm / rglru: constant-size per-slot state, one row per slot
-    return jax.tree_util.tree_map(
-        lambda dst, src: dst.at[:, slot].set(src[:, 0].astype(dst.dtype)),
-        paged, fentry)
-
-
-def write_prefill_to_slot(cfg: ModelConfig, paged_caches, prefill_caches,
-                          slot: int, pages, page_size: int):
-    """Scatter a batch-1 ``prefill`` cache into slot ``slot``'s pages /
-    state rows.  ``pages``: physical page ids covering positions
-    [0, prompt_len).  Returns the updated cache tree."""
-    pages = jnp.asarray(pages, jnp.int32)
-    out = []
-    for spec, pstack, fstack in zip(cfg.stacks, paged_caches,
-                                    prefill_caches):
-        ns = {}
-        for pi, kind in enumerate(spec.pattern):
-            ns[f"pos{pi}"] = _write_layer_prefill(
-                kind, cfg, pstack[f"pos{pi}"], fstack[f"pos{pi}"], slot,
-                pages, page_size)
-        out.append(ns)
-    return tuple(out)
-
-
 def _gate_slot_cache(new, old, alive: Array):
     """Keep masked slots' per-slot state untouched (page-starved slots
     must resume bit-exactly; leading cache dim is the slot dim)."""
@@ -733,89 +638,313 @@ def decode_step_slots(params, cfg: ModelConfig, caches, page_table,
     return _head(params, cfg, x), tuple(new_caches)
 
 
+# Default prompt-block length for the one-shot (oracle) blockwise
+# prefill.  The engine's block length is its `prefill_chunk`; engine
+# differential tests must run the oracle with the engine's effective
+# chunk so both sides see the same block partition (the flash recurrence
+# is partition-sensitive at the bit level).
+DEFAULT_PREFILL_BLOCK = 64
+
+
+def _init_layer_block_state(kind: LayerKind, cfg: ModelConfig, batch: int,
+                            dtype):
+    """Initial blockwise-prefill carry for one layer (unstacked).
+
+    gqa/mla carry *growing* K/V (latent) buffers starting at length 0;
+    gqa_local carries a ring of capacity ``cfg.window`` (the engine's
+    per-slot ring capacity — required so engine and oracle views tile
+    identically); ssm/rglru carry their decode caches (state + raw conv
+    tails)."""
+    if kind.mixer == "gqa":
+        e = jnp.zeros((batch, 0, cfg.n_kv, cfg.head_dim), dtype)
+        return attn.KVCache(k=e, v=e)
+    if kind.mixer == "gqa_local":
+        if not cfg.window:
+            raise ValueError("blockwise prefill needs a finite cfg.window "
+                             "for gqa_local layers (ring capacity)")
+        z = jnp.zeros((batch, cfg.window, cfg.n_kv, cfg.head_dim), dtype)
+        return attn.KVCache(k=z, v=z)
+    if kind.mixer == "mla":
+        m = cfg.mla
+        return attn.MLACache(
+            c_kv=jnp.zeros((batch, 0, m.kv_lora), dtype),
+            k_rope=jnp.zeros((batch, 0, m.rope_dim), dtype))
+    if kind.mixer == "ssm":
+        s = cfg.ssm
+        return ssm_mod.init_ssm_cache(batch, s.d_inner, s.head_p,
+                                      s.state_n, s.conv_w, dtype)
+    if kind.mixer == "rglru":
+        return rglru_mod.init_rglru_cache(batch, cfg.rglru.width,
+                                          cfg.rglru.conv_w, dtype)
+    raise ValueError(kind.mixer)
+
+
+def _apply_mixer_block(kind, p, x, state, start, cfg):
+    """One prompt block through a mixer, carrying its prefill state."""
+    if kind.mixer == "gqa":
+        out, bk, bv = attn.gqa_prefill_block(
+            p, x, state.k, state.v, start, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+            attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+            query_scale=cfg.query_scale)
+        return out, attn.KVCache(k=bk, v=bv)
+    if kind.mixer == "gqa_local":
+        return attn.gqa_prefill_block_ring(
+            p, x, state, start, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            head_dim=cfg.head_dim, window=cfg.window,
+            attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+            query_scale=cfg.query_scale)
+    if kind.mixer == "mla":
+        m = cfg.mla
+        out, bc, br = attn.mla_prefill_block(
+            p, x, state.c_kv, state.k_rope, start, n_heads=cfg.n_heads,
+            kv_lora=m.kv_lora, rope_dim=m.rope_dim, nope_dim=m.nope_dim,
+            v_dim=m.v_dim, rope_theta=cfg.rope_theta)
+        return out, attn.MLACache(c_kv=bc, k_rope=br)
+    if kind.mixer == "ssm":
+        s = cfg.ssm
+        return ssm_mod.ssm_block_forward(p, x, state, d_inner=s.d_inner,
+                                         head_p=s.head_p,
+                                         state_n=s.state_n, chunk=s.chunk)
+    if kind.mixer == "rglru":
+        return rglru_mod.rglru_block_forward(p, x, state,
+                                             width=cfg.rglru.width)
+    raise ValueError(kind.mixer)
+
+
+def _apply_layer_block(kind, p, x, state, start, cfg):
+    h = L.rms_norm(x, p["ln1_norm_scale"])
+    out, state = _apply_mixer_block(kind, p["mixer"], h, state, start, cfg)
+    if cfg.post_norms:
+        out = L.rms_norm(out, p["post1_norm_scale"])
+    x = x + out
+    if kind.mlp != "none":
+        h = L.rms_norm(x, p["ln2_norm_scale"])
+        if kind.mlp == "moe":
+            out = moe_mod.apply_moe(p["mlp"], h, top_k=cfg.moe.top_k,
+                                    act=cfg.mlp_act,
+                                    capacity_factor=cfg.moe.capacity_factor)
+        else:
+            out = L.apply_mlp(p["mlp"], h, cfg.mlp_act)
+        if cfg.post_norms:
+            out = L.rms_norm(out, p["post2_norm_scale"])
+        x = x + out
+    return x, state
+
+
+def _block_state_to_cache(kind: LayerKind, state, s: int,
+                          cfg: ModelConfig):
+    """Final blockwise-prefill carry → decode-cache layout (leaves keep
+    their leading [G] group dim).  Same contract the full-sequence
+    prefill used to emit — except ssm/rglru conv tails are now the
+    *real* trailing raw activations, not zeros, so decode resumes the
+    conv streams exactly."""
+    if kind.mixer == "gqa_local":
+        w = cfg.window
+        if s < w:
+            # ring never wrapped: natural order, capacity = S (grown by
+            # the decode loop); at S ≥ W the ring layout is already
+            # positions mod W
+            return attn.KVCache(k=state.k[:, :, :s], v=state.v[:, :, :s])
+        return state
+    return state
+
+
 def prefill(params, cfg: ModelConfig, tokens: Array,
             patch_embeds: Optional[Array] = None,
-            last_logits_only: bool = False):
-    """Forward over the prompt, emitting logits + caches for decode.
+            last_logits_only: bool = False,
+            block: Optional[int] = None):
+    """Blockwise forward over the prompt, emitting logits + decode caches.
+
+    The prompt runs in fixed blocks of ``block`` tokens (default
+    :data:`DEFAULT_PREFILL_BLOCK`, remainder last); every block attends
+    over the carried K/V written so far via the online-softmax blockwise
+    op (``dispatch.blockwise_prefill_attention``), and SSM / RG-LRU /
+    ring layers carry their recurrent state across blocks.  Peak
+    activation memory is O(block·S) in attention reads but O(block) in
+    scores/logits — never O(S²).
 
     ``last_logits_only=True`` (the serving configuration) heads only the
     final position — full-sequence f32 logits over a 150k-250k vocab are
-    a multi-GB/chip buffer that serving never needs (observed: 40-69 GB
-    peaks on the 32k-prefill dry-runs before this flag).
+    a multi-GB/chip buffer that serving never needs.
 
-    Note: emits *full-length* caches for gqa/mla layers (capacity = S);
+    ``patch_embeds`` (VLM) forces a single block: patch rows replace the
+    leading positions at embed time.
+
+    Emits *full-length* caches for gqa/mla layers (capacity = S);
     ring-buffer layers keep the last ``window`` entries.
     """
     b, s = tokens.shape
-    positions = jnp.arange(s)
-    x = _embed(params, cfg, tokens, patch_embeds)
-    caches = []
-    for spec, sp in zip(cfg.stacks, params["stacks"]):
-        def body(carry, group_params):
-            h = carry
-            gcache = {}
-            for pi, kind in enumerate(spec.pattern):
-                p = group_params[f"pos{pi}"]
-                hin = L.rms_norm(h, p["ln1_norm_scale"])
-                out, centry = _apply_mixer_full(kind, p["mixer"], hin,
-                                                positions, cfg)
-                if cfg.post_norms:
-                    out = L.rms_norm(out, p["post1_norm_scale"])
-                h = h + out
-                if kind.mlp != "none":
-                    hin = L.rms_norm(h, p["ln2_norm_scale"])
-                    if kind.mlp == "moe":
-                        out = moe_mod.apply_moe(
-                            p["mlp"], hin, top_k=cfg.moe.top_k,
-                            act=cfg.mlp_act,
-                            capacity_factor=cfg.moe.capacity_factor)
-                    else:
-                        out = L.apply_mlp(p["mlp"], hin, cfg.mlp_act)
-                    if cfg.post_norms:
-                        out = L.rms_norm(out, p["post2_norm_scale"])
-                    h = h + out
-                gcache[f"pos{pi}"] = _prefill_cache_entry(kind, centry, cfg)
-            return h, gcache
+    if patch_embeds is not None:
+        blk = s
+    else:
+        blk = max(1, min(block or DEFAULT_PREFILL_BLOCK, s))
+    starts = list(range(0, s, blk))
+    states = None
+    logits_parts = []
+    for start in starts:
+        end = min(start + blk, s)
+        tok_blk = jax.lax.slice_in_dim(tokens, start, end, axis=1)
+        x = _embed(params, cfg, tok_blk, patch_embeds,
+                   positions=jnp.arange(start, end))
+        if states is None:
+            states = [
+                {f"pos{pi}": jax.tree_util.tree_map(
+                    lambda l: jnp.broadcast_to(
+                        l[None], (spec.groups,) + l.shape),
+                    _init_layer_block_state(kind, cfg, b, x.dtype))
+                 for pi, kind in enumerate(spec.pattern)}
+                for spec in cfg.stacks]
+        new_states = []
+        for spec, sp, st in zip(cfg.stacks, params["stacks"], states):
+            def body(h, xs):
+                gp, gst = xs
+                ngst = {}
+                for pi, kind in enumerate(spec.pattern):
+                    h, c = _apply_layer_block(kind, gp[f"pos{pi}"], h,
+                                              gst[f"pos{pi}"], start, cfg)
+                    ngst[f"pos{pi}"] = c
+                return h, ngst
 
-        x, stack_cache = jax.lax.scan(body, x, sp)
-        caches.append(stack_cache)
-    if last_logits_only:
-        x = x[:, -1:, :]
-    return _head(params, cfg, x), tuple(caches)
+            x, nst = jax.lax.scan(body, x, (sp, st))
+            new_states.append(nst)
+        states = new_states
+        if not last_logits_only:
+            logits_parts.append(_head(params, cfg, x))
+        elif start == starts[-1]:
+            logits_parts.append(_head(params, cfg, x[:, -1:, :]))
+    logits = (logits_parts[0] if len(logits_parts) == 1
+              else jnp.concatenate(logits_parts, axis=1))
+    caches = tuple(
+        {f"pos{pi}": _block_state_to_cache(kind, st[f"pos{pi}"], s, cfg)
+         for pi, kind in enumerate(spec.pattern)}
+        for spec, st in zip(cfg.stacks, states))
+    return logits, caches
 
 
-def _prefill_cache_entry(kind: LayerKind, centry, cfg: ModelConfig):
-    """Convert a full-forward cache entry into decode-cache layout."""
+# --- engine-side blockwise prefill (one slot, one block) --------------------
+
+
+def _apply_mixer_prefill_slot(kind, p, x, cache, table_row, sl, start,
+                              alive, cfg):
+    """One prompt block of one *slot* against the engine's paged /
+    per-slot caches.  ``cache`` leaves are unstacked (the group scan
+    strips [G]); ``table_row`` [1, npg]; ``sl`` [1] traced slot id."""
     if kind.mixer == "gqa":
-        return attn.KVCache(k=centry["k"], v=centry["v"])
-    if kind.mixer == "gqa_local":
-        w = cfg.window
-        k, v = centry["k"], centry["v"]
-        s = k.shape[1]
-        if s > w:
-            # last `w` entries laid out at ring slots (pos mod w)
-            k, v = k[:, -w:], v[:, -w:]
-            start = s - w
-            roll = -(start % w)
-            k = jnp.roll(k, roll, axis=1)
-            v = jnp.roll(v, roll, axis=1)
-        return attn.KVCache(k=k, v=v)
+        if isinstance(cache, attn.QuantPagedKVCache):
+            page_size = cache.k_words.shape[1]
+            return attn.gqa_prefill_block_paged_quant(
+                p, x, cache, table_row, start, alive, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv, head_dim=cfg.head_dim, page_size=page_size,
+                kv_bits=cfg.kv_bits, kv_cb_mode=cfg.kv_cb_mode,
+                attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+                query_scale=cfg.query_scale)
+        page_size = cache.k.shape[1]
+        return attn.gqa_prefill_block_paged(
+            p, x, cache, table_row, start, alive, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv, head_dim=cfg.head_dim, page_size=page_size,
+            attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+            query_scale=cfg.query_scale)
     if kind.mixer == "mla":
-        return attn.MLACache(c_kv=centry["c_kv"], k_rope=centry["k_rope"])
-    if kind.mixer == "ssm":
+        m = cfg.mla
+        if isinstance(cache, attn.QuantPagedMLACache):
+            page_size = cache.c_words.shape[1]
+            return attn.mla_prefill_block_paged_quant(
+                p, x, cache, table_row, start, alive, n_heads=cfg.n_heads,
+                kv_lora=m.kv_lora, rope_dim=m.rope_dim,
+                nope_dim=m.nope_dim, v_dim=m.v_dim, page_size=page_size,
+                kv_bits=cfg.kv_bits, rope_theta=cfg.rope_theta)
+        page_size = cache.c_kv.shape[1]
+        return attn.mla_prefill_block_paged(
+            p, x, cache, table_row, start, alive, n_heads=cfg.n_heads,
+            kv_lora=m.kv_lora, rope_dim=m.rope_dim, nope_dim=m.nope_dim,
+            v_dim=m.v_dim, page_size=page_size, rope_theta=cfg.rope_theta)
+    # per-slot state rows (ring / ssm / rglru): pull the slot's row,
+    # run the same block function the oracle runs, scatter it back
+    row = jax.tree_util.tree_map(lambda l: jnp.take(l, sl, axis=0), cache)
+    if kind.mixer in ("ssm", "rglru"):
+        # block 0 of a *reused* slot must not consume the previous
+        # request's recurrent state: the fresh row is all-zero.  (The
+        # ring needs no reset — _ring_positions derives validity from
+        # ``start``, so stale rows mask out on their own.)
+        row = jax.tree_util.tree_map(
+            lambda l: jnp.where(start == 0, jnp.zeros_like(l), l), row)
+    if kind.mixer == "gqa_local":
+        out, c = attn.gqa_prefill_block_ring(
+            p, x, row, start, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            head_dim=cfg.head_dim, window=cfg.window,
+            attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+            query_scale=cfg.query_scale)
+    elif kind.mixer == "ssm":
         s = cfg.ssm
-        b = centry["state"].shape[0]
-        # conv tail not tracked in chunked prefill path: zeros (drop-in for
-        # shape cells; exact streaming handoff is in tests via decode replay)
-        return ssm_mod.SSMCache(
-            state=centry["state"],
-            conv_x=jnp.zeros((b, s.conv_w - 1, s.d_inner), jnp.float32),
-            conv_b=jnp.zeros((b, s.conv_w - 1, s.state_n), jnp.float32),
-            conv_c=jnp.zeros((b, s.conv_w - 1, s.state_n), jnp.float32))
-    if kind.mixer == "rglru":
-        r = cfg.rglru
-        return rglru_mod.RGLRUCache(
-            state=centry["state"],
-            conv=jnp.zeros((centry["state"].shape[0], r.conv_w - 1, r.width),
-                           jnp.float32))
-    raise ValueError(kind.mixer)
+        out, c = ssm_mod.ssm_block_forward(p, x, row, d_inner=s.d_inner,
+                                           head_p=s.head_p,
+                                           state_n=s.state_n, chunk=s.chunk)
+    elif kind.mixer == "rglru":
+        out, c = rglru_mod.rglru_block_forward(p, x, row,
+                                               width=cfg.rglru.width)
+    else:
+        raise ValueError(kind.mixer)
+    new = jax.tree_util.tree_map(
+        lambda dst, src: dst.at[sl[0]].set(src[0].astype(dst.dtype)),
+        cache, c)
+    return out, new
+
+
+def _apply_layer_prefill_slot(kind, p, x, cache, table_row, sl, start,
+                              alive, cfg):
+    h = L.rms_norm(x, p["ln1_norm_scale"])
+    out, cache = _apply_mixer_prefill_slot(kind, p["mixer"], h, cache,
+                                           table_row, sl, start, alive, cfg)
+    if cfg.post_norms:
+        out = L.rms_norm(out, p["post1_norm_scale"])
+    x = x + out
+    if kind.mlp != "none":
+        h = L.rms_norm(x, p["ln2_norm_scale"])
+        if kind.mlp == "moe":
+            out = moe_mod.apply_moe(p["mlp"], h, top_k=cfg.moe.top_k,
+                                    act=cfg.mlp_act,
+                                    capacity_factor=cfg.moe.capacity_factor)
+        else:
+            out = L.apply_mlp(p["mlp"], h, cfg.mlp_act)
+        if cfg.post_norms:
+            out = L.rms_norm(out, p["post2_norm_scale"])
+        x = x + out
+    return x, cache
+
+
+def prefill_chunk_slots(params, cfg: ModelConfig, caches, page_table,
+                        tokens_c: Array, slot, start):
+    """Engine blockwise prefill: ONE block of ``c`` prompt tokens for ONE
+    slot, against the shared paged caches.
+
+    tokens_c [1, c] int32 (positions [start, start+c)); ``slot`` and
+    ``start`` are traced int32 scalars — compiled shapes depend only on
+    ``c``, so chunk steps never recompile per slot or offset.  The
+    block's K/V (quantized when ``kv_bits > 0``) lands directly in the
+    slot's pages; recurrent state (ring / SSM / RG-LRU rows) advances in
+    place.  Returns (last-position logits [1, 1, V] f32, new caches) —
+    the logits are only meaningful on the prompt's final block, where
+    they seed the first sampled token.
+    """
+    c = tokens_c.shape[1]
+    sl = jnp.asarray(slot, jnp.int32).reshape(1)
+    start = jnp.asarray(start, jnp.int32)
+    alive = jnp.ones((1,), bool)
+    table_row = jnp.take(page_table, sl, axis=0)
+    x = _embed(params, cfg, tokens_c, positions=start + jnp.arange(c))
+    new_caches = []
+    for spec, sp, sc in zip(cfg.stacks, params["stacks"], caches):
+        def body(h, xs):
+            gp, gc = xs
+            ngc = {}
+            for pi, kind in enumerate(spec.pattern):
+                h, cc = _apply_layer_prefill_slot(
+                    kind, gp[f"pos{pi}"], h, gc[f"pos{pi}"], table_row,
+                    sl, start, alive, cfg)
+                ngc[f"pos{pi}"] = cc
+            return h, ngc
+
+        x, nc = jax.lax.scan(body, x, (sp, sc))
+        new_caches.append(nc)
+    return _head(params, cfg, x[:, -1:, :]), tuple(new_caches)

@@ -168,6 +168,26 @@ def test_committed_block_table_is_clean():
         assert res["rows"], fx
 
 
+def test_prefill_block_lint_poisoned_and_clean():
+    """The blockwise-prefill token-tile lint: an oversized tile must be
+    rejected (a lint that never fires proves nothing), and the committed
+    dispatch table must sweep clean at every supported kv width."""
+    from repro.analysis.vmem import (audit_prefill_block_space,
+                                     validate_prefill_block_config)
+    bad = validate_prefill_block_config("dense", 128, 4096)
+    assert not bad["ok"] and any("VMEM" in e for e in bad["errors"])
+    assert not validate_prefill_block_config("nope", 12, 8)["ok"]
+    assert not validate_prefill_block_config("quant", 12, 8, bits=3)["ok"]
+    # quant footprint grows with dequant mode (onehot carries ×K body)
+    lut = validate_prefill_block_config("quant", 12, 8, bits=4)
+    onehot = validate_prefill_block_config("quant", 12, 8, bits=4,
+                                           dequant="onehot")
+    assert lut["ok"] and lut["vmem_bytes"] < onehot["vmem_bytes"]
+    swept = audit_prefill_block_space()
+    assert swept["rows"] and swept["violations"] == []
+    assert {r["kind"] for r in swept["rows"]} == {"dense", "quant"}
+
+
 def test_vmem_estimate_monotone_in_blocks():
     small = estimate_vmem_bytes("packed_matmul", 8, 128, 512, 4, 16)
     big = estimate_vmem_bytes("packed_matmul", 128, 512, 2048, 4, 16)
@@ -266,7 +286,8 @@ def test_golden_fixture_audits_clean(fixture, skip):
     hbm = report["checks"]["hbm"]
     assert set(hbm) == {"forward", "prefill", "decode_step_slots",
                         "engine_decode_sample",
-                        "engine_decode_sample_kvq4"}
+                        "engine_decode_sample_kvq4",
+                        "engine_prefill_chunk"}
     for entry, res in hbm.items():
         assert res["rows"], entry
         for row in res["rows"]:
@@ -285,8 +306,10 @@ def test_golden_fixture_audits_clean(fixture, skip):
     for row in kvq["kv_rows"]:
         assert row["uses"] >= 1, row
         assert row["hbm_bytes"] < row["dense_bytes"], row
-    # the paged autotune table is swept by the vmem lint
+    # the paged + blockwise-prefill autotune tables are swept by the
+    # vmem lint
     assert report["checks"]["vmem"]["paged_configs_checked"] >= 1
+    assert report["checks"]["vmem"]["prefill_configs_checked"] >= 1
     if "recompile" not in skip:
         ev = report["checks"]["recompile"]["events"]
         assert ev["preemptions"] >= 1 and ev["finished"] >= 3
@@ -319,3 +342,22 @@ def test_bench_unknown_group_errors():
 def test_bench_mixed_valid_invalid_tokens_error():
     res = _run_bench("--only", "kernels,typo")
     assert res.returncode == 2 and "typo" in res.stderr
+
+
+def test_audit_table_renders_recompile_counts():
+    """The human audit table must render whatever jit-cache counters the
+    engine's ``trace_counts()`` reports — it used to hard-code the
+    pre-blockwise key set (``prefill``/``commit``) and KeyError'd on
+    real reports after the rename to ``prefill_chunk``."""
+    from repro.launch.report import audit_table
+
+    report = {
+        "artifact": "x", "config": "mixed", "passed": True,
+        "checks": {"recompile": {
+            "events": {"steps": 9, "admitted": 3, "finished": 3,
+                       "preemptions": 1},
+            "counts": {"decode": 1, "prefill_chunk": 2, "sample": 1},
+        }},
+    }
+    table = audit_table(report)
+    assert "prefill_chunk=2" in table and "decode=1" in table

@@ -145,6 +145,62 @@ def test_engine_throughput_rows(bench_json):
             assert "faults=" in derived and "restarts" in derived
 
 
+def test_engine_long_prompt_prefill_flat(bench_json):
+    """The blockwise-prefill scaling row: per-chunk latency and the
+    analytic per-chunk kernel VMEM must be ~flat in prompt length (the
+    pre-fix engine re-ran the whole prompt at commit — per-"chunk" cost
+    and peak activation footprint scaled linearly with S)."""
+    from repro.analysis.vmem import estimate_prefill_vmem_bytes
+
+    name = "engine_prefill_long_prompt"
+    assert name in bench_json, f"bench row {name} disappeared"
+    derived = bench_json[name]["derived"]
+    cells = re.findall(r"S=(\d+)->(\d+) \((\d+) chunks\)", derived)
+    assert len(cells) >= 2, derived
+    (s0, us0, c0), (s1, us1, c1) = cells[0], cells[-1]
+    assert int(s1) > int(s0) and int(c1) > int(c0)
+    # flat-in-S: a full-prompt recompute would scale per-chunk latency
+    # ~linearly (x4 at the non-FAST S ratio); allow generous CI noise
+    assert float(us1) / max(float(us0), 1.0) < 2.0, derived
+    m = re.search(r"vmem/chunk=(\d+) B \(dense tile=(\d+), flat in S\)",
+                  derived)
+    assert m, derived
+    assert int(m.group(1)) == estimate_prefill_vmem_bytes(
+        "dense", 12, int(m.group(2)))
+    assert "no step forwards more than 16 prompt tokens" in derived
+
+
+def test_engine_stats_generated_tokens_identity():
+    """``generated_tokens`` counts tokens actually *sampled* (decode
+    steps + the one token each completed prefill emits) and equals the
+    delivered output length in a clean run.  The pre-fix stats added
+    full ``prefill_tokens`` to the decode count, so throughput rows
+    over-reported generation by ~prompt_len per request."""
+    import jax
+    import numpy as np
+    from helpers import mixed_cfg
+    from repro.engine import Engine, Request
+    from repro.models.transformer import init_params
+
+    cfg = mixed_cfg(tie=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(3), (3, 20), 0, cfg.vocab))
+    reqs = [Request(rid=r, prompt=prompts[r], max_new_tokens=4 + r)
+            for r in range(3)]
+    eng = Engine(params, cfg, n_slots=2, page_size=8, max_seq=32,
+                 prefill_chunk=8, token_budget=10)
+    outs = eng.run(reqs)
+    st = eng.stats
+    delivered = sum(len(v) for v in outs.values())
+    assert st.prefill_samples == 3
+    assert st.prefill_tokens == 3 * 20          # computed prompt tokens
+    assert st.prefill_calls == 3 * 3            # ceil(20/8) blocks each
+    assert st.generated_tokens == st.decode_tokens + st.prefill_samples
+    assert st.generated_tokens == delivered, \
+        (st.generated_tokens, delivered)
+
+
 _KVQ_RE = re.compile(
     r"tok/s=([0-9.]+) dense=([0-9.]+) \(x([0-9.]+)\); "
     r"occupancy=([0-9.]+) page_util=([0-9.]+) peak=([0-9.]+); "

@@ -49,7 +49,7 @@ def _prompts(vocab: int, n: int, length: int):
         jax.random.PRNGKey(7 + length), (n, length), 0, vocab))
 
 
-def _oracle(params, cfg, reqs):
+def _oracle(params, cfg, reqs, block=None):
     out = {}
     by_len = {}
     for r in reqs:
@@ -59,7 +59,7 @@ def _oracle(params, cfg, reqs):
         gen = max(r.max_new_tokens for r in group)
         toks = np.asarray(greedy_generate(params, cfg,
                                           jax.numpy.asarray(prompts),
-                                          gen)[0])
+                                          gen, block=block)[0])
         for i, r in enumerate(group):
             out[r.rid] = truncate_at_eos(toks[i][:r.max_new_tokens],
                                          r.eos_id)
@@ -246,6 +246,80 @@ def test_snapshot_kill_restore_quantized_pages_bit_exact(tmp_path):
             err_msg=f"request {rid}: restored kvq stream != uninterrupted")
         assert eng2.results[rid].outcome is Outcome.FINISHED
     assert eng2.pool.used_pages == 0 and eng2.pool.seized == 0
+
+
+_LONG_GEO = dict(n_slots=2, page_size=8, max_seq=48, prefill_chunk=8,
+                 token_budget=10)
+
+
+def test_snapshot_kill_restore_mid_prefill_bit_exact(tmp_path):
+    """Kill-and-restore while a slot is partway through a *blockwise*
+    prefill: the snapshot must round-trip partially-written KV pages and
+    the per-layer block-carry rows (SSM state, RG-LRU state, window
+    ring), and the restored engine must replay the identical block
+    partition — streams bit-equal to an uninterrupted run."""
+    cfg, params = _mixed(16, "packed")
+    prompts = _prompts(cfg.vocab, 3, 40)       # 40 >> prefill_chunk 8
+    reqs = [Request(rid=r, prompt=prompts[r], max_new_tokens=6)
+            for r in range(3)]
+    want = Engine(params, cfg, **_LONG_GEO).run(list(reqs))
+
+    eng = Engine(params, cfg, **_LONG_GEO)
+    for r in reqs:
+        eng.submit(r)
+    mid = False
+    while not mid:
+        eng.step()
+        mid = any(s is not None and not s.prefilled
+                  and 0 < s.prefill_progress for s in eng.sched.slots)
+    save_snapshot(eng, str(tmp_path))
+
+    eng2 = Engine(params, cfg, **_LONG_GEO)
+    restore_into(eng2, str(tmp_path))
+    assert any(s is not None and not s.prefilled
+               and 0 < s.prefill_progress for s in eng2.sched.slots), \
+        "restore lost the mid-prefill slot state"
+    while eng2.sched.has_work():
+        eng2.step()
+    assert sorted(eng2.outputs) == sorted(want)
+    for rid in want:
+        np.testing.assert_array_equal(
+            eng2.outputs[rid], want[rid],
+            err_msg=f"request {rid}: mid-prefill restore diverged")
+    assert eng2.pool.used_pages == 0 and eng2.pool.seized == 0
+
+
+def test_prefill_kill_chaos_fires_mid_prefill(tmp_path):
+    """The ``prefill_kill`` fault kind waits until some slot is actually
+    mid-prefill, then forces the kill/restore round trip — the harness's
+    prefill-phase fault point.  Long prompts guarantee the window
+    exists; every FINISHED stream still equals the oracle at the
+    engine's block partition."""
+    cfg, params = _mixed(16, "packed")
+    prompts = _prompts(cfg.vocab, 4, 40)
+    reqs = [Request(rid=r, prompt=prompts[r], max_new_tokens=6 + r % 2)
+            for r in range(4)]
+    plan = FaultPlan(events=[
+        FaultEvent(step=1, kind="prefill_kill"),
+        FaultEvent(step=8, kind="prefill_kill"),
+    ])
+    sup = ServeSupervisorConfig(snapshot_dir=str(tmp_path),
+                                snapshot_every=4, max_restarts=4,
+                                max_steps=600)
+    outputs, results, report = supervised_serve(
+        lambda: Engine(params, cfg, **_LONG_GEO), reqs, sup,
+        injector=plan)
+    assert len(plan._fired) == len(plan.events)
+    assert report.kill_restores == 2
+    assert sorted(results) == [r.rid for r in reqs]
+    want = _oracle(params, cfg, reqs, block=8)
+    for rid, res in results.items():
+        if res.outcome is Outcome.FINISHED:
+            np.testing.assert_array_equal(
+                outputs[rid], want[rid],
+                err_msg=f"request {rid}: stream != oracle after "
+                        f"prefill_kill")
+    assert len(outputs) == len(reqs), "prefill_kill lost requests"
 
 
 def test_snapshot_corruption_rejected_and_survived(tmp_path):

@@ -40,9 +40,12 @@ def _prompts(vocab: int, n: int, length: int):
         jax.random.PRNGKey(7 + length), (n, length), 0, vocab))
 
 
-def _oracle(params, cfg, reqs):
+def _oracle(params, cfg, reqs, block=None):
     """One-shot greedy streams per request (grouped by prompt length —
-    the lockstep loop needs a rectangular prompt batch)."""
+    the lockstep loop needs a rectangular prompt batch).  ``block`` is
+    the prefill block size; pass the engine's ``effective_chunk`` when
+    it differs from the default so both sides run the same blockwise
+    partition (different partitions are numerically inequivalent)."""
     out = {}
     by_len = {}
     for r in reqs:
@@ -52,7 +55,7 @@ def _oracle(params, cfg, reqs):
         gen = max(r.max_new_tokens for r in group)
         toks = np.asarray(greedy_generate(params, cfg,
                                           jax.numpy.asarray(prompts),
-                                          gen)[0])
+                                          gen, block=block)[0])
         for i, r in enumerate(group):
             out[r.rid] = truncate_at_eos(toks[i][:r.max_new_tokens],
                                          r.eos_id)
@@ -83,19 +86,23 @@ def test_engine_matches_one_shot_staggered(layout, k):
     reqs = [Request(rid=r, prompt=(p16[r // 2] if r % 2 == 0
                                    else p8[r // 4]),
                     max_new_tokens=gens[r]) for r in range(6)]
-    want = _oracle(params, cfg, reqs)
+    # token_budget 12 < prompt 16: the engine prefills in blocks of 12
+    # ({12, 4} for the long prompts, {8} for the short) — the oracle
+    # must run the same partition
+    want = _oracle(params, cfg, reqs, block=12)
 
     eng = Engine(params, cfg, n_slots=2, page_size=8, max_seq=24,
                  token_budget=12)
+    assert eng.effective_chunk == 12
     # Staggered admission / eviction never retraces: jit-cache growth is
     # bounded by the number of distinct *shapes* (decode: 1 config;
-    # prefill/commit: the 2 prompt lengths; sample: 1), never by
-    # admission or completion events.
+    # prefill chunks: the 3 distinct block widths 12/4/8; sample: 1),
+    # never by admission or completion events.
     from repro.analysis import RecompileAuditor
     auditor = RecompileAuditor(eng.trace_counts)
     with auditor.frozen("staggered admission/completion",
-                        budget={"decode": 1, "prefill": 2, "sample": 1,
-                                "commit": 2}):
+                        budget={"decode": 1, "prefill_chunk": 3,
+                                "sample": 1}):
         outs = eng.run(reqs)
     _assert_streams_equal(outs, want)
     s = eng.stats.summary()
@@ -142,6 +149,97 @@ def test_engine_matches_one_shot_mla_rglru_windowed(arch):
     want = _oracle(params, cfg, reqs)
     eng = Engine(params, cfg, n_slots=2, page_size=8, max_seq=24)
     _assert_streams_equal(eng.run(reqs), want)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise prefill: prompt_len >> prefill_chunk
+# ---------------------------------------------------------------------------
+
+_LONG_GEO = dict(page_size=8, max_seq=64, prefill_chunk=8, token_budget=10)
+
+
+def _long_reqs(cfg, n=3, length=40):
+    prompts = _prompts(cfg.vocab, n, length)
+    return [Request(rid=r, prompt=prompts[r],
+                    max_new_tokens=[6, 3, 5][r % 3]) for r in range(n)]
+
+
+@pytest.mark.parametrize("layout,k,kv_bits", [
+    ("dense", 16, 0), ("packed", 2, 0), ("packed", 16, 0),
+    ("dense", 16, 4), ("packed", 16, 4)])
+def test_blockwise_prefill_long_prompt(layout, k, kv_bits):
+    """prompt_len (40) >> prefill_chunk (8): prefill streams through the
+    prompt in 5 real block forwards per request — recurrent/window
+    carries cross block boundaries, each block's K/V lands in the slot's
+    pages (quantized when kv_bits > 0) — and the final streams still
+    equal the oracle.  Plus the stats identities the old commit-style
+    prefill lied about."""
+    cfg, params = _mixed(k, layout)
+    reqs = _long_reqs(cfg)
+    kvq = dict(kv_bits=kv_bits, kv_cb_mode="page") if kv_bits else {}
+    eng = Engine(params, cfg, n_slots=2, **_LONG_GEO, **kvq)
+    assert eng.effective_chunk == 8
+    outs = eng.run(list(reqs))
+    if kv_bits == 0:
+        want = _oracle(params, cfg, reqs, block=8)
+        _assert_streams_equal(outs, want)
+    else:
+        # quantized KV has no dense oracle; the contract (PR 8) is slot
+        # -layout invariance: a different slot count means different
+        # pages, admission order and preemption pattern — same streams
+        outs2 = Engine(params, cfg, n_slots=3, **_LONG_GEO,
+                       **kvq).run(list(reqs))
+        _assert_streams_equal(outs, outs2)
+    st = eng.stats
+    assert st.prefill_tokens == 3 * 40          # computed, not charged
+    assert st.prefill_calls == 3 * 5            # ceil(40/8) blocks each
+    assert st.prefill_samples == 3
+    assert st.generated_tokens == st.decode_tokens + st.prefill_samples
+    assert st.generated_tokens == sum(len(v) for v in outs.values())
+
+
+@pytest.mark.parametrize("kv_bits", [0, 4])
+def test_blockwise_prefill_long_prompt_mla(kv_bits):
+    """Same long-prompt regime on the MLA stack (absorbed-latent paged
+    decode + latent-page blockwise prefill)."""
+    from repro.configs import get_config, reduce_config
+    from repro.models.transformer import init_params
+    cfg = reduce_config(get_config("deepseek-v2-lite-16b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _long_reqs(cfg)
+    kvq = dict(kv_bits=kv_bits, kv_cb_mode="page") if kv_bits else {}
+    eng = Engine(params, cfg, n_slots=2, **_LONG_GEO, **kvq)
+    outs = eng.run(list(reqs))
+    if kv_bits == 0:
+        _assert_streams_equal(outs, _oracle(params, cfg, reqs, block=8))
+    else:
+        outs2 = Engine(params, cfg, n_slots=3, **_LONG_GEO,
+                       **kvq).run(list(reqs))
+        _assert_streams_equal(outs, outs2)
+    assert eng.stats.prefill_calls == 3 * 5
+
+
+def test_prefill_budget_bounds_compute():
+    """THE tentpole claim, asserted on the actual device-call trace: no
+    engine step runs a forward over more than ``effective_chunk`` prompt
+    tokens — the old engine charged budget per chunk but then ran ONE
+    full-prompt forward at commit, so its widest call was prompt_len."""
+    cfg, params = _mixed(16, "dense")
+    reqs = _long_reqs(cfg)
+    eng = Engine(params, cfg, n_slots=2, **_LONG_GEO)
+    widths = []
+    orig = eng._chunk
+
+    def spy(p, c, caches, table, tok, slot, start):
+        widths.append(int(tok.shape[1]))
+        return orig(p, c, caches, table, tok, slot, start)
+
+    eng._chunk = spy
+    outs = eng.run(list(reqs))
+    assert widths, "prefill never ran"
+    assert max(widths) <= eng.effective_chunk == 8
+    assert sum(widths) == 3 * 40               # every prompt token once
+    _assert_streams_equal(outs, _oracle(params, cfg, reqs, block=8))
 
 
 # ---------------------------------------------------------------------------
@@ -239,6 +337,38 @@ def test_bf16_model_infers_bf16_pool_and_matches_oracle():
     _assert_streams_equal(eng.run(reqs), want)
 
 
+def test_top_k_ties_keep_exactly_k():
+    """Tie-heavy top-k: exactly k candidates survive the cutoff, ties
+    breaking toward the lower token id.  The old ``logits >= cutoff``
+    mask kept *every* token tied with the k-th — on flat logits top_k=3
+    silently became full-vocab sampling."""
+    import jax.numpy as jnp
+    from repro.engine import sampling
+
+    v = 16
+    flat = jnp.zeros((v,), jnp.float32)        # all 16 logits tied
+    for k in (1, 3, 7):
+        seen = {int(sampling._sample_one(
+            flat, jnp.float32(1.0), jnp.int32(k), sampling.slot_key(s, 0)))
+            for s in range(100)}
+        assert seen <= set(range(k)), (k, sorted(seen))
+        if k > 1:
+            assert len(seen) > 1               # still samples within top-k
+    # partial tie exactly at the cutoff: k=3 over [5, 5, 3, 3, 3, ...]
+    # keeps ids {0, 1} and exactly ONE of the tied 3s — id 2
+    lg = jnp.asarray([5.0, 5.0, 3.0, 3.0, 3.0, 1.0, 0.0, -1.0])
+    seen = {int(sampling._sample_one(
+        lg, jnp.float32(0.7), jnp.int32(3), sampling.slot_key(s, 1)))
+        for s in range(200)}
+    assert seen <= {0, 1, 2}, sorted(seen)
+    # batch wrapper agrees (same mask per row)
+    toks = sampling.sample_tokens(
+        jnp.stack([lg, lg]), jnp.asarray([0.7, 0.7], jnp.float32),
+        jnp.asarray([3, 3], jnp.int32),
+        jnp.stack([sampling.slot_key(0, 0), sampling.slot_key(0, 0)]))
+    assert int(toks[0]) == int(toks[1]) and int(toks[0]) in (0, 1, 2)
+
+
 def test_greedy_requests_ignore_seed():
     cfg, params = _mixed(16, "packed")
     p16 = _prompts(cfg.vocab, 2, 16)
@@ -277,6 +407,33 @@ def test_page_pool_alloc_free_accounting():
                      max_pages_per_slot=3)
     assert not pool2.alloc(0, 4)
     assert pool2.free_pages == 3
+
+
+def test_page_pool_seized_pages_not_counted_used():
+    """Chaos-seized pages are *withheld*, not owned: they must not
+    inflate ``used_pages``/``utilization()`` (the old accounting counted
+    a pressure spike as KV residency, so a pool with zero live slots
+    could report 100% utilization)."""
+    pool = PagePool(n_pages=6, page_size=8, n_slots=2,
+                    max_pages_per_slot=3)
+    assert pool.alloc(0, 2)
+    taken = pool.seize(3)
+    assert taken == 3
+    assert pool.used_pages == 2                 # live slots only
+    assert pool.seized == 3
+    assert pool.free_pages == 1
+    assert pool.utilization() == pytest.approx(2 / 6)
+    # allocator still treats seized pages as unavailable
+    assert not pool.alloc(1, 2)
+    pool.release()
+    assert pool.seized == 0 and pool.free_pages == 4
+    assert pool.used_pages == 2
+    # seize everything with no live slots: utilization stays 0, not 1
+    pool2 = PagePool(n_pages=4, page_size=8, n_slots=1,
+                     max_pages_per_slot=4)
+    assert pool2.seize(4) == 4
+    assert pool2.used_pages == 0
+    assert pool2.utilization() == 0.0
 
 
 def test_slot_scheduler_admit_evict_tracking():
